@@ -1,0 +1,69 @@
+"""Fig 12/13 — core scaling and SLO-bounded configuration choice.
+
+Thesis: throughput scales linearly 12→72 cores for large jobs; small jobs
+waste cores (startup dominates); under a 2-minute SLO the 72-core config
+reaches ~50% of peak throughput and tighter SLOs prefer fewer cores.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, measured_task_cost
+from repro.core import scheduler as sch
+from repro.core import subsample as ss
+from repro.core.slo import choose_cores
+from repro.core.tiny_task import make_tasks
+from repro.data.synthetic import EagletSpec, eaglet_dataset
+
+SAMPLE_BYTES = 2048 * 4
+
+
+def _throughput(n_cores: int, n_samples: int, per_sample: float,
+                startup: float) -> float:
+    sizes = [SAMPLE_BYTES] * n_samples
+    tasks = make_tasks(sizes, "kneepoint", 8 * SAMPLE_BYTES, n_cores)
+    workers = [sch.SimWorker(i) for i in range(n_cores)]
+    params = sch.SimParams(
+        exec_time=lambda t: len(t.sample_ids) * per_sample,
+        fetch_time=lambda t: 1e-4 * len(t.sample_ids),
+        launch_overhead=5e-4, startup_time=startup)
+    out = sch.simulate_job(tasks, workers, params)
+    return n_samples * SAMPLE_BYTES / out.makespan
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    samples, months = eaglet_dataset(EagletSpec(n_families=32,
+                                                mean_markers=2048,
+                                                heavy_tail=False))
+    per_sample = measured_task_cost(samples, months, ss.EAGLET)
+    startup = 0.2
+
+    tp12 = None
+    for cores in (12, 24, 36, 72):
+        # large job (thesis Fig 12's linear region): work ≫ startup
+        tp = _throughput(cores, 65536, per_sample, startup)
+        if cores == 12:
+            tp12 = tp
+        rows.append((f"elastic.{cores}cores.bytes_per_s", tp,
+                     f"scaling_vs_12={tp / tp12 / (cores / 12):.2f}"))
+    # small job: startup dominates — extra cores give nothing (flat region)
+    tp_small = {c: _throughput(c, 512, per_sample, startup)
+                for c in (12, 72)}
+    rows.append(("elastic.small_job.72c_vs_12c", 0.0,
+                 f"gain={tp_small[72] / tp_small[12]:.2f}x_(≈1 ⇒ wasted)"))
+
+    # Fig 13: SLO-bounded best config.  Startup is thesis-scale (the
+    # 72-core cluster took ≈52 s to start a job, Fig 5): tight bounds
+    # leave big clusters too little usable time.
+    for slo in (30.0, 120.0, 300.0):
+        decision = choose_cores(
+            (12, 24, 36, 72),
+            throughput=lambda c: _throughput(c, 4096, per_sample, startup),
+            startup=lambda c: 2.0 + 0.36 * c,
+            slo_seconds=slo)
+        rows.append((f"elastic.slo_{int(slo)}s.chosen_cores",
+                     float(decision.cores),
+                     f"data={decision.data_within_slo / 2**20:.1f}MiB"))
+    return rows

@@ -1,0 +1,58 @@
+"""Fig 14/15 — heterogeneity and virtualization.
+
+Thesis: one slow node (12 of 60 cores 15% slower) causes proportional
+slowdown on MB-scale jobs but is erased on large jobs (round-robin skips
+busy cores; tiny tasks enable stealing); Netflix scales linearly on the
+virtualized Type-3 nodes.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, measured_task_cost
+from repro.core import scheduler as sch
+from repro.core import subsample as ss
+from repro.core.tiny_task import make_tasks
+from repro.data.synthetic import NetflixSpec, netflix_dataset
+
+SAMPLE_BYTES = 2048 * 4
+
+
+def _makespan(workers, n_samples, per_sample) -> float:
+    sizes = [SAMPLE_BYTES] * n_samples
+    tasks = make_tasks(sizes, "kneepoint", 8 * SAMPLE_BYTES, len(workers))
+    params = sch.SimParams(
+        exec_time=lambda t: len(t.sample_ids) * per_sample,
+        fetch_time=lambda t: 1e-4, launch_overhead=5e-4,
+        startup_time=0.05)
+    return sch.simulate_job(tasks, workers, params).makespan
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    samples, months = netflix_dataset(NetflixSpec(n_movies=32,
+                                                  mean_ratings=2048))
+    per_sample = measured_task_cost(samples, months, ss.NETFLIX_HIGH)
+
+    uniform = [sch.SimWorker(i) for i in range(20)]
+    hetero = [sch.SimWorker(i, speed=0.85 if i < 4 else 1.0)
+              for i in range(20)]
+    # small job ≈ one task per worker (straggler-bound, proportional
+    # slowdown); large job lets round-robin + stealing erase it
+    for n, tag in ((160, "small_job"), (4096, "large_job")):
+        t_u = _makespan(uniform, n, per_sample)
+        t_h = _makespan(hetero, n, per_sample)
+        rows.append((f"hetero.{tag}.slowdown", 0.0,
+                     f"{t_h / t_u:.3f}x_(1.0=erased;cap_loss=3%)"))
+
+    tp12 = None
+    for cores in (12, 24, 48):
+        workers = [sch.SimWorker(i, speed=0.84) for i in range(cores)]
+        t = _makespan(workers, 4096, per_sample)
+        tp = 4096 * SAMPLE_BYTES / t
+        if cores == 12:
+            tp12 = tp
+        rows.append((f"hetero.virt_{cores}cores.bytes_per_s", tp,
+                     f"scaling_vs_12={tp / tp12 / (cores / 12):.2f}"))
+    return rows

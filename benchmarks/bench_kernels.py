@@ -1,0 +1,51 @@
+"""Pallas-kernel microbenchmarks (interpret-mode wall time is NOT TPU
+performance — recorded for regression tracking; the jnp oracle timing is
+the meaningful CPU number)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.kernels import ops, ref
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    k0 = jax.random.PRNGKey(0)
+
+    q = jax.random.normal(k0, (2, 256, 64), jnp.float32)
+    out = jax.jit(ref.flash_attention_ref, static_argnames="causal")
+    sec = timeit(lambda: jax.block_until_ready(out(q, q, q, causal=True)))
+    rows.append(("kernels.flash_ref_jnp.2x256x64", sec * 1e6, "cpu_jnp"))
+    sec = timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, q, q, causal=True, block_q=64, block_k=64)))
+    rows.append(("kernels.flash_pallas_interp.2x256x64", sec * 1e6,
+                 "interpret_mode"))
+
+    r = jax.random.normal(k0, (1, 2, 128, 32), jnp.float32)
+    lw = -0.5 * jax.random.uniform(k0, (1, 2, 128, 32))
+    u = 0.1 * jax.random.normal(k0, (2, 32))
+    sec = timeit(lambda: jax.block_until_ready(
+        ref.rwkv6_chunked_ref(r, r, r, lw, u)))
+    rows.append(("kernels.rwkv6_ref_jnp.1x2x128x32", sec * 1e6, "cpu_jnp"))
+    sec = timeit(lambda: jax.block_until_ready(
+        ops.rwkv6_chunked(r, r, r, lw, u, chunk=32)))
+    rows.append(("kernels.rwkv6_pallas_interp.1x2x128x32", sec * 1e6,
+                 "interpret_mode"))
+
+    a = jax.random.uniform(k0, (2, 128, 128), minval=0.5, maxval=0.99)
+    b = jax.random.normal(k0, (2, 128, 128))
+    h0 = jnp.zeros((2, 128))
+    sec = timeit(lambda: jax.block_until_ready(ref.linear_scan_ref(a, b, h0)))
+    rows.append(("kernels.rglru_ref_jnp.2x128x128", sec * 1e6, "cpu_jnp"))
+
+    data = jax.random.normal(k0, (256, 128), jnp.float32)
+    idx = jax.random.randint(k0, (128,), 0, 256, jnp.int32)
+    sec = timeit(lambda: jax.block_until_ready(
+        ref.subsample_stats_ref(data, idx)[1]))
+    rows.append(("kernels.subsample_ref_jnp.256x128", sec * 1e6, "cpu_jnp"))
+    return rows

@@ -1,0 +1,38 @@
+"""Fig 16 — impact of adding reduce tasks (network-demand simulation).
+
+Thesis §4.2.4: BashReduce runs reduce as a mapped stage; using the
+calibrated map/shuffle/reduce model from [41], EAGLET (compute-heavy map)
+shows quickly diminishing returns from more reducers while Netflix
+(reduce-heavy) keeps speeding up.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+
+
+def _job_time(map_s: float, shuffle_s: float, reduce_s: float,
+              n_reducers: int) -> float:
+    """Zhang-et-al-style first-order model: map fixed, shuffle grows with
+    fan-in, reduce divides across reducers."""
+    shuffle = shuffle_s * (1.0 + 0.15 * (n_reducers - 1))
+    return map_s + shuffle + reduce_s / n_reducers
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    # calibrated from 1-node runs (thesis method): EAGLET map-dominated,
+    # Netflix with a substantial reduce stage
+    workloads = {
+        "eaglet": dict(map_s=10.0, shuffle_s=0.4, reduce_s=0.8),
+        "netflix": dict(map_s=3.0, shuffle_s=0.5, reduce_s=4.0),
+    }
+    for name, cal in workloads.items():
+        t1 = _job_time(n_reducers=1, **cal)
+        for r in (1, 2, 4, 8, 16):
+            t = _job_time(n_reducers=r, **cal)
+            rows.append((f"reduce_sim.{name}.{r}reducers", t * 1e6,
+                         f"speedup={t1 / t:.3f}"))
+    return rows

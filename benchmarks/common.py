@@ -1,0 +1,44 @@
+"""Shared benchmark utilities.
+
+Scaling note (DESIGN.md §2): this container has one physical core, so
+benchmarks that sweep worker counts use the discrete-event simulator with
+*measured* per-task costs (the scheduler logic under test is the real one);
+single-worker and overhead benches are real wall time.  Dataset sizes are
+container-scaled versions of the thesis' workloads.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable[[], object], repeats: int = 3,
+           warmup: int = 1) -> float:
+    """Median wall-clock seconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def measured_task_cost(samples: Dict[int, np.ndarray],
+                       months: Dict[int, np.ndarray], workload,
+                       block: int = 8) -> float:
+    """Median seconds per sample for a block-sized map task (calibrates
+    the simulator from real execution)."""
+    from repro.core import tiny_task as tt
+    from repro.core import subsample as ss
+    ids = sorted(samples)[:block]
+    arr = np.stack(tt._pad_to_common([samples[i] for i in ids]))
+    mo = np.stack(tt._pad_to_common([months[i] for i in ids]))
+    sec = timeit(lambda: ss.run_map_task_np(arr, mo, 0, workload))
+    return sec / block

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per thesis table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure map:
+  Fig 2      bench_kneepoint        task-size→cost curve + knees
+  Fig 4/8/9  bench_task_sizing      BTS vs BLT vs BTT speedups
+  Fig 5/6    bench_platform_overhead  startup + per-task overhead
+  Fig 10/11  bench_jobsize          BTS vs Hadoop-like across job sizes
+  Fig 12/13  bench_elasticity       core scaling + SLO-bounded choice
+  Fig 14/15  bench_hetero           heterogeneity + virtualization
+  Fig 16     bench_reduce_sim       reduce-stage model
+  (kernels)  bench_kernels          Pallas/oracle microbenchmarks
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_elasticity, bench_hetero, bench_jobsize,
+                            bench_kernels, bench_kneepoint,
+                            bench_platform_overhead, bench_reduce_sim,
+                            bench_task_sizing)
+    modules = [
+        ("kneepoint", bench_kneepoint),
+        ("task_sizing", bench_task_sizing),
+        ("platform_overhead", bench_platform_overhead),
+        ("jobsize", bench_jobsize),
+        ("elasticity", bench_elasticity),
+        ("hetero", bench_hetero),
+        ("reduce_sim", bench_reduce_sim),
+        ("kernels", bench_kernels),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        for row_name, us, derived in mod.run():
+            print(f"{row_name},{us:.3f},{derived}")
+        print(f"_meta.{name}.bench_seconds,"
+              f"{(time.perf_counter() - t0) * 1e6:.0f},wall")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""The thesis' two workloads end to end: EAGLET (genetic linkage, heavy-
+tailed family sizes with outliers) and Netflix (high/low confidence), with
+job-level recovery demonstrated by injecting a worker failure.
+
+Run:  PYTHONPATH=src python examples/subsampling_stats.py
+"""
+
+import numpy as np
+
+from repro.core import subsample as ss
+from repro.core.recovery import JobRunner, decide_policy
+from repro.core.tiny_task import run_subsampling_job
+from repro.data.synthetic import (EagletSpec, NetflixSpec, eaglet_dataset,
+                                  netflix_dataset)
+
+
+def eaglet_job():
+    samples, months = eaglet_dataset(EagletSpec(n_families=48,
+                                                mean_markers=2048))
+    rep = run_subsampling_job(samples, months, ss.EAGLET, platform="BTS",
+                              n_workers=2, knee_bytes=8 * 2048 * 4)
+    curve = rep.result["alod"]
+    locus = int(np.argmax(curve))
+    print(f"EAGLET: {rep.n_tasks} tiny tasks, {rep.makespan:.2f}s, "
+          f"{rep.throughput_bps / 2**20:.1f} MiB/s")
+    print(f"  ALOD peak at grid cell {locus}/{len(curve)} "
+          f"(simulated disease locus at ~60%): "
+          f"score {curve[locus]:.3f}")
+    return rep
+
+
+def netflix_confidence():
+    samples, months = netflix_dataset(NetflixSpec(n_movies=32,
+                                                  mean_ratings=2048))
+    ids = sorted(samples)
+    n = min(len(samples[i]) for i in ids)
+    block = np.stack([samples[i][:n] for i in ids])
+    mo = np.stack([months[i][:n] for i in ids])
+    exact = ss.exhaustive_monthly_mean(block, mo, 120)
+    for wl in (ss.NETFLIX_HIGH, ss.NETFLIX_LOW):
+        est = ss.run_map_task_np(block, mo, 0, wl)
+        mean = est["sum"] / np.maximum(est["count"], 1)
+        valid = est["count"] > 10
+        err = float(np.mean(np.abs(mean[valid] - exact[valid])))
+        ratings = wl.draws * wl.draw_size
+        print(f"Netflix {wl.name:13s}: {ratings:6d} ratings/movie "
+              f"subsampled, mean abs err {err:.3f} stars")
+
+
+def failure_recovery():
+    print("\njob-level recovery (thesis §3.3):")
+    policy = decide_policy(n_nodes=100, slo_seconds=600,
+                           mttf_seconds=4.3 * 30 * 24 * 3600, cost_tl=0.20)
+    print(f"  cost model for N=100, SLO=10min, mttf=4.3mo → "
+          f"policy: {policy}-level")
+    attempts = []
+
+    def flaky_job():
+        attempts.append(1)
+        if len(attempts) == 1:
+            raise RuntimeError("injected node failure")
+        return eaglet_job()
+
+    outcome = JobRunner(max_restarts=2).run(flaky_job)
+    print(f"  job completed after {outcome.attempts} attempts "
+          f"({outcome.wasted_seconds:.2f}s wasted by the failure)")
+
+
+if __name__ == "__main__":
+    eaglet_job()
+    print()
+    netflix_confidence()
+    failure_recovery()

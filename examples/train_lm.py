@@ -1,0 +1,76 @@
+"""End-to-end training driver: a ~100M-parameter dense LM trained for a
+few hundred steps on CPU, using every layer of the framework — the
+subsampling input pipeline (kneepoint-sized prefetch), microbatch tiny
+tasks, sharded AdamW, job-level checkpointing, and resume-after-restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.config import ModelConfig, RunConfig, ShapeConfig, TrainConfig
+from repro.config.base import MeshConfig
+from repro.data import PipelineConfig, SubsamplingBatchPipeline, lm_token_corpus
+from repro.data.pipeline import tune_microbatch_tokens
+from repro.models import build_model
+from repro.train import train
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+
+def make_100m_config() -> ModelConfig:
+    return ModelConfig(
+        name="demo-100m", family="dense",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=32768,
+        rope_theta=10_000.0,
+        microbatch_tokens_per_device=tune_microbatch_tokens(
+            seq_len=256, d_model=512, num_layers=8),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_100m_config()
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {n_params / 1e6:.0f}M params "
+          f"(microbatch kneepoint: {cfg.microbatch_tokens_per_device} "
+          f"tokens/device)")
+
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("train", "train", args.seq, args.batch),
+        mesh=MeshConfig((1, 1), ("data", "model")),
+        train=TrainConfig(learning_rate=3e-4, warmup_steps=20,
+                          total_steps=args.steps))
+
+    corpus = lm_token_corpus(1 << 20, cfg.vocab_size)
+    pipe = SubsamplingBatchPipeline(
+        corpus, PipelineConfig(batch_size=args.batch, seq_len=args.seq))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    report = train(model, run, pipe.batches(None), num_steps=args.steps,
+                   checkpoint_manager=mgr, checkpoint_every=100,
+                   log_every=20)
+    first = report.losses[0] if report.losses else float("nan")
+    print(f"\ntrained {report.steps} steps in {report.seconds:.1f}s "
+          f"({args.batch * args.seq * len(report.losses) / report.seconds:.0f}"
+          f" tok/s)")
+    print(f"loss: {first:.3f} → {report.final_loss:.3f}")
+    print(f"checkpoints: {mgr.all_steps()} in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""One module per assigned architecture (+ the paper's own workload).
+
+Use :func:`repro.config.get_config` to resolve ``--arch`` ids.
+"""

@@ -1,0 +1,42 @@
+"""The paper's primary contribution: tiny-task sizing (kneepoint), the
+two-phase dynamic scheduler, the adaptive-replication data plane, prefetch
+with dynamic look-ahead, job-level recovery, and the subsampling statistics
+engine."""
+
+from repro.core.kneepoint import (  # noqa: F401
+    CurvePoint,
+    KneepointResult,
+    amat_curve,
+    find_kneepoint,
+    measure_curve,
+    pack_tasks,
+    timed_task,
+)
+from repro.core.scheduler import (  # noqa: F401
+    JobFailure,
+    SchedulerConfig,
+    SimOutcome,
+    SimParams,
+    SimWorker,
+    Task,
+    TaskResult,
+    ThreadedRunner,
+    TwoPhaseScheduler,
+    simulate_job,
+)
+from repro.core.datastore import (  # noqa: F401
+    DataNode,
+    ReplicatedDataStore,
+    ReplicationPolicy,
+)
+from repro.core.prefetch import PrefetchPipeline  # noqa: F401
+from repro.core.recovery import (  # noqa: F401
+    JobRunner,
+    decide_policy,
+    expected_failures,
+    min_cluster_for_task_level,
+    recovery_overhead_budget,
+)
+from repro.core import subsample  # noqa: F401
+from repro.core import tiny_task  # noqa: F401
+from repro.core import slo  # noqa: F401

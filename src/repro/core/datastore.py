@@ -1,0 +1,146 @@
+"""Replicated in-memory data plane with adaptive replication (thesis §3.5).
+
+The thesis builds its scalable file system on Cassandra: a few *data nodes*
+hold full replicas; worker nodes fetch sample blocks from them.  A data
+modelling engine collects per-node fetch times plus task execution times
+from the scheduler's feedback loop, estimates the *cache interference*
+between task execution and data fetch cycles, and varies the replication
+factor to meet the tiny-task SLO.
+
+Hardware adaptation (DESIGN.md §2): data nodes here are in-process shard
+holders behind an abstract transport, so per-node latency can be injected
+(benchmarks) or real (examples).  The adaptive-replication control law is
+the paper's: response-time feedback against the SLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataNode:
+    node_id: int
+    store: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    # injected latency model: seconds per fetch of n bytes
+    latency: Callable[[int], float] = lambda nbytes: 0.0
+    inflight: int = 0
+
+    def fetch(self, sample_id: int) -> Tuple[np.ndarray, float]:
+        t0 = time.perf_counter()
+        data = self.store[sample_id]
+        lat = self.latency(data.nbytes)
+        # queueing interference: concurrent fetches contend on the node
+        lat *= (1.0 + 0.5 * max(0, self.inflight - 1))
+        if lat:
+            time.sleep(min(lat, 0.05))       # bounded real sleep
+        return data, (time.perf_counter() - t0) + lat
+
+
+@dataclasses.dataclass
+class ReplicationPolicy:
+    fetch_slo: float = 5e-3            # target p95 fetch seconds
+    min_replicas: int = 1
+    max_replicas: int = 8
+    window: int = 64                   # observations per control decision
+    shrink_margin: float = 0.4         # shrink if p95 < margin·SLO
+
+
+class ReplicatedDataStore:
+    """Full replication across a *small, adaptive* set of data nodes.
+
+    ``put_all`` replicates every sample onto the current replica set (the
+    paper's initial full replication across a few chosen nodes).  ``fetch``
+    picks the least-loaded replica; response times feed the controller,
+    which grows the replica set when p95 fetch time violates the SLO
+    (interference detected) and shrinks it when comfortably under.
+    """
+
+    def __init__(self, n_initial: int = 2,
+                 policy: ReplicationPolicy = ReplicationPolicy(),
+                 latency: Optional[Callable[[int], float]] = None):
+        self.policy = policy
+        self._latency = latency or (lambda nbytes: 0.0)
+        self.nodes: List[DataNode] = [
+            DataNode(i, latency=self._latency)
+            for i in range(max(n_initial, policy.min_replicas))]
+        self._samples: Dict[int, np.ndarray] = {}
+        self._obs: List[float] = []
+        self._lock = threading.Lock()
+        self.resize_events: List[Tuple[int, int]] = []   # (n_obs, replicas)
+        self._exec_ema: Optional[float] = None
+
+    # -- data placement ------------------------------------------------------
+    def put_all(self, samples: Dict[int, np.ndarray]) -> None:
+        self._samples.update(samples)
+        for node in self.nodes:
+            node.store.update(samples)
+
+    @property
+    def replication_factor(self) -> int:
+        return len(self.nodes)
+
+    # -- fetch path ----------------------------------------------------------
+    def fetch(self, sample_id: int) -> np.ndarray:
+        with self._lock:
+            node = min(self.nodes, key=lambda n: n.inflight)
+            node.inflight += 1
+        try:
+            data, took = node.fetch(sample_id)
+        finally:
+            with self._lock:
+                node.inflight -= 1
+        self._observe(took)
+        return data
+
+    def fetch_many(self, sample_ids: Sequence[int]) -> List[np.ndarray]:
+        return [self.fetch(s) for s in sample_ids]
+
+    # -- feedback from the scheduler ------------------------------------------
+    def report_exec_time(self, exec_time: float) -> None:
+        """Task execution times from the scheduler's feedback loop — used to
+        estimate interference between execution and fetch cycles."""
+        a = 0.3
+        self._exec_ema = (exec_time if self._exec_ema is None
+                          else (1 - a) * self._exec_ema + a * exec_time)
+
+    def interference_estimate(self) -> float:
+        """Fraction of the task SLO budget eaten by fetches: fetch_p95 /
+        max(exec, ε).  > 1 ⇒ fetches dominate execution (the cache
+        interference regime of §3.5)."""
+        if not self._obs:
+            return 0.0
+        p95 = float(np.percentile(self._obs[-self.policy.window:], 95))
+        return p95 / max(self._exec_ema or self.policy.fetch_slo, 1e-9)
+
+    # -- adaptive replication ----------------------------------------------
+    def _observe(self, took: float) -> None:
+        with self._lock:
+            self._obs.append(took)
+            if len(self._obs) % self.policy.window:
+                return
+            p95 = float(np.percentile(self._obs[-self.policy.window:], 95))
+            if (p95 > self.policy.fetch_slo
+                    and len(self.nodes) < self.policy.max_replicas):
+                node = DataNode(len(self.nodes), latency=self._latency)
+                node.store.update(self._samples)
+                self.nodes.append(node)
+                self.resize_events.append((len(self._obs), len(self.nodes)))
+            elif (p95 < self.policy.shrink_margin * self.policy.fetch_slo
+                    and len(self.nodes) > self.policy.min_replicas):
+                self.nodes.pop()
+                self.resize_events.append((len(self._obs), len(self.nodes)))
+
+    def stats(self) -> Dict[str, float]:
+        obs = np.asarray(self._obs[-self.policy.window:] or [0.0])
+        return {
+            "replicas": float(len(self.nodes)),
+            "fetch_p50": float(np.percentile(obs, 50)),
+            "fetch_p95": float(np.percentile(obs, 95)),
+            "interference": self.interference_estimate(),
+        }

@@ -1,0 +1,87 @@
+"""Prefetch pipeline with dynamic look-ahead (thesis §1.1.4, §3.5).
+
+While a task executes, data for the next ``k`` queued tasks is fetched in
+the background; ``k`` is decided dynamically from the ratio of average
+fetch time to average execution time (exactly the scheduler's
+``queue_depth`` rule).  This is also the host-side input pipeline for LM
+training: kneepoint-sized microbatch shards are prefetched ahead of the
+device step (double/triple buffering).
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Callable, Iterator, Optional
+
+
+class PrefetchPipeline:
+    """Wrap a producer iterator with a background prefetch thread whose
+    buffer depth adapts to measured fetch/consume times."""
+
+    def __init__(self, producer: Iterator[Any], *,
+                 min_depth: int = 2, max_depth: int = 64):
+        self._producer = producer
+        self._min_depth = min_depth
+        self._max_depth = max_depth
+        self._buf: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._done = False
+        self._fetch_ema: Optional[float] = None
+        self._consume_ema: Optional[float] = None
+        self._last_take: Optional[float] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def depth(self) -> int:
+        """k = ceil(fetch/exec) + 1, clamped (the paper's dynamic k)."""
+        if not self._consume_ema or not self._fetch_ema:
+            return self._min_depth
+        k = int(self._fetch_ema / max(self._consume_ema, 1e-9)) + 1
+        return max(self._min_depth, min(self._max_depth, k))
+
+    def _run(self) -> None:
+        try:
+            for item in self._producer:
+                t0 = time.perf_counter()
+                with self._cv:
+                    while len(self._buf) >= self.depth() and not self._done:
+                        self._cv.wait(timeout=0.05)
+                    if self._done:
+                        return
+                    self._buf.append(item)
+                    self._cv.notify_all()
+                took = time.perf_counter() - t0
+                a = 0.3
+                self._fetch_ema = (took if self._fetch_ema is None
+                                   else (1 - a) * self._fetch_ema + a * took)
+        finally:
+            with self._cv:
+                self._done = True
+                self._cv.notify_all()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        now = time.perf_counter()
+        if self._last_take is not None:
+            gap = now - self._last_take
+            a = 0.3
+            self._consume_ema = (gap if self._consume_ema is None
+                                 else (1 - a) * self._consume_ema + a * gap)
+        with self._cv:
+            while not self._buf and not self._done:
+                self._cv.wait(timeout=0.05)
+            if self._buf:
+                item = self._buf.popleft()
+                self._cv.notify_all()
+                self._last_take = time.perf_counter()
+                return item
+        raise StopIteration
+
+    def close(self) -> None:
+        with self._cv:
+            self._done = True
+            self._cv.notify_all()

@@ -1,0 +1,446 @@
+"""Two-phase dynamic scheduler for tiny tasks (thesis §1.1.2, §3.4, Fig 7).
+
+Phase 1 (probe): exactly one task is assigned to each worker; their
+fetch/execution times seed the feedback loop.
+
+Phase 2 (batched queues): the feedback loop assigns *batches* of tasks to
+per-worker queues so a worker never waits between millisecond tasks; the
+queue look-ahead ``k`` is set dynamically from the measured ratio of data
+fetch time to task execution time (the prefetch window of §3.5).  Straggler
+mitigation: round-robin refill that skips busy/slow workers, power-of-two
+shortest-queue choice, and work stealing from the deepest queue when a
+worker idles (thesis §4.2.4).
+
+Fault model (thesis §3.3): job-level recovery — a worker failure aborts and
+restarts the *whole job* (`JobFailure`), which the driver retries; optional
+task-level mode re-queues the failed task but charges every task the
+monitoring overhead ``cost_tl``.
+
+Two drivers share this policy object:
+  * :func:`simulate_job` — single-threaded discrete-event simulation with
+    virtual time (used for scale-out/elasticity/heterogeneity benchmarks:
+    this container has one physical core, so >1-worker wall-clock
+    parallelism must be simulated; per-task durations are *measured* on the
+    real workload first).
+  * :class:`ThreadedRunner` — real threads + queues, real wall time (used
+    for overhead microbenchmarks and the runnable examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import queue as queue_mod
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Task:
+    task_id: int
+    sample_ids: Tuple[int, ...]
+    size_bytes: float
+    payload: Any = None
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task_id: int
+    worker_id: int
+    start: float
+    fetch_time: float
+    exec_time: float
+    value: Any = None
+
+
+class JobFailure(RuntimeError):
+    """Raised when a worker dies under job-level recovery; the driver
+    restarts the entire job (thesis §3.3)."""
+
+    def __init__(self, msg: str, failed_worker: Optional[int] = None):
+        super().__init__(msg)
+        self.failed_worker = failed_worker
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    initial_batch: int = 1            # phase-1 probe tasks per worker
+    min_queue_depth: int = 2
+    max_queue_depth: int = 64
+    power_of_two: bool = True         # two-choice shortest-queue refill
+    work_stealing: bool = True
+    recovery: str = "job"             # "job" | "task"
+    cost_tl: float = 0.20             # task-level monitoring slowdown (Fig 6)
+    # speculative execution (the Hadoop feature the thesis disables for
+    # tiny tasks — provided as an option so the trade-off is measurable):
+    # when the backlog is empty, idle workers re-run in-flight tasks that
+    # have exceeded speculative_factor × the average execution time
+    speculative: bool = False
+    speculative_factor: float = 2.0
+    seed: int = 0
+
+
+class TwoPhaseScheduler:
+    """Pure scheduling policy — no clock, no threads.  Drivers call
+    :meth:`on_worker_idle` / :meth:`on_task_complete` and execute whatever
+    assignments come back."""
+
+    def __init__(self, n_workers: int, tasks: Sequence[Task],
+                 cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.n_workers = n_workers
+        self.backlog: deque[Task] = deque(tasks)
+        self.queues: List[deque[Task]] = [deque() for _ in range(n_workers)]
+        self.inflight: Dict[int, Task] = {}
+        self.inflight_by_worker: Dict[int, Task] = {}
+        self._started_at: Dict[int, float] = {}
+        self._speculated: set = set()
+        self._completed: set = set()
+        self.speculative_launches = 0
+        self.results: List[TaskResult] = []
+        self.avg_exec = None
+        self.avg_fetch = None
+        self._rng = np.random.default_rng(cfg.seed)
+        self._phase2 = False
+        self._alive = [True] * n_workers
+
+    # -- feedback loop -------------------------------------------------------
+    def _observe(self, result: TaskResult) -> None:
+        a = 0.3
+        self.avg_exec = (result.exec_time if self.avg_exec is None
+                         else (1 - a) * self.avg_exec + a * result.exec_time)
+        self.avg_fetch = (result.fetch_time if self.avg_fetch is None
+                          else (1 - a) * self.avg_fetch + a * result.fetch_time)
+
+    def queue_depth(self) -> int:
+        """Dynamic look-ahead k: enough queued work to cover data fetch
+        latency (k ≈ fetch/exec + 1), clamped (thesis §3.5)."""
+        if not self.avg_exec:
+            return self.cfg.min_queue_depth
+        k = int(np.ceil((self.avg_fetch or 0.0) / max(self.avg_exec, 1e-9))) + 1
+        return int(np.clip(k, self.cfg.min_queue_depth,
+                           self.cfg.max_queue_depth))
+
+    # -- assignment ----------------------------------------------------------
+    def initial_assignments(self) -> List[Tuple[int, Task]]:
+        """Phase 1: one probe task per worker (random order)."""
+        order = self._rng.permutation(self.n_workers)
+        out = []
+        for w in order:
+            for _ in range(self.cfg.initial_batch):
+                if self.backlog:
+                    t = self.backlog.popleft()
+                    self.queues[w].append(t)
+                    out.append((int(w), t))
+        return out
+
+    def _pick_worker_for_refill(self, preferred: int) -> int:
+        if not self.cfg.power_of_two:
+            return preferred
+        other = int(self._rng.integers(self.n_workers))
+        if not self._alive[other]:
+            return preferred
+        return (other if len(self.queues[other]) < len(self.queues[preferred])
+                else preferred)
+
+    def on_task_start(self, worker: int, task: Task,
+                      now: Optional[float] = None) -> None:
+        self.inflight[task.task_id] = task
+        self.inflight_by_worker[worker] = task
+        self._started_at[task.task_id] = (time.perf_counter()
+                                          if now is None else now)
+
+    def on_task_complete(self, result: TaskResult) -> List[Tuple[int, Task]]:
+        """Record a result; return new (worker, task) queue assignments.
+        A speculative duplicate's second completion is ignored."""
+        self.inflight_by_worker.pop(result.worker_id, None)
+        if result.task_id in self._completed:
+            return []
+        self._completed.add(result.task_id)
+        self.inflight.pop(result.task_id, None)
+        self._started_at.pop(result.task_id, None)
+        self.results.append(result)
+        self._observe(result)
+        self._phase2 = True
+        w = result.worker_id
+        out: List[Tuple[int, Task]] = []
+        depth = self.queue_depth()
+        # batched refill: top this worker's queue up to k (two-choice may
+        # divert some of the batch to a shorter queue)
+        while self.backlog and len(self.queues[w]) < depth:
+            target = self._pick_worker_for_refill(w)
+            t = self.backlog.popleft()
+            self.queues[target].append(t)
+            out.append((target, t))
+        return out
+
+    def on_worker_idle(self, worker: int,
+                       now: Optional[float] = None) -> Optional[Task]:
+        """Next task for an idle worker: its own queue, then the backlog,
+        then stealing from the deepest queue, then (optionally) a
+        speculative re-execution of the longest-running straggler."""
+        if not self._alive[worker]:
+            return None
+        q = self.queues[worker]
+        if q:
+            return q.popleft()
+        if self.backlog:
+            return self.backlog.popleft()
+        if self.cfg.work_stealing:
+            victim = max(range(self.n_workers),
+                         key=lambda i: len(self.queues[i]))
+            if len(self.queues[victim]) > 1:
+                return self.queues[victim].pop()   # steal from the tail
+        if self.cfg.speculative and self.avg_exec and self._started_at:
+            t_now = time.perf_counter() if now is None else now
+            threshold = self.cfg.speculative_factor * self.avg_exec
+            candidates = [(t_now - started, tid) for tid, started
+                          in self._started_at.items()
+                          if tid not in self._speculated
+                          and self.inflight_by_worker.get(worker, None)
+                          is not self.inflight.get(tid)]
+            candidates = [(age, tid) for age, tid in candidates
+                          if age > threshold]
+            if candidates:
+                _, tid = max(candidates)
+                self._speculated.add(tid)
+                self.speculative_launches += 1
+                return self.inflight[tid]
+        return None
+
+    def on_worker_failure(self, worker: int) -> List[Task]:
+        """Job-level: raise (driver restarts whole job).  Task-level:
+        reclaim the dead worker's queued+inflight tasks for re-execution."""
+        self._alive[worker] = False
+        if self.cfg.recovery == "job":
+            raise JobFailure(f"worker {worker} failed; job-level restart",
+                             failed_worker=worker)
+        reclaimed = list(self.queues[worker])
+        self.queues[worker].clear()
+        own = self.inflight_by_worker.pop(worker, None)
+        if own is not None:
+            self.inflight.pop(own.task_id, None)
+            reclaimed.append(own)
+        self.backlog.extend(reclaimed)
+        return reclaimed
+
+    def done(self) -> bool:
+        return (not self.backlog and not self.inflight
+                and all(not q for q in self.queues))
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event simulation driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimWorker:
+    worker_id: int
+    speed: float = 1.0                 # <1 ⇒ slower (heterogeneity, Fig 14)
+    fail_at: Optional[float] = None    # inject a failure at this sim time
+
+
+@dataclasses.dataclass
+class SimParams:
+    """Per-task cost model, calibrated from real measured runs."""
+    exec_time: Callable[[Task], float]       # seconds on a speed-1.0 worker
+    fetch_time: Callable[[Task], float]      # data-fetch latency
+    launch_overhead: float = 0.0             # per-task start cost (Fig 5/6)
+    startup_time: float = 0.0                # one-time job startup
+
+
+@dataclasses.dataclass
+class SimOutcome:
+    makespan: float
+    results: List[TaskResult]
+    per_worker_busy: Dict[int, float]
+    restarts: int = 0
+
+
+def simulate_job(
+    tasks: Sequence[Task],
+    workers: Sequence[SimWorker],
+    params: SimParams,
+    cfg: SchedulerConfig = SchedulerConfig(),
+    *,
+    max_restarts: int = 3,
+) -> SimOutcome:
+    """Run the two-phase scheduler under virtual time.  Prefetch overlap:
+    a task's data fetch for queued work proceeds while the previous task
+    executes, so effective per-task cost is max(exec, fetch) once the
+    queue is warm (exactly the paper's pipeline in §3.5)."""
+    restarts = 0
+    alive = list(workers)
+    while True:
+        try:
+            return _simulate_once(tasks, alive, params, cfg, restarts)
+        except JobFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            # the dead node does not rejoin; the job restarts on survivors
+            survivors = [w for w in alive
+                         if w.worker_id != e.failed_worker]
+            if survivors:
+                alive = survivors
+
+
+def _simulate_once(tasks, workers, params, cfg, restarts) -> SimOutcome:
+    """Worker identity inside the scheduler is positional (0..n-1); the
+    SimWorker.worker_id is only used for reporting (survivor restarts
+    renumber positions but keep ids)."""
+    sched = TwoPhaseScheduler(len(workers), tasks, cfg)
+    now = params.startup_time
+    busy: Dict[int, float] = {w.worker_id: 0.0 for w in workers}
+    # event heap: (time, seq, kind, worker_index, task)
+    seq = itertools.count()
+    heap: List[Tuple[float, int, str, int, Optional[Task]]] = []
+    cost_mult = 1.0 + (cfg.cost_tl if cfg.recovery == "task" else 0.0)
+
+    def task_cost(w: SimWorker, t: Task, queue_warm: bool) -> Tuple[float, float, float]:
+        fetch = params.fetch_time(t)
+        ex = (params.exec_time(t) / w.speed + params.launch_overhead) * cost_mult
+        # warm queue ⇒ fetch overlapped with previous execution
+        total = max(ex, fetch) if queue_warm else ex + fetch
+        return total, fetch, ex
+
+    for i, w in enumerate(workers):
+        if w.fail_at is not None:
+            heapq.heappush(heap, (w.fail_at, next(seq), "fail", i, None))
+
+    for widx, task in sched.initial_assignments():
+        t = sched.on_worker_idle(widx, now)
+        if t is None:
+            continue
+        sched.on_task_start(widx, t, now)
+        total, fetch, ex = task_cost(workers[widx], t, queue_warm=False)
+        heapq.heappush(heap, (now + total, next(seq), "done", widx, t))
+        busy[workers[widx].worker_id] += total
+
+    makespan = now
+    has_event = [True] * len(workers)
+
+    def dispatch(widx: int, at: float):
+        nxt = sched.on_worker_idle(widx, at)
+        if nxt is not None:
+            sched.on_task_start(widx, nxt, at)
+            total, _, _ = task_cost(workers[widx], nxt, queue_warm=True)
+            heapq.heappush(heap, (at + total, next(seq), "done", widx, nxt))
+            busy[workers[widx].worker_id] += total
+            has_event[widx] = True
+        elif cfg.speculative and not sched.done() and sched.avg_exec:
+            # re-poll later: a straggler may become speculation-eligible
+            heapq.heappush(heap, (at + sched.avg_exec, next(seq), "poll",
+                                  widx, None))
+            has_event[widx] = True
+
+    while heap:
+        now, _, kind, widx, task = heapq.heappop(heap)
+        if kind == "fail":
+            if sched.done():
+                continue
+            try:
+                sched.on_worker_failure(widx)   # raises under job-level
+            except JobFailure:
+                # translate positional index to the stable worker id so the
+                # restart loop can exclude the dead node
+                raise JobFailure(
+                    f"worker {workers[widx].worker_id} failed; "
+                    "job-level restart",
+                    failed_worker=workers[widx].worker_id) from None
+            has_event[widx] = False
+            # reclaimed tasks: wake any idle living workers
+            for i in range(len(workers)):
+                if sched._alive[i] and not has_event[i]:
+                    dispatch(i, now)
+            continue
+        has_event[widx] = False
+        if kind == "poll":
+            if not sched.done():
+                dispatch(widx, now)
+            continue
+        if not sched._alive[widx]:
+            continue                        # completion from a dead worker
+        total_prev, fetch, ex = task_cost(workers[widx], task,
+                                          queue_warm=True)
+        res = TaskResult(task.task_id, widx, now - total_prev, fetch, ex)
+        # a straggler superseded by its speculative copy doesn't extend
+        # the job (its late completion is discarded)
+        is_dup = task.task_id in sched._completed
+        sched.on_task_complete(res)
+        if not is_dup:
+            makespan = max(makespan, now)
+        dispatch(widx, now)
+    return SimOutcome(makespan=makespan, results=sched.results,
+                      per_worker_busy=busy, restarts=restarts)
+
+
+# ---------------------------------------------------------------------------
+# Threaded driver (real wall time)
+# ---------------------------------------------------------------------------
+
+
+class ThreadedRunner:
+    """Executes tasks with real threads; one queue per worker.  The worker
+    callable receives (task) and returns a value; fetch is performed by the
+    optional datastore before execution (overlapped via the queue)."""
+
+    def __init__(self, n_workers: int,
+                 run_task: Callable[[Task], Any],
+                 fetch: Optional[Callable[[Task], Any]] = None,
+                 cfg: SchedulerConfig = SchedulerConfig()):
+        self.n_workers = n_workers
+        self.run_task = run_task
+        self.fetch = fetch
+        self.cfg = cfg
+
+    def run_job(self, tasks: Sequence[Task]) -> List[TaskResult]:
+        sched = TwoPhaseScheduler(self.n_workers, tasks, self.cfg)
+        lock = threading.Lock()
+        results: List[TaskResult] = []
+        errors: List[BaseException] = []
+
+        def worker_loop(wid: int):
+            while True:
+                with lock:
+                    t = sched.on_worker_idle(wid)
+                    if t is not None:
+                        sched.on_task_start(wid, t)
+                if t is None:
+                    with lock:
+                        if sched.done():
+                            return
+                    time.sleep(1e-4)
+                    continue
+                try:
+                    t0 = time.perf_counter()
+                    if self.fetch is not None:
+                        self.fetch(t)
+                    t1 = time.perf_counter()
+                    value = self.run_task(t)
+                    t2 = time.perf_counter()
+                except BaseException as e:     # noqa: BLE001
+                    with lock:
+                        errors.append(e)
+                    return
+                res = TaskResult(t.task_id, wid, t0, t1 - t0, t2 - t1, value)
+                with lock:
+                    results.append(res)
+                    sched.on_task_complete(res)
+
+        sched.initial_assignments()
+        threads = [threading.Thread(target=worker_loop, args=(w,))
+                   for w in range(self.n_workers)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+        return results

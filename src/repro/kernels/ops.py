@@ -1,0 +1,49 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On TPU these run compiled (``interpret=False``); this container is CPU so
+the default is interpret mode, which executes the kernel bodies in Python
+for correctness validation.  The model code calls these through
+``use_pallas``-gated paths; the jnp implementations in ``repro.models``
+remain the lowering path for the CPU dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import subsample_gather as _sg
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=not ON_TPU):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked(r, k, v, logw, u, *, chunk=64, interpret=not ON_TPU):
+    return _rw.rwkv6_chunked(r, k, v, logw, u, chunk=chunk,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "width_block",
+                                             "interpret"))
+def rglru_scan(a, b, h0, *, chunk=128, width_block=256,
+               interpret=not ON_TPU):
+    return _rg.rglru_scan(a, b, h0, chunk=chunk, width_block=width_block,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def subsample_gather(data, indices, *, interpret=not ON_TPU):
+    return _sg.subsample_gather(data, indices, interpret=interpret)

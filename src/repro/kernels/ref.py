@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q/k/v [BH, S, HD] → [BH, Sq, HD]; plain masked softmax attention."""
+    _, sq, hd = q.shape
+    _, skv, _ = k.shape
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bid,bjd->bij", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bij,bjd->bid", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_chunked_ref(r, k, v, logw, u) -> jax.Array:
+    """Sequential (per-token) RWKV6 recurrence; r/k/v/logw [B,H,S,hd],
+    u [H,hd] → out [B,H,S,hd] fp32."""
+    b, h, s, hd = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                       # [B,H,hd] each
+        kv = kt[..., :, None] * vt[..., None, :]   # [B,H,hdk,hdv]
+        out = jnp.einsum("bhd,bhde->bhe", rt,
+                         state + uf[None, :, :, None] * kv)
+        new_state = wt[..., None] * state + kv
+        return new_state, out
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (rf, kf, vf, w))
+    init = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, outs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(outs, 0, 2)
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t−1} + b_t via associative scan; a/b [B,S,W], h0 [B,W]."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+    a_cum, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h + a_cum * h0.astype(jnp.float32)[:, None, :]
+
+
+def subsample_stats_ref(data: jax.Array, indices: jax.Array):
+    """(gathered [T,D], stats [2,D]) oracle for the subsample kernel."""
+    rows = jnp.take(data, indices, axis=0)
+    rf = rows.astype(jnp.float32)
+    stats = jnp.stack([jnp.sum(rf, axis=0), jnp.sum(rf * rf, axis=0)])
+    return rows, stats

@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (including
+# ``from repro...``) — jax locks the device count on first initialization.
+# Only this entry point sees 512 placeholder devices; tests/benches see 1.
+
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import json                # noqa: E402
+import subprocess          # noqa: E402
+import sys                 # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.config import (  # noqa: E402
+    ARCH_IDS,
+    SHAPES,
+    MULTI_POD_MESH,
+    SINGLE_POD_MESH,
+    MeshConfig,
+    RunConfig,
+    TrainConfig,
+    get_config,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.parallel.sharding import (  # noqa: E402
+    hint_mesh,
+    TRAIN_RULES,
+    named_sharding,
+    serve_rules,
+    tree_shape_structs,
+    tree_shardings,
+)
+from repro.roofline import analysis as ra  # noqa: E402
+from repro.roofline import hw  # noqa: E402
+from repro.roofline import traffic as rt  # noqa: E402
+from repro.train.loop import TrainState, make_train_step  # noqa: E402
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "paper-subsample"]
+
+# Per-arch training-memory policy (DESIGN.md §5): moment/grad precision is
+# the distributed-optimization knob that fits the big models in 16 GB/chip.
+TRAIN_OVERRIDES = {
+    "arctic-480b": dict(moment_dtype="int8", grad_accum_dtype="bfloat16"),
+    "qwen2-72b": dict(moment_dtype="bfloat16"),
+    "deepseek-67b": dict(moment_dtype="bfloat16"),
+}
+
+
+def train_config_for(arch: str) -> TrainConfig:
+    return TrainConfig(**TRAIN_OVERRIDES.get(arch, {}))
+
+
+def mesh_config(name: str) -> MeshConfig:
+    return MULTI_POD_MESH if name == "multi" else SINGLE_POD_MESH
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(cfg, shape, mesh, mesh_cfg, *, n_mb=None, donate=True):
+    """Build the jitted step for one cell and .lower() it (no allocation).
+
+    Returns (lowered, meta) where meta carries unit counts for roofline
+    extrapolation.
+    """
+    model = build_model(cfg)
+    tcfg = train_config_for(cfg.name)
+    run = RunConfig(model=cfg, shape=shape, mesh=mesh_cfg, train=tcfg)
+    defs = model.param_defs()
+    rules = TRAIN_RULES if shape.kind == "train" else serve_rules(cfg)
+    p_structs = tree_shape_structs(defs, model.dtype)
+    p_shard = tree_shardings(defs, mesh, rules)
+    inputs = model.input_specs(shape)
+    in_structs = {k: v.struct for k, v in inputs.items()}
+    in_shard = {k: named_sharding(v.logical, mesh, rules, v.struct.shape)
+                for k, v in inputs.items()}
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        n_mb_eff = run.microbatches() if n_mb is None else n_mb
+        step = make_train_step(model, run, n_mb=n_mb_eff)
+        opt_structs = adamw.init_structs(p_structs, tcfg)
+        opt_shard = adamw.state_shardings(p_shard, p_structs, tcfg, mesh,
+                                          ("data", "model"))
+        state_structs = TrainState(p_structs, opt_structs, None,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        state_shard = TrainState(p_shard, opt_shard, None, repl)
+        metrics_shard = {k: repl for k in
+                         ("ce", "aux", "loss", "lr", "grad_norm", "clip")}
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_shard, in_shard),
+            out_shardings=(state_shard, metrics_shard),
+            donate_argnums=(0,) if donate else ())
+        with mesh, hint_mesh(mesh):
+            lowered = jitted.lower(state_structs, in_structs)
+        return lowered, {"n_mb": n_mb_eff}
+
+    if shape.kind == "prefill":
+        cache_defs = model.cache_defs(shape.global_batch, shape.seq_len,
+                                      mode="prefill")
+        cache_shard = tree_shardings(cache_defs, mesh, rules)
+        logits_shard = named_sharding(
+            ("batch", "vocab"), mesh, rules,
+            (shape.global_batch, cfg.vocab_size))
+        jitted = jax.jit(
+            model.prefill,
+            in_shardings=(p_shard, in_shard),
+            out_shardings=(logits_shard, cache_shard))
+        with mesh, hint_mesh(mesh):
+            lowered = jitted.lower(p_structs, in_structs)
+        return lowered, {}
+
+    # decode: one token against a seq_len cache
+    cache_defs = model.cache_defs(shape.global_batch, shape.seq_len,
+                                  mode="decode")
+    cache_structs = tree_shape_structs(cache_defs, model.dtype)
+    cache_shard = tree_shardings(cache_defs, mesh, rules)
+    logits_shard = named_sharding(
+        ("batch", "vocab"), mesh, rules,
+        (shape.global_batch, cfg.vocab_size))
+    tok_struct = in_structs["tokens"]
+    tok_shard = in_shard["tokens"]
+    pos_struct = in_structs["pos"]
+
+    def decode_step(params, tokens, caches, pos):
+        return model.decode_step(params, tokens, caches, pos)
+
+    jitted = jax.jit(
+        decode_step,
+        in_shardings=(p_shard, tok_shard, cache_shard, repl),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(2,) if donate else ())
+    with mesh, hint_mesh(mesh):
+        lowered = jitted.lower(p_structs, tok_struct, cache_structs,
+                               pos_struct)
+    return lowered, {}
+
+
+def _calibration_cfgs(cfg):
+    pat = len(cfg.layer_pattern)
+    prefix = cfg.first_dense_layers
+    small = dataclasses.replace(cfg, num_layers=prefix + pat,
+                                scan_layers=False, unroll_scans=True)
+    big = dataclasses.replace(cfg, num_layers=prefix + 2 * pat,
+                              scan_layers=False, unroll_scans=True)
+    n_units = (cfg.num_layers - prefix) / pat
+    return small, big, n_units
+
+
+def _opt_correction(cfg, tcfg, chips) -> ra.CellCost:
+    """Analytic per-device optimizer-step cost, subtracted for the extra
+    (n_mb − 1) repetitions the extrapolation would otherwise charge."""
+    n = cfg.param_count()
+    moment_rw = {"float32": 16.0, "bfloat16": 8.0, "int8": 4.0}
+    grad_read = {"float32": 4.0, "bfloat16": 2.0}
+    bytes_per_param = (4.0                       # param read+write (bf16)
+                      + grad_read[tcfg.grad_accum_dtype]
+                      + moment_rw[tcfg.moment_dtype])
+    return ra.CellCost(flops=12.0 * n / chips,
+                       bytes_accessed=bytes_per_param * n / chips,
+                       coll_bytes=0.0, coll_ops=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Cell execution
+# ---------------------------------------------------------------------------
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false", "True", "False"):
+        return k, v.lower() == "true"
+    return k, v
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             calibrate: bool = True, mcfg_overrides=(), tcfg_overrides=()
+             ) -> dict:
+    cfg = get_config(arch)
+    if mcfg_overrides:
+        cfg = dataclasses.replace(
+            cfg, **dict(_parse_override(o) for o in mcfg_overrides))
+    if tcfg_overrides:
+        TRAIN_OVERRIDES[arch] = dict(
+            TRAIN_OVERRIDES.get(arch, {}),
+            **dict(_parse_override(o) for o in tcfg_overrides))
+    shape = SHAPES[shape_name]
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    if shape_name == "long_500k" and not cfg.is_sub_quadratic():
+        result.update(status="skipped",
+                      reason="full-attention arch: 500k dense decode is "
+                             "quadratic; run only for SSM/hybrid "
+                             "(DESIGN.md §6)")
+        return result
+
+    mesh_cfg = mesh_config(mesh_name)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh_cfg.num_devices
+
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh, mesh_cfg)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    mem["peak_bytes"] = (mem["argument_bytes"] + mem["temp_bytes"]
+                         + mem["output_bytes"] - mem["alias_bytes"])
+    raw_cost = ra.cost_from_compiled(compiled)
+    result.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        n_mb=meta.get("n_mb", 1),
+        memory=mem,
+        fits_hbm=bool(mem["peak_bytes"] <= hw.HBM_BYTES),
+        validation_cost={"flops": raw_cost.flops,
+                         "bytes": raw_cost.bytes_accessed,
+                         "coll_bytes": raw_cost.coll_bytes,
+                         "coll_ops": raw_cost.coll_ops},
+    )
+    print(f"[{arch} {shape_name} {mesh_name}] compiled in {t2 - t1:.1f}s; "
+          f"memory_analysis: args={mem['argument_bytes']/2**30:.2f}GiB "
+          f"temp={mem['temp_bytes']/2**30:.2f}GiB "
+          f"peak={mem['peak_bytes']/2**30:.2f}GiB "
+          f"fits_16GiB={result['fits_hbm']}")
+    print(f"  cost_analysis(per-device): flops={raw_cost.flops:.3e} "
+          f"bytes={raw_cost.bytes_accessed:.3e} "
+          f"collectives={raw_cost.coll_bytes:.3e}B/{int(raw_cost.coll_ops)}ops")
+
+    if calibrate and mesh_name == "single":
+        small, big, n_units = _calibration_cfgs(cfg)
+        n_mb = meta.get("n_mb", 1)
+        if shape.kind == "train":
+            mb_shape = dataclasses.replace(
+                shape, global_batch=max(mesh_cfg.dp_size,
+                                        shape.global_batch // n_mb))
+        else:
+            mb_shape = shape
+        costs = {}
+        for name, c in (("1u", small), ("2u", big)):
+            lw, _ = lower_cell(c, mb_shape, mesh, mesh_cfg, n_mb=1,
+                               donate=False)
+            costs[name] = ra.cost_from_compiled(lw.compile())
+        corr = (_opt_correction(cfg, train_config_for(arch), chips)
+                if shape.kind == "train" else None)
+        total = ra.extrapolate(costs["1u"], costs["2u"], n_units,
+                               n_repeat=n_mb, per_repeat_correction=corr)
+        # memory term: analytic TPU traffic model (the XLA-CPU byte count
+        # is reported raw but not used for dominance — DESIGN.md §7)
+        model_bytes = rt.memory_traffic(
+            cfg, shape, mesh_cfg, n_mb=n_mb, tcfg=train_config_for(arch))
+        total_tpu = rt.cost_with_model_memory(total, model_bytes)
+        mf = ra.model_flops_per_step(cfg, shape)
+        terms = ra.roofline(total_tpu, chips=chips, model_flops=mf)
+        result["calibration"] = {
+            "n_units": n_units, "n_mb": n_mb,
+            "cost_1u": dataclasses.asdict(costs["1u"]),
+            "cost_2u": dataclasses.asdict(costs["2u"]),
+            "total": dataclasses.asdict(total),
+        }
+        result["roofline"] = terms.as_dict()
+        result["roofline"]["memory_s_xla_cpu_raw"] = (
+            total.bytes_accessed / hw.HBM_BW)
+        result["roofline"]["model_traffic_bytes"] = model_bytes
+        print(f"  roofline: compute={terms.compute_s:.4f}s "
+              f"memory={terms.memory_s:.4f}s "
+              f"(xla-cpu raw {total.bytes_accessed / hw.HBM_BW:.2f}s) "
+              f"collective={terms.collective_s:.4f}s "
+              f"dominant={terms.dominant} useful={terms.useful_ratio:.2f}")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def cell_list():
+    for arch in LM_ARCHS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="drive the full sweep in per-cell subprocesses")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--mcfg", action="append", default=[],
+                    help="model-config override key=value (perf iteration)")
+    ap.add_argument("--tcfg", action="append", default=[],
+                    help="train-config override key=value")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output file name")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch, shape in cell_list():
+            for mesh in (("single", "multi") if args.mesh == "both"
+                         else (args.mesh,)):
+                out_file = os.path.join(
+                    args.out, f"{arch}_{shape}_{mesh}.json")
+                if os.path.exists(out_file):
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh,
+                       "--out", args.out]
+                if args.no_calibrate:
+                    cmd.append("--no-calibrate")
+                rc = subprocess.run(cmd).returncode
+                if rc != 0:
+                    failures.append((arch, shape, mesh, rc))
+        print("sweep complete; failures:", failures or "none")
+        sys.exit(1 if failures else 0)
+
+    meshes = (("single", "multi") if args.mesh == "both"
+              else (args.mesh,))
+    ok = True
+    for mesh in meshes:
+        try:
+            res = run_cell(args.arch, args.shape, mesh,
+                           calibrate=not args.no_calibrate,
+                           mcfg_overrides=args.mcfg,
+                           tcfg_overrides=args.tcfg)
+            res["overrides"] = {"mcfg": args.mcfg, "tcfg": args.tcfg}
+        except Exception as e:      # noqa: BLE001
+            traceback.print_exc()
+            res = {"arch": args.arch, "shape": args.shape, "mesh": mesh,
+                   "status": "error", "reason": repr(e)}
+            ok = False
+        suffix = f"_{args.tag}" if args.tag else ""
+        out_file = os.path.join(
+            args.out, f"{args.arch}_{args.shape}_{mesh}{suffix}.json")
+        with open(out_file, "w") as f:
+            json.dump(res, f, indent=1)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

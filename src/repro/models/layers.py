@@ -1,0 +1,371 @@
+"""Shared layer primitives for the model zoo.
+
+All functions are pure; parameters are nested dicts of arrays created from
+``ParamDef`` trees (see ``repro.parallel.sharding``).  Activations follow the
+layout conventions:
+
+  tokens      [B, S]              int32
+  hidden      [B, S, D]           cfg.dtype (bf16)
+  q           [B, S, KV, G, HD]   (GQA grouping explicit)
+  k, v        [B, S, KV, HD]
+  KV cache    [B, S_max, KV, HD]  (serve: S_max sharded over ``model``)
+
+Attention is q-chunked (``lax.scan`` over query blocks) whenever the score
+matrix would exceed a VMEM-scale working set — the same kneepoint discipline
+the paper applies to task sizing (tiny tasks over the query axis).  The
+Pallas flash kernel (``repro.kernels.flash_attention``) is the TPU hot-spot
+implementation of the same blocking; the jnp path here is the lowering
+reference and the CPU/dry-run path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.parallel.sharding import (
+    BATCH, EMBED, HEADS, KV_SEQ, REPL, SEQ, VOCAB, ParamDef,
+)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_defs(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), (REPL,), init="ones")}
+
+
+def rms_norm(params, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # [HD/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, ..., HD]; positions [S] or [B, S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # [HD/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]                      # [1, S]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B?,S,HD/2]
+    for _ in range(x.ndim - 3):                             # head dims
+        angles = angles[:, :, None]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (full / sliding-window, train+prefill q-chunked, decode w/ cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    defs = {
+        "wq": ParamDef((d, qd), (EMBED, HEADS)),
+        "wk": ParamDef((d, kvd), (EMBED, HEADS)),
+        "wv": ParamDef((d, kvd), (EMBED, HEADS)),
+        "wo": ParamDef((qd, d), (HEADS, EMBED)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((qd,), (HEADS,), init="zeros")
+        defs["bk"] = ParamDef((kvd,), (HEADS,), init="zeros")
+        defs["bv"] = ParamDef((kvd,), (HEADS,), init="zeros")
+    return defs
+
+
+def _qkv(cfg: ModelConfig, params, x: jax.Array):
+    b, s, _ = x.shape
+    kv, g, hd = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, kv, g, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    return q, k, v
+
+
+def _attend_block(q, k, v, mask, scale):
+    """q [B,Sq,KV,G,HD], k/v [B,Skv,KV,HD], mask [Sq,Skv] or None."""
+    scores = jnp.einsum("bikgd,bjkd->bkgij", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgij,bjkd->bikgd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+    q_chunk: int = 1024,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal (optionally windowed) self-attention for train/prefill.
+
+    Returns (output [B,S,D], cache {k,v}) — cache is the full-sequence K/V,
+    which *is* the prefill KV cache.
+    """
+    b, s, d = x.shape
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k, v = _qkv(cfg, params, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    n_chunks = max(1, s // q_chunk)
+    if s % q_chunk or n_chunks == 1:
+        # single block (small seq) — plain masked attention
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = j <= i
+        if window:
+            mask &= (i - j) < window
+        out = _attend_block(q, k, v, mask, scale)
+    else:
+        # tiny-task q-chunking: scan over query blocks, keyed to the same
+        # kneepoint (working-set) discipline as the paper's task sizing.
+        qc = q.reshape(b, n_chunks, q_chunk, *q.shape[2:])
+        qc = jnp.moveaxis(qc, 1, 0)                     # [N,B,C,KV,G,HD]
+
+        def chunk_fn(carry, inp):
+            ci, qblk = inp
+            i = ci * q_chunk + jnp.arange(q_chunk)[:, None]
+            j = jnp.arange(s)[None, :]
+            mask = j <= i
+            if window:
+                mask &= (i - j) < window
+            return carry, _attend_block(qblk, k, v, mask, scale)
+
+        if cfg.unroll_scans:
+            outs = jnp.stack([chunk_fn(None, (jnp.asarray(ci), qc[ci]))[1]
+                              for ci in range(n_chunks)])
+        else:
+            _, outs = jax.lax.scan(chunk_fn, None,
+                                   (jnp.arange(n_chunks), qc))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, *outs.shape[3:])
+
+    out = out.reshape(b, s, cfg.q_dim)
+    out = out @ params["wo"]
+    return out, {"k": k, "v": v}
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode.  x [B,1,D]; cache k/v [B,S_max,KV,HD]; pos scalar.
+
+    The cache sequence axis may be sharded over ``model`` (flash-decoding
+    style): the softmax over the sharded axis lowers to two tiny
+    all-reduces ([B,KV,G] max & sum) plus one [B,KV,G,HD] combine.
+    For windowed layers the cache is a rolling buffer of length ``window``
+    written at ``pos % window``.
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    kv, g, hd = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k, v = _qkv(cfg, params, x)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+
+    s_max = cache["k"].shape[1]
+    write_at = pos % window if window else pos
+    quantized = "k_scale" in cache
+    if quantized:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                              (0, write_at, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                              (0, write_at, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                    (0, write_at, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                    (0, write_at, 0, 0)),
+        }
+        ck = dequantize_kv(new_cache["k"], new_cache["k_scale"], k.dtype)
+        cv = dequantize_kv(new_cache["v"], new_cache["v_scale"], v.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write_at, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write_at, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+
+    scores = jnp.einsum("bikgd,bjkd->bkgj", q, ck,
+                        preferred_element_type=jnp.float32) * scale
+    slot = jnp.arange(s_max)
+    if window:
+        valid = (slot <= write_at) | (pos >= window)
+    else:
+        valid = slot <= pos
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", probs.astype(cv.dtype), cv)
+    out = out.reshape(b, 1, cfg.q_dim)
+    out = out @ params["wo"]
+    return out, new_cache
+
+
+def attention_cache_defs(cfg: ModelConfig, batch: int, seq: int,
+                         dtype=None) -> Dict[str, ParamDef]:
+    shape = (batch, seq, cfg.num_kv_heads, cfg.head_dim)
+    logical = (BATCH, KV_SEQ, None, None)
+    if cfg.kv_cache_dtype == "int8":
+        # quantized cache: int8 values + one fp32 absmax scale per
+        # (batch, position, kv-head) — halves/quarters KV HBM, the knob
+        # that fits MHA archs' 32k·128 caches (DESIGN.md §5)
+        sshape = (batch, seq, cfg.num_kv_heads, 1)
+        return {
+            "k": ParamDef(shape, logical, dtype=jnp.int8, init="zeros"),
+            "v": ParamDef(shape, logical, dtype=jnp.int8, init="zeros"),
+            "k_scale": ParamDef(sshape, logical, dtype=jnp.float32,
+                                init="zeros"),
+            "v_scale": ParamDef(sshape, logical, dtype=jnp.float32,
+                                init="zeros"),
+        }
+    return {"k": ParamDef(shape, logical, dtype=dtype, init="zeros"),
+            "v": ParamDef(shape, logical, dtype=dtype, init="zeros")}
+
+
+def quantize_kv(x: jax.Array):
+    """[B,S,KV,HD] → (int8 values, fp32 absmax scale [B,S,KV,1])."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                                keepdims=True), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def maybe_quantize_cache(cfg: ModelConfig, kv: Dict[str, jax.Array]):
+    if cfg.kv_cache_dtype != "int8":
+        return kv
+    k, ks = quantize_kv(kv["k"])
+    v, vs = quantize_kv(kv["v"])
+    return {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(d: int, ff: int) -> Dict[str, ParamDef]:
+    return {
+        "wi": ParamDef((d, ff), (EMBED, HEADS)),
+        "wg": ParamDef((d, ff), (EMBED, HEADS)),
+        "wd": ParamDef((ff, d), (HEADS, EMBED)),
+    }
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    h = (x @ params["wi"]) * jax.nn.silu(x @ params["wg"])
+    return h @ params["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    if cfg.opt_local_vocab and not cfg.tie_embeddings:
+        # beyond-paper layout: embedding d-dim over ``model`` (lookup is
+        # collective-free; one tiny activation all-gather after), head
+        # replicated over data / sharded over vocab only (156 MB/device at
+        # qwen2 scale) — eliminates the per-microbatch f32 table gathers
+        return {
+            "embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                  (REPL, HEADS)),
+            "head": ParamDef((cfg.d_model, cfg.vocab_size),
+                             (REPL, VOCAB)),
+        }
+    defs = {"embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                  (VOCAB, EMBED))}
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                (EMBED, VOCAB))
+    return defs
+
+
+def embed_apply(cfg: ModelConfig, params, tokens: jax.Array,
+                dtype) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0).astype(dtype)
+
+
+def head_apply(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"],
+                            preferred_element_type=jnp.float32)
+    if cfg.logit_soft_cap:
+        c = cfg.logit_soft_cap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  onehot: bool = False) -> jax.Array:
+    """Mean next-token CE.  logits [B,S,V] fp32, labels [B,S] int32.
+
+    ``onehot=True`` extracts the gold logit with a masked reduction instead
+    of ``take_along_axis``: a gather along the model-sharded vocab dim
+    makes GSPMD replicate the batch (multi-GB logit all-gathers); the
+    masked reduce keeps everything shard-local + one tiny all-reduce.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    if onehot:
+        v = logits.shape[-1]
+        hit = (jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+               == labels[..., None])
+        gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,170 @@
+"""Public model bundle: one object per architecture exposing the functions
+that the training loop, serving engine, and dry-run all lower.
+
+``input_specs`` produces allocation-free ``ShapeDtypeStruct`` stand-ins for
+every model input of a given (arch × shape) cell, together with matching
+logical axes so the launcher can derive ``in_shardings``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import (
+    BATCH, SEQ, ParamDef, init_params, is_param_def, tree_shape_structs,
+)
+
+_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+@dataclasses.dataclass(frozen=True)
+class InputSpec:
+    struct: jax.ShapeDtypeStruct
+    logical: Tuple[Optional[str], ...]
+
+
+class Model:
+    """Functional model wrapper (params are explicit pytrees)."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family != "subsample"
+        self.cfg = cfg
+        self.dtype = _DTYPES[cfg.dtype]
+
+    # -- parameters ----------------------------------------------------------
+    def param_defs(self) -> Dict[str, Any]:
+        return T.build_param_defs(self.cfg)
+
+    def param_structs(self, param_dtype=None):
+        return tree_shape_structs(self.param_defs(),
+                                  param_dtype or self.dtype)
+
+    def init(self, rng: jax.Array, param_dtype=None):
+        return init_params(rng, self.param_defs(),
+                           param_dtype or self.dtype)
+
+    def cache_defs(self, batch: int, seq: int, cache_dtype=None,
+                   mode: str = "decode"):
+        return T.build_cache_defs(self.cfg, batch, seq,
+                                  cache_dtype or self.dtype, mode=mode)
+
+    def cache_structs(self, batch: int, seq: int, cache_dtype=None,
+                      mode: str = "decode"):
+        return tree_shape_structs(
+            self.cache_defs(batch, seq, cache_dtype, mode=mode),
+            cache_dtype or self.dtype)
+
+    def init_cache(self, batch: int, seq: int, cache_dtype=None,
+                   mode: str = "decode"):
+        rng = jax.random.PRNGKey(0)
+        return init_params(
+            rng, self.cache_defs(batch, seq, cache_dtype, mode=mode),
+            cache_dtype or self.dtype)
+
+    def prefill_to_decode(self, caches):
+        return T.prefill_to_decode_caches(self.cfg, caches)
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params, batch: Dict[str, jax.Array]):
+        """batch: tokens [B,S_text], labels [B,S_text] (+patch_embeds)."""
+        cfg = self.cfg
+        h = T.embed_inputs(cfg, params, batch, self.dtype)
+        s = h.shape[1]
+        positions = jnp.arange(s)
+        x, _, aux = T.forward(cfg, params, h, positions=positions,
+                              caches=None, mode="train", pos=None)
+        p = cfg.num_patches if cfg.frontend == "patch" else 0
+        if p:
+            x = x[:, p - 1:s - 1]
+        logits = L.head_apply(cfg, params["embed"], x)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = L.cross_entropy(logits, jnp.maximum(labels, 0), mask,
+                             onehot=cfg.opt_onehot_ce)
+        loss = ce + cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- serving -------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array]):
+        """Returns (last-token logits [B,V], caches)."""
+        cfg = self.cfg
+        h = T.embed_inputs(cfg, params, batch, self.dtype)
+        s = h.shape[1]
+        positions = jnp.arange(s)
+        x, caches, _ = T.forward(cfg, params, h, positions=positions,
+                                 caches=None, mode="prefill", pos=None)
+        logits = L.head_apply(cfg, params["embed"], x[:, -1:])[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, tokens: jax.Array, caches,
+                    pos: jax.Array):
+        """tokens [B,1], pos scalar int32 → (logits [B,V], new caches)."""
+        cfg = self.cfg
+        h = L.embed_apply(cfg, params["embed"], tokens, self.dtype)
+        x, new_caches, _ = T.forward(cfg, params, h, positions=None,
+                                     caches=caches, mode="decode", pos=pos)
+        logits = L.head_apply(cfg, params["embed"], x)[:, 0]
+        return logits, new_caches
+
+    # -- dry-run inputs --------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, InputSpec]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        p = cfg.num_patches if cfg.frontend == "patch" else 0
+        specs: Dict[str, InputSpec] = {}
+        i32 = jnp.int32
+
+        def tok(name, bb, ss):
+            specs[name] = InputSpec(
+                jax.ShapeDtypeStruct((bb, ss), i32), (BATCH, SEQ))
+
+        if shape.kind == "train":
+            tok("tokens", b, s - p)
+            tok("labels", b, s - p)
+            if p:
+                specs["patch_embeds"] = InputSpec(
+                    jax.ShapeDtypeStruct((b, p, cfg.frontend_dim),
+                                         self.dtype),
+                    (BATCH, SEQ, None))
+        elif shape.kind == "prefill":
+            tok("tokens", b, s - p)
+            if p:
+                specs["patch_embeds"] = InputSpec(
+                    jax.ShapeDtypeStruct((b, p, cfg.frontend_dim),
+                                         self.dtype),
+                    (BATCH, SEQ, None))
+        else:  # decode: one new token against a seq_len cache
+            tok("tokens", b, 1)
+            specs["pos"] = InputSpec(
+                jax.ShapeDtypeStruct((), i32), ())
+        return specs
+
+    def make_inputs(self, shape: ShapeConfig, rng: jax.Array):
+        """Materialized random inputs matching input_specs (smoke tests)."""
+        out = {}
+        for name, spec in self.input_specs(shape).items():
+            st = spec.struct
+            if st.dtype == jnp.int32:
+                if name == "pos":
+                    out[name] = jnp.asarray(st.shape and 0 or shape.seq_len - 1,
+                                            jnp.int32)
+                else:
+                    rng, k = jax.random.split(rng)
+                    out[name] = jax.random.randint(
+                        k, st.shape, 0, max(2, self.cfg.vocab_size), jnp.int32)
+            else:
+                rng, k = jax.random.split(rng)
+                out[name] = jax.random.normal(k, st.shape, st.dtype)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

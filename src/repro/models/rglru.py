@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block:  x ──► W_x ──► causal depthwise conv(width 4) ──► RG-LRU ──┐
+        x ──► W_y ──► GeLU ────────────────────────────────────── ⊙ ──► W_out
+
+RG-LRU recurrence (per channel):
+
+    r_t = σ(w_a ⊙ u_t + b_a)          recurrence gate
+    i_t = σ(w_x ⊙ u_t + b_x)          input gate
+    log a_t = −c · r_t · softplus(Λ)   (a = σ(Λ)^{c·r_t}, c = 8)
+    h_t = a_t · h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+Simplification vs the published model (recorded in DESIGN.md): the gates use
+*diagonal* weights (per-channel) rather than dense block-diagonal matrices;
+the recurrence structure, data-dependent decay and √(1−a²) input
+normalization are faithful.
+
+Train/prefill evaluate the linear recurrence with
+``jax.lax.associative_scan`` in fp32; the carried state supports chunked
+prefill and O(1) decode (this is why the ``long_500k`` cell is runnable for
+this architecture).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.parallel.sharding import BATCH, EMBED, HEADS, REPL, ParamDef
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def rglru_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, w = cfg.d_model, cfg.lru_dim
+    cw = cfg.conv_width
+    return {
+        "w_x": ParamDef((d, w), (EMBED, HEADS)),
+        "w_y": ParamDef((d, w), (EMBED, HEADS)),
+        "w_out": ParamDef((w, d), (HEADS, EMBED)),
+        "conv_w": ParamDef((cw, w), (None, HEADS)),
+        "conv_b": ParamDef((w,), (HEADS,), init="zeros"),
+        "lam": ParamDef((w,), (HEADS,), init="ones"),       # Λ
+        "gate_a_w": ParamDef((w,), (HEADS,), init="ones"),
+        "gate_a_b": ParamDef((w,), (HEADS,), init="zeros"),
+        "gate_x_w": ParamDef((w,), (HEADS,), init="ones"),
+        "gate_x_b": ParamDef((w,), (HEADS,), init="zeros"),
+    }
+
+
+def rglru_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    w, cw = cfg.lru_dim, cfg.conv_width
+    return {
+        "h": ParamDef((batch, w), (BATCH, HEADS), dtype=jnp.float32,
+                      init="zeros"),
+        "conv": ParamDef((batch, cw - 1, w), (BATCH, None, HEADS),
+                         dtype=jnp.float32, init="zeros"),
+    }
+
+
+def _causal_conv(params, u: jax.Array, conv_state: jax.Array):
+    """Depthwise causal conv, width cw.  u [B,S,W]; conv_state [B,cw-1,W]."""
+    cw = params["conv_w"].shape[0]
+    full = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * params["conv_w"][i].astype(u.dtype)
+              for i in range(cw))
+    out = out + params["conv_b"].astype(u.dtype)
+    new_state = full[:, -(cw - 1):].astype(jnp.float32)
+    return out, new_state
+
+
+def _gates(params, u: jax.Array):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["gate_a_w"] * uf + params["gate_a_b"])
+    i = jax.nn.sigmoid(params["gate_x_w"] * uf + params["gate_x_b"])
+    log_a = -_C * r * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6)) * (i * uf)
+    return a, gated
+
+
+def rglru_apply(
+    cfg: ModelConfig, params, x: jax.Array, state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence block.  x [B,S,D] → ([B,S,D], new state)."""
+    b, s, d = x.shape
+    u = x @ params["w_x"]
+    y = jax.nn.gelu(x @ params["w_y"])
+    u, conv_state = _causal_conv(params, u, state["conv"])
+    a, gated = _gates(params, u)                       # fp32 [B,S,W]
+
+    # h_t = a_t h_{t-1} + gated_t : associative scan + injected initial state
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = h + a_cum * state["h"][:, None, :]
+    out = (h * y.astype(jnp.float32)).astype(x.dtype) @ params["w_out"]
+    new = {"h": h[:, -1, :], "conv": conv_state}
+    return out, new
+
+
+def rglru_decode(
+    cfg: ModelConfig, params, x: jax.Array, state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode.  x [B,1,D]."""
+    u = x @ params["w_x"]
+    y = jax.nn.gelu(x @ params["w_y"])
+    cw = cfg.conv_width
+    full = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+    u1 = sum(full[:, i:i + 1] * params["conv_w"][i].astype(u.dtype)
+             for i in range(cw))
+    u1 = u1 + params["conv_b"].astype(u.dtype)
+    a, gated = _gates(params, u1)                      # [B,1,W]
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    out = (h[:, None, :] * y.astype(jnp.float32)).astype(x.dtype) @ params["w_out"]
+    new = {"h": h, "conv": full[:, 1:].astype(jnp.float32)}
+    return out, new

@@ -1,0 +1,256 @@
+"""RWKV6 (Finch) — attention-free time-mix with data-dependent decay.
+
+Faithful-family implementation (arXiv:2404.05892): per-head matrix-valued
+state ``S ∈ R^{hd_k × hd_v}`` with recurrence
+
+    out_t = r_t · (S_t + u ⊙ k_t v_tᵀ)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ,     w_t = exp(-exp(d_t))
+
+where the decay ``d_t`` is data-dependent through a low-rank (LoRA)
+projection of the token-shifted input.  Simplifications vs the reference
+implementation (documented in DESIGN.md): static token-shift mixing
+coefficients (Finch uses a second LoRA there), single decay LoRA.
+
+Train/prefill run the **chunked** recurrence: the sequence is split into
+``cfg.chunk_len`` blocks (kneepoint-tuned — the tiny-task analogue for the
+recurrence), each block computes intra-chunk attention in closed form and
+carries the state across blocks with ``lax.scan``.  All pairwise decay
+exponents are ≤ 0 by construction (log-space, no unstable divisions).
+
+The Pallas kernel ``repro.kernels.rwkv6_scan`` implements the same chunk
+body with explicit VMEM tiling; this module is the lowering/CPU path and
+the oracle's building block.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.parallel.sharding import BATCH, EMBED, HEADS, REPL, ParamDef
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def time_mix_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    h, hd = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    lora = cfg.rwkv_lora_decay
+    return {
+        # token-shift mixing coefficients for (r, k, v, g, w)
+        "mix": ParamDef((5, d), (None, REPL), init="zeros"),
+        "wr": ParamDef((d, d), (EMBED, HEADS)),
+        "wk": ParamDef((d, d), (EMBED, HEADS)),
+        "wv": ParamDef((d, d), (EMBED, HEADS)),
+        "wg": ParamDef((d, d), (EMBED, HEADS)),
+        "wo": ParamDef((d, d), (HEADS, EMBED)),
+        "decay_bias": ParamDef((d,), (REPL,), init="zeros"),
+        "decay_a": ParamDef((d, lora), (EMBED, None)),
+        "decay_b": ParamDef((lora, d), (None, HEADS)),
+        "bonus_u": ParamDef((h, hd), (HEADS, None), init="zeros"),
+        "ln_x": ParamDef((d,), (REPL,), init="ones"),   # per-head group norm
+    }
+
+
+def channel_mix_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mix": ParamDef((2, d), (None, REPL), init="zeros"),   # (k, r)
+        "wk": ParamDef((d, ff), (EMBED, HEADS)),
+        "wv": ParamDef((ff, d), (HEADS, EMBED)),
+        "wr": ParamDef((d, d), (EMBED, HEADS)),
+    }
+
+
+def state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    h, hd = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    d = cfg.d_model
+    return {
+        "wkv": ParamDef((batch, h, hd, hd), (BATCH, HEADS, None, None),
+                        dtype=jnp.float32, init="zeros"),
+        "shift_tm": ParamDef((batch, d), (BATCH, None),
+                             dtype=jnp.float32, init="zeros"),
+        "shift_cm": ParamDef((batch, d), (BATCH, None),
+                             dtype=jnp.float32, init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """xs[t] = x[t-1], xs[0] = prev.  x [B,S,D], prev [B,D]."""
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _projections(cfg: ModelConfig, params, x, xs):
+    """Returns r,k,v,g [B,S,H,hd] and log-decay logw [B,S,H,hd] (<= 0)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    mix = params["mix"].astype(x.dtype)                    # [5, D]
+    delta = xs - x
+    xr, xk, xv, xg, xw = (x + mix[i] * delta for i in range(5))
+    r = (xr @ params["wr"]).reshape(b, s, h, hd)
+    k = (xk @ params["wk"]).reshape(b, s, h, hd)
+    v = (xv @ params["wv"]).reshape(b, s, h, hd)
+    g = (xg @ params["wg"]).reshape(b, s, h, hd)
+    lora = jnp.tanh(xw @ params["decay_a"]) @ params["decay_b"]
+    dlog = params["decay_bias"].astype(jnp.float32) + lora.astype(jnp.float32)
+    logw = -jnp.exp(dlog).reshape(b, s, h, hd)             # <= 0
+    return r, k, v, g, logw
+
+
+def _group_norm(cfg: ModelConfig, params, x: jax.Array, eps: float):
+    """Per-head RMS norm on [B,S,H,hd]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    b, s, h, hd = x.shape
+    scale = params["ln_x"].reshape(h, hd).astype(jnp.float32)
+    return xf * scale
+
+
+# ---------------------------------------------------------------------------
+# Chunked sequence form (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def chunk_body(r, k, v, logw, u, state):
+    """One chunk of the RWKV6 recurrence (pure jnp; mirrored by the Pallas
+    kernel).  All inputs [B,H,C,hd] except u [H,hd], state [B,H,hd,hd] fp32.
+
+    Returns (out [B,H,C,hd_v] fp32, new_state).
+    """
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    c = r.shape[2]
+    # logP[i] = sum_{m<i} logw[m]  (exclusive cumsum)
+    logP = jnp.cumsum(logw, axis=2) - logw                       # [B,H,C,hd]
+    logP_total = logP[:, :, -1, :] + logw[:, :, -1, :]           # [B,H,hd]
+
+    # inter-chunk: r_i ⊙ exp(logP_i) read the carried state
+    r_dec = rf * jnp.exp(logP)
+    inter = jnp.einsum("bhid,bhde->bhie", r_dec, state)
+
+    # intra-chunk: A_ij = Σ_d r_i[d] k_j[d] exp(logP_i[d] − logP_{j+1}[d]), j<i
+    logPj1 = logP + logw                                          # logP_{j+1}
+    dmat = logP[:, :, :, None, :] - logPj1[:, :, None, :, :]      # [B,H,C,C,hd]
+    idx = jnp.arange(c)
+    lower = idx[:, None] > idx[None, :]                           # strict
+    dmat = jnp.where(lower[None, None, :, :, None], dmat, -jnp.inf)
+    amat = jnp.einsum("bhid,bhjd,bhijd->bhij", rf, kf, jnp.exp(dmat))
+    # diagonal bonus term: r_i · (u ⊙ k_i) v_i
+    diag = jnp.einsum("bhid,hd,bhid->bhi", rf, u.astype(jnp.float32), kf)
+    amat = amat + jnp.eye(c, dtype=amat.dtype)[None, None] * diag[..., None]
+    intra = jnp.einsum("bhij,bhje->bhie", amat, vf)
+
+    # state update: S' = exp(logP_C) ⊙_k S + Σ_j (exp(logP_C−logP_{j+1}) ⊙ k_j) v_jᵀ
+    k_dec = kf * jnp.exp(logP_total[:, :, None, :] - logPj1)
+    new_state = (jnp.exp(logP_total)[..., None] * state
+                 + jnp.einsum("bhjd,bhje->bhde", k_dec, vf))
+    return inter + intra, new_state
+
+
+def time_mix_apply(
+    cfg: ModelConfig, params, x: jax.Array, state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence time mix.  x [B,S,D]; S must be divisible by chunk_len
+    (or small enough to be a single chunk)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    cl = min(cfg.chunk_len, s)
+    xs = _token_shift(x, state["shift_tm"])
+    r, k, v, g, logw = _projections(cfg, params, x, xs)
+    u = params["bonus_u"]
+    # pad to a chunk multiple: k=0 adds nothing to the state, logw=0
+    # (w=1) leaves it undecayed, so padded positions are inert
+    pad = (-s) % cl
+    s_orig = s
+    if pad:
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = padt(r), padt(k), padt(v), padt(logw)
+        s = s + pad
+
+    def to_chunks(t):   # [B,S,H,hd] -> [N,B,H,C,hd]
+        t = t.reshape(b, s // cl, cl, h, hd)
+        return jnp.moveaxis(jnp.moveaxis(t, 1, 0), 3, 2)
+
+    def scan_fn(carry, inp):
+        rc, kc, vc, lwc = inp
+        out, new_state = chunk_body(rc, kc, vc, lwc, u, carry)
+        return new_state, out
+
+    xs = (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw))
+    if cfg.unroll_scans:
+        st = state["wkv"].astype(jnp.float32)
+        outs = []
+        for ci in range(s // cl):
+            st, out = scan_fn(st, tuple(t[ci] for t in xs))
+            outs.append(out)
+        final_state, outs = st, jnp.stack(outs)
+    else:
+        final_state, outs = jax.lax.scan(
+            scan_fn, state["wkv"].astype(jnp.float32), xs)
+    # [N,B,H,C,hd] -> [B,S,H,hd]; drop padded positions
+    out = jnp.moveaxis(jnp.moveaxis(outs, 2, 3), 0, 1).reshape(b, s, h, hd)
+    out = out[:, :s_orig]
+    out = _group_norm(cfg, params, out, cfg.norm_eps)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).reshape(b, s_orig, d)
+    out = out.astype(x.dtype) @ params["wo"]
+    new = {"wkv": final_state,
+           "shift_tm": x[:, -1, :].astype(jnp.float32),
+           "shift_cm": state["shift_cm"]}
+    return out, new
+
+
+def time_mix_decode(
+    cfg: ModelConfig, params, x: jax.Array, state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode.  x [B,1,D]."""
+    b, _, d = x.shape
+    h, hd = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    xs = state["shift_tm"][:, None, :].astype(x.dtype)
+    r, k, v, g, logw = _projections(cfg, params, x, xs)
+    r, k, v, g, logw = (t[:, 0] for t in (r, k, v, g, logw))   # [B,H,hd]
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = params["bonus_u"].astype(jnp.float32)
+    s0 = state["wkv"]
+    kv = kf[..., :, None] * vf[..., None, :]                   # [B,H,hdk,hdv]
+    out = jnp.einsum("bhd,bhde->bhe", rf, s0 + u[None, :, :, None] * kv)
+    new_wkv = jnp.exp(logw)[..., None] * s0 + kv
+    out = _group_norm(cfg, params, out[:, None, :, :], cfg.norm_eps)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))[:, None]).reshape(b, 1, d)
+    out = out.astype(x.dtype) @ params["wo"]
+    new = {"wkv": new_wkv,
+           "shift_tm": x[:, -1, :].astype(jnp.float32),
+           "shift_cm": state["shift_cm"]}
+    return out, new
+
+
+# ---------------------------------------------------------------------------
+# Channel mix
+# ---------------------------------------------------------------------------
+
+
+def channel_mix_apply(cfg: ModelConfig, params, x: jax.Array,
+                      state: Dict[str, jax.Array], decode: bool):
+    prev = state["shift_cm"]
+    if decode:
+        xs = prev[:, None, :].astype(x.dtype)
+    else:
+        xs = _token_shift(x, prev)
+    mix = params["mix"].astype(x.dtype)
+    delta = xs - x
+    xk = x + mix[0] * delta
+    xr = x + mix[1] * delta
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    out = jax.nn.sigmoid(xr @ params["wr"]) * (k @ params["wv"])
+    new = dict(state)
+    new["shift_cm"] = x[:, -1, :].astype(jnp.float32)
+    return out, new

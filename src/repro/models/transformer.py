@@ -1,0 +1,358 @@
+"""Decoder assembly for every architecture family.
+
+Layer stacks are organized as ``prefix`` (unrolled, e.g. DeepSeekMoE's
+leading dense layer) + ``blocks`` (homogeneous pattern units scanned with
+``lax.scan`` — compile time O(1) in depth) + ``tail`` (unrolled pattern
+remainder, e.g. RecurrentGemma's 26 = 8·(R,R,L) + 2·R).
+
+Modes:
+  train    — full sequence, no caches, remat per block, returns hidden
+  prefill  — full sequence, returns per-layer caches (KV / recurrent state)
+  decode   — one token against caches (``pos`` scalar = current length)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ATTN, LOCAL, RGLRU, RWKV, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RW
+from repro.parallel.sharding import EMBED, LAYERS, ParamDef, is_param_def
+
+
+# ---------------------------------------------------------------------------
+# Per-layer definitions
+# ---------------------------------------------------------------------------
+
+
+def _ffn_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    if cfg.family == "moe" and layer_idx >= cfg.first_dense_layers:
+        return "moe"
+    return "dense"
+
+
+def _dense_ff(cfg: ModelConfig, layer_idx: int) -> int:
+    if (cfg.family == "moe" and layer_idx < cfg.first_dense_layers
+            and cfg.first_dense_d_ff):
+        return cfg.first_dense_d_ff
+    return cfg.d_ff
+
+
+def layer_defs(cfg: ModelConfig, layer_idx: int) -> Dict[str, Any]:
+    kind = cfg.layer_kind(layer_idx)
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"ln1": L.rms_norm_defs(d), "ln2": L.rms_norm_defs(d)}
+    if kind in (ATTN, LOCAL):
+        defs["mix"] = L.attention_defs(cfg)
+    elif kind == RGLRU:
+        defs["mix"] = RG.rglru_defs(cfg)
+    elif kind == RWKV:
+        defs["mix"] = RW.time_mix_defs(cfg)
+    if kind == RWKV:
+        defs["ffn"] = RW.channel_mix_defs(cfg)
+    elif _ffn_kind(cfg, layer_idx) == "moe":
+        defs["ffn"] = MOE.moe_defs(cfg)
+        if cfg.moe_dense_residual:
+            defs["dense_res"] = L.mlp_defs(d, cfg.d_ff)
+    else:
+        defs["ffn"] = L.mlp_defs(d, _dense_ff(cfg, layer_idx))
+    return defs
+
+
+def layer_cache_defs(cfg: ModelConfig, layer_idx: int, batch: int,
+                     seq: int, cache_dtype) -> Dict[str, Any]:
+    kind = cfg.layer_kind(layer_idx)
+    if kind == ATTN:
+        return L.attention_cache_defs(cfg, batch, seq, cache_dtype)
+    if kind == LOCAL:
+        w = min(cfg.local_window or seq, seq)
+        return L.attention_cache_defs(cfg, batch, w, cache_dtype)
+    if kind == RGLRU:
+        return RG.rglru_state_defs(cfg, batch)
+    if kind == RWKV:
+        return RW.state_defs(cfg, batch)
+    raise ValueError(kind)
+
+
+def _stack_defs(tree, n: int):
+    return jax.tree.map(
+        lambda p: ParamDef((n,) + p.shape, (LAYERS,) + p.logical,
+                           dtype=p.dtype, init=p.init,
+                           init_scale=p.init_scale),
+        tree, is_leaf=is_param_def)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    """How the depth dimension is organized for scanning."""
+    prefix: Tuple[int, ...]          # unrolled leading layer indices
+    n_blocks: int                    # scanned pattern repetitions
+    pattern: Tuple[str, ...]         # kinds at each position in a block
+    pattern_idx: Tuple[int, ...]     # representative layer index per position
+    tail: Tuple[int, ...]            # unrolled trailing layer indices
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    pat = len(cfg.layer_pattern)
+    prefix_n = cfg.first_dense_layers
+    if not cfg.scan_layers:
+        return StackPlan(tuple(range(cfg.num_layers)), 0, (), (), ())
+    rest = cfg.num_layers - prefix_n
+    n_blocks, rem = divmod(rest, pat)
+    if n_blocks <= 1:   # not worth scanning
+        return StackPlan(tuple(range(cfg.num_layers)), 0, (), (), ())
+    pattern_idx = tuple(prefix_n + p for p in range(pat))
+    pattern = tuple(cfg.layer_kind(i) for i in pattern_idx)
+    tail = tuple(prefix_n + n_blocks * pat + i for i in range(rem))
+    return StackPlan(tuple(range(prefix_n)), n_blocks, pattern,
+                     pattern_idx, tail)
+
+
+def build_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    plan = stack_plan(cfg)
+    defs: Dict[str, Any] = {
+        "embed": L.embed_defs(cfg),
+        "final_norm": L.rms_norm_defs(cfg.d_model),
+    }
+    if cfg.frontend == "patch":
+        defs["frontend"] = {
+            "proj": ParamDef((cfg.frontend_dim, cfg.d_model), (None, EMBED)),
+        }
+    defs["prefix"] = [layer_defs(cfg, i) for i in plan.prefix]
+    defs["blocks"] = [_stack_defs(layer_defs(cfg, i), plan.n_blocks)
+                      for i in plan.pattern_idx]
+    defs["tail"] = [layer_defs(cfg, i) for i in plan.tail]
+    return defs
+
+
+def build_cache_defs(cfg: ModelConfig, batch: int, seq: int,
+                     cache_dtype=None, *, mode: str = "prefill"
+                     ) -> Dict[str, Any]:
+    """Prefill caches mirror the scanned parameter layout (stacked blocks);
+    decode caches are *flat* per-layer trees — decode unrolls the depth so
+    each layer's cache buffer donates/aliases in place (no stacked-cache
+    double buffering, which would double KV HBM)."""
+    plan = stack_plan(cfg)
+    mk = lambda i: layer_cache_defs(cfg, i, batch, seq, cache_dtype)
+    out = {
+        "prefix": [mk(i) for i in plan.prefix],
+        "tail": [mk(i) for i in plan.tail],
+    }
+    if mode == "decode":
+        out["blocks_flat"] = [[mk(i) for i in plan.pattern_idx]
+                              for _ in range(plan.n_blocks)]
+    else:
+        out["blocks"] = [_stack_defs(mk(i), plan.n_blocks)
+                         for i in plan.pattern_idx]
+    return out
+
+
+def prefill_to_decode_caches(cfg: ModelConfig, caches):
+    """Re-home stacked prefill caches into the flat decode layout."""
+    plan = stack_plan(cfg)
+    out = {"prefix": caches["prefix"], "tail": caches["tail"],
+           "blocks_flat": []}
+    for bi in range(plan.n_blocks):
+        out["blocks_flat"].append([
+            jax.tree.map(lambda x: x[bi], caches["blocks"][p])
+            for p in range(len(plan.pattern_idx))])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer application
+# ---------------------------------------------------------------------------
+
+
+def layer_apply(
+    cfg: ModelConfig,
+    kind: str,
+    ffn_kind: str,
+    params,
+    x: jax.Array,
+    *,
+    positions: Optional[jax.Array],
+    cache,
+    mode: str,
+    pos: Optional[jax.Array],
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(params["ln1"], x, eps)
+
+    if kind in (ATTN, LOCAL):
+        window = cfg.local_window if kind == LOCAL else 0
+        if mode == "decode":
+            mix_out, new_cache = L.attention_decode(
+                cfg, params["mix"], h, cache, pos, window=window)
+        else:
+            mix_out, kv = L.attention_apply(
+                cfg, params["mix"], h, positions, window=window)
+            new_cache = None
+            if mode == "prefill":
+                new_cache = kv
+                s = h.shape[1]
+                if window and window < s:
+                    # roll the tail of the sequence into the circular buffer
+                    slots = jnp.arange(s - window, s) % window
+                    new_cache = {
+                        n: jnp.zeros_like(kv[n][:, :window]).at[:, slots]
+                        .set(kv[n][:, -window:]) for n in ("k", "v")}
+                new_cache = L.maybe_quantize_cache(cfg, new_cache)
+    elif kind == RGLRU:
+        fn = RG.rglru_decode if mode == "decode" else RG.rglru_apply
+        state = cache if cache is not None else _zero_state(
+            cfg, kind, x.shape[0])
+        mix_out, new_cache = fn(cfg, params["mix"], h, state)
+    elif kind == RWKV:
+        fn = RW.time_mix_decode if mode == "decode" else RW.time_mix_apply
+        state = cache if cache is not None else _zero_state(
+            cfg, kind, x.shape[0])
+        mix_out, new_cache = fn(cfg, params["mix"], h, state)
+    else:
+        raise ValueError(kind)
+    x = x + mix_out.astype(x.dtype)
+
+    h = L.rms_norm(params["ln2"], x, eps)
+    if kind == RWKV:
+        ffn_out, new_cache = RW.channel_mix_apply(
+            cfg, params["ffn"], h, new_cache, mode == "decode")
+    elif ffn_kind == "moe":
+        ffn_out, aux = MOE.moe_apply(cfg, params["ffn"], h)
+        if cfg.moe_dense_residual:
+            ffn_out = ffn_out + L.mlp_apply(params["dense_res"], h)
+    else:
+        ffn_out = L.mlp_apply(params["ffn"], h)
+    x = x + ffn_out.astype(x.dtype)
+    if mode == "train":
+        new_cache = None
+    return x, new_cache, aux
+
+
+def _zero_state(cfg: ModelConfig, kind: str, batch: int):
+    from repro.parallel.sharding import init_params
+    if kind == RGLRU:
+        defs = RG.rglru_state_defs(cfg, batch)
+    else:
+        defs = RW.state_defs(cfg, batch)
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, p.dtype or jnp.float32),
+        defs, is_leaf=is_param_def)
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    hidden: jax.Array,
+    *,
+    positions: Optional[jax.Array],
+    caches,
+    mode: str,
+    pos: Optional[jax.Array],
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """hidden [B,S,D] → (hidden, new_caches, mean aux loss)."""
+    plan = stack_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    n_aux = max(1, cfg.num_layers)
+    x = hidden
+
+    new_prefix = []
+    for j, i in enumerate(plan.prefix):
+        c = None if caches is None else caches["prefix"][j]
+        x, nc, aux = layer_apply(
+            cfg, cfg.layer_kind(i), _ffn_kind(cfg, i), params["prefix"][j],
+            x, positions=positions, cache=c, mode=mode, pos=pos)
+        new_prefix.append(nc)
+        aux_total = aux_total + aux
+
+    new_blocks = []
+    new_blocks_flat = []
+    if plan.n_blocks:
+        pat_kinds = plan.pattern
+        pat_ffn = tuple(_ffn_kind(cfg, i) for i in plan.pattern_idx)
+
+        if mode == "decode":
+            # unrolled depth: per-layer cache buffers donate in place
+            for bi in range(plan.n_blocks):
+                ncs = []
+                for p, kind in enumerate(pat_kinds):
+                    bp = jax.tree.map(lambda t: t[bi], params["blocks"][p])
+                    c = caches["blocks_flat"][bi][p]
+                    x, nc, aux = layer_apply(
+                        cfg, kind, pat_ffn[p], bp, x,
+                        positions=positions, cache=c, mode=mode, pos=pos)
+                    ncs.append(nc)
+                    aux_total = aux_total + aux
+                new_blocks_flat.append(ncs)
+        else:
+            def block_body(carry, xs):
+                x, aux_acc = carry
+                # barrier: stops XLA from hoisting the layer's bf16→f32
+                # convert of this carry out of the (remat) backward loop,
+                # which would materialize an f32 copy of the whole saved
+                # stack (L × tokens × d) at once
+                x = jax.lax.optimization_barrier(x)
+                bp, bc = xs
+                ncs = []
+                for p, kind in enumerate(pat_kinds):
+                    c = None if bc is None else bc[p]
+                    x, nc, aux = layer_apply(
+                        cfg, kind, pat_ffn[p], bp[p], x,
+                        positions=positions, cache=c, mode=mode, pos=pos)
+                    ncs.append(nc)
+                    aux_acc = aux_acc + aux
+                ys = None if mode == "train" else ncs
+                return (x, aux_acc), ys
+
+            body = block_body
+            if mode == "train" and cfg.remat != "none":
+                policy = (
+                    jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    if cfg.remat == "dots" else None)
+                body = jax.checkpoint(block_body, policy=policy)
+
+            bcaches = None if caches is None else caches["blocks"]
+            (x, aux_total), new_blocks = jax.lax.scan(
+                body, (x, aux_total), (params["blocks"], bcaches))
+
+    new_tail = []
+    for j, i in enumerate(plan.tail):
+        c = None if caches is None else caches["tail"][j]
+        x, nc, aux = layer_apply(
+            cfg, cfg.layer_kind(i), _ffn_kind(cfg, i), params["tail"][j],
+            x, positions=positions, cache=c, mode=mode, pos=pos)
+        new_tail.append(nc)
+        aux_total = aux_total + aux
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    new_caches = None
+    if mode == "decode":
+        new_caches = {"prefix": new_prefix, "blocks_flat": new_blocks_flat,
+                      "tail": new_tail}
+    elif mode == "prefill":
+        new_caches = {"prefix": new_prefix, "blocks": new_blocks,
+                      "tail": new_tail}
+    return x, new_caches, aux_total / n_aux
+
+
+def embed_inputs(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+                 dtype) -> jax.Array:
+    """tokens (+ optional patch embeddings) → hidden [B,S,D]."""
+    h = L.embed_apply(cfg, params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(dtype) @ params["frontend"]["proj"]
+        h = jnp.concatenate([pe, h], axis=1)
+    return h

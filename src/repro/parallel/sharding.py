@@ -1,0 +1,238 @@
+"""Logical-axis sharding rules (MaxText-style) mapped onto the production mesh.
+
+Every parameter/activation in the model zoo is annotated with *logical* axis
+names; a rule table maps logical names to physical mesh axes.  Two presets:
+
+* ``TRAIN_RULES`` — FSDP(ZeRO-3)+TP: parameter ``embed`` dims shard over the
+  ``data`` axis (gathered per use inside the microbatch scan), feature dims
+  over ``model``, batch over ``("pod","data")``.
+* ``SERVE_RULES`` — TP only: params replicated over ``data``, feature dims
+  over ``model``; the KV cache is **sequence-sharded over ``model``**
+  (flash-decoding style partial softmax; the combine collectives are tiny).
+
+Divisibility fallback: if a dimension is not divisible by the product of its
+mapped mesh axes, the mapping for that dimension degrades to replication
+(needed e.g. for ``long_500k``'s global_batch=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# -- logical axis names ------------------------------------------------------
+BATCH = "batch"          # activation batch
+SEQ = "seq"              # activation sequence
+EMBED = "embed"          # d_model dim of params (FSDP target)
+VOCAB = "vocab"          # vocab dim of embeddings / lm head
+HEADS = "heads"          # flattened q/kv head dims, ff dims, lru width
+EXPERT = "expert"        # MoE expert dim
+KV_SEQ = "kv_seq"        # KV-cache sequence dim (serve: sharded over model)
+LAYERS = "layers"        # stacked-layer leading dim (scan-over-layers)
+REPL = "repl"            # always replicated
+
+TRAIN_RULES: Mapping[str, AxisVal] = {
+    BATCH: ("pod", "data"),
+    SEQ: None,
+    EMBED: ("data", "pod"),     # ZeRO-3 spans pods on the multi-pod mesh
+    VOCAB: "model",
+    HEADS: "model",
+    EXPERT: "model",
+    KV_SEQ: None,
+    LAYERS: None,
+    REPL: None,
+}
+
+def serve_rules(cfg) -> Mapping[str, AxisVal]:
+    """Serve-time rules; archs too big to replicate over ``data`` (arctic)
+    keep FSDP sharding on embed dims and gather weights per layer."""
+    if getattr(cfg, "serve_shard_embed", False):
+        return dict(SERVE_RULES, **{EMBED: "data"})
+    return SERVE_RULES
+
+
+SERVE_RULES: Mapping[str, AxisVal] = {
+    BATCH: ("pod", "data"),
+    SEQ: None,
+    EMBED: None,           # no optimizer → replicate over data
+    VOCAB: "model",
+    HEADS: "model",
+    EXPERT: "model",
+    KV_SEQ: "model",       # sequence-sharded KV cache (flash-decoding)
+    LAYERS: None,
+    REPL: None,
+}
+
+
+def _resolve(axis: AxisVal, mesh: Mesh) -> Tuple[str, ...]:
+    """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
+    if axis is None:
+        return ()
+    if isinstance(axis, str):
+        axis = (axis,)
+    return tuple(a for a in axis if a in mesh.axis_names)
+
+
+def _axis_size(axes: Tuple[str, ...], mesh: Mesh) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Mapping[str, AxisVal],
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    ``shape`` (if given) enables the divisibility fallback per-dimension.
+    """
+    parts = []
+    for i, name in enumerate(logical):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = _resolve(rules.get(name, None), mesh)
+        if not axes:
+            parts.append(None)
+            continue
+        if shape is not None:
+            if shape[i] % _axis_size(axes, mesh):
+                # try progressively shorter prefixes of the axis tuple
+                while axes and shape[i] % _axis_size(axes, mesh):
+                    axes = axes[:-1]
+                if not axes:
+                    parts.append(None)
+                    continue
+        parts.append(axes[0] if len(axes) == 1 else axes)
+    # strip trailing Nones for tidier specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Mapping[str, AxisVal],
+    shape: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical, mesh, rules, shape))
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions: a pytree of ParamDef describes shapes, logical axes,
+# dtypes and initializers.  The same tree yields (a) materialized params for
+# smoke tests/examples, (b) ShapeDtypeStructs + NamedShardings for the
+# allocation-free dry-run.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = None                      # filled by model (default bf16)
+    init: str = "normal"                   # normal | zeros | ones
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_shape_structs(tree, default_dtype) -> Any:
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or default_dtype),
+        tree, is_leaf=is_param_def)
+
+
+def tree_shardings(tree, mesh: Mesh, rules: Mapping[str, AxisVal]) -> Any:
+    return jax.tree.map(
+        lambda p: named_sharding(p.logical, mesh, rules, p.shape),
+        tree, is_leaf=is_param_def)
+
+
+def tree_specs(tree, mesh: Mesh, rules: Mapping[str, AxisVal]) -> Any:
+    return jax.tree.map(
+        lambda p: logical_to_spec(p.logical, mesh, rules, p.shape),
+        tree, is_leaf=is_param_def)
+
+
+def init_params(rng: jax.Array, tree, default_dtype) -> Any:
+    """Materialize a ParamDef tree (smoke tests / examples only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_param_def)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, p in zip(keys, leaves):
+        dtype = p.dtype or default_dtype
+        if p.init == "zeros":
+            out.append(jax.numpy.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jax.numpy.ones(p.shape, dtype))
+        else:
+            out.append(
+                (p.init_scale * jax.random.normal(key, p.shape)).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+_HINT_MESH: list = [None]
+
+
+@dataclasses.dataclass
+class hint_mesh:
+    """Context manager making ``hint()`` active during tracing.  The
+    launcher wraps ``.lower()`` in ``with mesh, hint_mesh(mesh):``; tests
+    and single-device code never enter it, so hints are no-ops there."""
+    mesh: Any
+
+    def __enter__(self):
+        self._old = _HINT_MESH[0]
+        _HINT_MESH[0] = self.mesh
+        return self
+
+    def __exit__(self, *exc):
+        _HINT_MESH[0] = self._old
+        return False
+
+
+def hint(x: Any, *axes: AxisVal) -> Any:
+    """Best-effort ``with_sharding_constraint`` on an intermediate tensor.
+
+    No-op outside :class:`hint_mesh` (CPU tests / single device); inside
+    the dry-run it pins the given mesh axes per dimension, with the same
+    divisibility fallback as parameter shardings.  Used where GSPMD's
+    propagation otherwise falls back to "involuntary full
+    rematerialization" (e.g. MoE dispatch/combine tensors).
+    """
+    mesh = _HINT_MESH[0]
+    if mesh is None:
+        return x
+    parts = []
+    for i, a in enumerate(axes):
+        cand = (a,) if isinstance(a, str) else tuple(a or ())
+        cand = tuple(c for c in cand if c in mesh.axis_names)
+        while cand and x.shape[i] % _axis_size(cand, mesh):
+            cand = cand[:-1]
+        parts.append(cand[0] if len(cand) == 1
+                     else (cand if cand else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_param_def)
+    return int(sum(int(np.prod(p.shape)) for p in leaves))

@@ -1,0 +1,10 @@
+from repro.roofline import hw  # noqa: F401
+from repro.roofline.analysis import (  # noqa: F401
+    CellCost,
+    RooflineTerms,
+    collective_bytes,
+    cost_from_compiled,
+    extrapolate,
+    model_flops_per_step,
+    roofline,
+)

@@ -1,0 +1,92 @@
+"""Collective profile of a cell's calibration module: which collective ops,
+of which shapes, account for the collective roofline term.  This is the
+"profile" the §Perf hypothesis loop reads (dry-run lens: lowered IR, not a
+wall-clock trace).
+
+Usage (inside the 512-device dryrun process):
+    python -m repro.roofline.collprofile --arch qwen2-72b --shape train_4k
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse            # noqa: E402
+import collections         # noqa: E402
+import re                  # noqa: E402
+
+from repro.roofline.analysis import (_DTYPE_BYTES, _OP_RE,  # noqa: E402
+                                     _SHAPE_RE)
+
+
+def profile_text(hlo_text: str, top: int = 20):
+    agg = collections.Counter()
+    cnt = collections.Counter()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_token, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        b = 0
+        for dtype, dims in _SHAPE_RE.findall(shape_token):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            b += n * _DTYPE_BYTES[dtype]
+        key = (kind, shape_token.split("{")[0])
+        agg[key] += b
+        cnt[key] += 1
+    return [(kind, shape, bts, cnt[(kind, shape)])
+            for (kind, shape), bts in agg.most_common(top)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mcfg", action="append", default=[])
+    ap.add_argument("--tcfg", action="append", default=[])
+    args = ap.parse_args()
+
+    import dataclasses
+
+    from repro.config import SHAPES, SINGLE_POD_MESH, get_config
+    from repro.launch import dryrun as dr
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(args.arch)
+    if args.mcfg:
+        cfg = dataclasses.replace(
+            cfg, **dict(dr._parse_override(o) for o in args.mcfg))
+    if args.tcfg:
+        dr.TRAIN_OVERRIDES[args.arch] = dict(
+            dr.TRAIN_OVERRIDES.get(args.arch, {}),
+            **dict(dr._parse_override(o) for o in args.tcfg))
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+    small, big, n_units = dr._calibration_cfgs(cfg)
+    if shape.kind == "train":
+        run = __import__("repro.config", fromlist=["RunConfig"]).RunConfig(
+            model=cfg, shape=shape, mesh=SINGLE_POD_MESH,
+            train=dr.train_config_for(args.arch))
+        n_mb = run.microbatches()
+        shape = dataclasses.replace(shape,
+                                    global_batch=max(
+                                        SINGLE_POD_MESH.dp_size,
+                                        shape.global_batch // n_mb))
+    lw, _ = dr.lower_cell(small, shape, mesh, SINGLE_POD_MESH, n_mb=1,
+                          donate=False)
+    txt = lw.compile().as_text()
+    total = 0
+    print(f"collective profile: {args.arch} {args.shape} "
+          f"(1-unit calibration module, per-device bytes)")
+    for kind, shp, bts, n in profile_text(txt):
+        total += bts
+        print(f"  {bts / 2**20:9.1f} MiB  n={n:3d}  {kind:19s} {shp}")
+    print(f"  total: {total / 2**20:.1f} MiB")
+
+
+if __name__ == "__main__":
+    main()

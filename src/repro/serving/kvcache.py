@@ -1,0 +1,40 @@
+"""KV-cache utilities: re-homing prefill caches into decode buffers.
+
+Prefill produces caches sized exactly to the prompt; decode needs head-room
+for generated tokens.  ``grow_caches`` pads every *sequence-indexed* cache
+(attention k/v, 4D [B,S,KV,HD]) to the target length; recurrent states
+(RWKV wkv/shift, RG-LRU h/conv) are fixed-size and pass through.  Windowed
+(local-attention) caches are rolling buffers of fixed window length and
+also pass through.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _grow_leaf(path, leaf, target_len: int, window: int):
+    keys = [getattr(p, "key", None) for p in path]
+    if any(k in keys for k in ("k", "v", "k_scale", "v_scale")):
+        # attention cache [.., B, S, KV, HD] (leading stacked-layer dim
+        # possible); window buffers stay at window length
+        seq_axis = leaf.ndim - 3
+        s = leaf.shape[seq_axis]
+        if window and s <= window:
+            return leaf
+        if s >= target_len:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[seq_axis] = (0, target_len - s)
+        return jnp.pad(leaf, pad)
+    return leaf
+
+
+def grow_caches(caches: Any, target_len: int, window: int = 0) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    grown = [_grow_leaf(path, leaf, target_len, window)
+             for path, leaf in flat]
+    return jax.tree.unflatten(treedef, grown)

@@ -1,0 +1,11 @@
+from repro.train.loop import (  # noqa: F401
+    TrainReport,
+    TrainState,
+    init_state,
+    make_train_step,
+    train,
+)
+from repro.train.microbatch import (  # noqa: F401
+    accumulate_gradients,
+    split_microbatches,
+)

@@ -1,0 +1,123 @@
+"""Training step/loop assembly.
+
+``make_train_step`` builds the jittable (params, opt_state, batch, step) →
+(params, opt_state, metrics) function with:
+
+  * microbatch gradient accumulation (tiny tasks, kneepoint-sized),
+  * optional int8 gradient compression with error feedback,
+  * AdamW with configurable moment precision,
+  * LR schedule.
+
+``train`` runs the host loop: subsampling input pipeline with prefetch,
+job-level checkpointing, restart-on-failure via ``core.recovery``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import RunConfig
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.parallel import compression
+
+logger = logging.getLogger(__name__)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    error_feedback: Optional[Any]
+    step: jax.Array
+
+
+def init_state(model: Model, run: RunConfig, rng: jax.Array) -> TrainState:
+    params = model.init(rng)
+    opt = adamw.init(params, run.train)
+    ef = (compression.init_error_feedback(params)
+          if run.train.grad_compression == "int8" else None)
+    return TrainState(params, opt, ef, jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: Model, run: RunConfig, *,
+                    n_mb: Optional[int] = None
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                  tuple]:
+    n_mb = run.microbatches() if n_mb is None else n_mb
+    tcfg = run.train
+    accum_dtype = (jnp.bfloat16 if tcfg.grad_accum_dtype == "bfloat16"
+                   else jnp.float32)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        from repro.train.microbatch import accumulate_gradients
+        loss, metrics, grads = accumulate_gradients(
+            model.loss, state.params, batch, n_mb,
+            accum_dtype=accum_dtype)
+        ef = state.error_feedback
+        if ef is not None:
+            grads, ef = compression.compress_grads(grads, ef)
+        lr = adamw.lr_schedule(tcfg, state.step)
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state.opt, state.params, lr, tcfg)
+        metrics = dict(metrics, loss=loss, lr=lr, **opt_metrics)
+        return TrainState(new_params, new_opt, ef, state.step + 1), metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps: int
+    final_loss: float
+    losses: list
+    seconds: float
+    restarts: int = 0
+
+
+def train(
+    model: Model,
+    run: RunConfig,
+    batches: Iterator[Dict[str, jax.Array]],
+    num_steps: int,
+    *,
+    checkpoint_manager=None,
+    checkpoint_every: int = 50,
+    state: Optional[TrainState] = None,
+    log_every: int = 10,
+) -> TrainReport:
+    rng = jax.random.PRNGKey(run.train.seed)
+    if state is None:
+        state = init_state(model, run, rng)
+        if checkpoint_manager is not None:
+            restored = checkpoint_manager.restore_latest(example=state)
+            if restored is not None:
+                state = restored
+                logger.info("resumed from step %d", int(state.step))
+
+    step_fn = jax.jit(make_train_step(model, run))
+    losses = []
+    t0 = time.perf_counter()
+    start = int(state.step)
+    for i in range(start, num_steps):
+        batch = next(batches)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if i % log_every == 0:
+            logger.info("step %d loss %.4f lr %.2e", i, loss,
+                        float(metrics["lr"]))
+        if checkpoint_manager is not None and (i + 1) % checkpoint_every == 0:
+            checkpoint_manager.save(int(state.step), state)
+    if checkpoint_manager is not None:
+        checkpoint_manager.save(int(state.step), state)
+        checkpoint_manager.wait()
+    return TrainReport(steps=num_steps, final_loss=losses[-1] if losses
+                       else float("nan"), losses=losses,
+                       seconds=time.perf_counter() - t0)

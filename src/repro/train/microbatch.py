@@ -1,0 +1,60 @@
+"""Gradient accumulation over kneepoint-sized microbatches.
+
+The global batch is split into ``n_mb`` tiny tasks executed back-to-back by
+``lax.scan`` — the device-side analogue of the paper's per-worker task
+queue: each microbatch's activation working set stays at the kneepoint
+(``ModelConfig.microbatch_tokens_per_device``), and the scan *is* the queue
+(zero dispatch gap between tasks, like the phase-2 batched refill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def split_microbatches(batch: Dict[str, jax.Array], n_mb: int
+                       ) -> Dict[str, jax.Array]:
+    """[B, ...] → [n_mb, B/n_mb, ...] on every leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n_mb == 0, (b, n_mb)
+        return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def accumulate_gradients(
+    loss_fn: Callable[[Any, Dict[str, jax.Array]], Tuple[jax.Array, Dict]],
+    params: Any,
+    batch: Dict[str, jax.Array],
+    n_mb: int,
+    accum_dtype=jnp.float32,
+) -> Tuple[jax.Array, Dict[str, jax.Array], Any]:
+    """Mean loss/grads over ``n_mb`` sequential microbatches."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if n_mb <= 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    mbs = split_microbatches(batch, n_mb)
+
+    def mb_step(carry, mb):
+        loss_acc, metrics_acc, grads_acc = carry
+        (loss, metrics), grads = grad_fn(params, mb)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
+        metrics_acc = jax.tree.map(lambda a, m: a + m, metrics_acc, metrics)
+        return (loss_acc + loss, metrics_acc, grads_acc), None
+
+    zero_grads = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    zero_metrics = {"ce": jnp.zeros((), jnp.float32),
+                    "aux": jnp.zeros((), jnp.float32)}
+    (loss, metrics, grads), _ = jax.lax.scan(
+        mb_step, (jnp.zeros(()), zero_metrics, zero_grads), mbs)
+    inv = 1.0 / n_mb
+    return (loss * inv,
+            jax.tree.map(lambda m: m * inv, metrics),
+            jax.tree.map(lambda g: g * inv, grads))

@@ -1,0 +1,71 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the real (single) CPU device.  Only
+``repro.launch.dryrun`` forces 512 host devices, in its own process.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_config
+
+
+def reduced(arch: str, **overrides):
+    """A tiny config of the same family/structure as ``arch``.
+
+    Keeps the layer pattern, GQA grouping, MoE routing structure, frontend
+    kind — shrinks widths/depths so a forward/train step runs on CPU in
+    well under a second.
+    """
+    cfg = get_config(arch)
+    small = dict(
+        d_model=64,
+        d_ff=128,
+        vocab_size=256,
+        chunk_len=8,
+        microbatch_tokens_per_device=64,
+    )
+    if cfg.num_heads:
+        heads = 4
+        kv = max(1, min(cfg.num_kv_heads, heads * cfg.num_kv_heads
+                        // cfg.num_heads)) or 1
+        if cfg.num_kv_heads == cfg.num_heads:
+            kv = heads
+        small.update(num_heads=heads, num_kv_heads=kv,
+                     head_dim=64 // heads)
+    if cfg.family == "moe":
+        small.update(num_experts=8,
+                     moe_top_k=min(cfg.moe_top_k, 2),
+                     moe_d_ff=32)
+        if cfg.first_dense_layers:
+            small.update(first_dense_d_ff=128)
+    if cfg.frontend == "patch":
+        small.update(num_patches=4, frontend_dim=16)
+    if cfg.frontend == "codec":
+        small.update(frontend_dim=8)
+    if cfg.local_window:
+        small.update(local_window=16)
+    if cfg.lru_width:
+        small.update(lru_width=64)
+    # depth: prefix + 2 pattern repetitions (+ pattern remainder if the
+    # real arch has one, to exercise the tail path)
+    pat = len(cfg.layer_pattern)
+    rem = (cfg.num_layers - cfg.first_dense_layers) % pat
+    small.update(num_layers=cfg.first_dense_layers + 2 * pat + rem)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_finite(tree, name=""):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        ok = bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+        assert ok, f"non-finite values at {name}{jax.tree_util.keystr(path)}"

@@ -1,0 +1,78 @@
+"""Kneepoint algorithm tests (thesis Fig 2/3 behaviour) + properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.kneepoint import (
+    SANDY_BRIDGE_HIERARCHY,
+    TPU_V5E_HIERARCHY,
+    CurvePoint,
+    amat_curve,
+    find_kneepoint,
+    pack_tasks,
+)
+
+
+def test_flat_then_step_curve_knees_before_step():
+    # classic Fig 2 shape: flat miss rate, then a sharp step at 2.5MB
+    sizes = [0.5, 1.0, 2.0, 2.5, 4.0, 8.0, 16.0, 25.0]
+    costs = [1.0, 1.0, 1.01, 1.01, 3.0, 6.0, 12.0, 35.0]
+    res = find_kneepoint([CurvePoint(s, c) for s, c in zip(sizes, costs)])
+    assert res.task_size == 2.5, res
+
+
+def test_monotone_flat_curve_prefers_largest_task():
+    pts = [CurvePoint(s, 1.0) for s in (1, 2, 4, 8)]
+    res = find_kneepoint(pts)
+    assert res.task_size == 8
+
+
+def test_amat_curve_has_knee_at_cache_capacity():
+    ws = np.geomspace(2**18, 2**26, 24)
+    pts = amat_curve(ws, SANDY_BRIDGE_HIERARCHY)
+    res = find_kneepoint(pts, tolerance=0.3)
+    # knee must sit at or below the L2-ish capacity region (≤ ~4MB)
+    assert res.task_size <= 4 * 2**20
+
+
+def test_amat_curve_tpu_hierarchy_knee_below_vmem_scale():
+    ws = np.geomspace(2**20, 2**31, 24)
+    pts = amat_curve(ws, TPU_V5E_HIERARCHY)
+    res = find_kneepoint(pts, tolerance=0.3)
+    assert res.task_size <= 64 * 2**20
+
+
+@given(st.lists(st.integers(min_value=1, max_value=10_000),
+                min_size=1, max_size=200),
+       st.floats(min_value=1.0, max_value=50_000.0,
+                 allow_nan=False, allow_infinity=False))
+@settings(max_examples=100, deadline=None)
+def test_pack_tasks_partition_property(sizes, knee):
+    """Packing must be a partition: every sample exactly once, order kept."""
+    tasks = pack_tasks(sizes, knee)
+    flat = [i for t in tasks for i in t]
+    assert flat == list(range(len(sizes)))
+    # no task exceeds the knee unless it is a singleton outlier
+    for t in tasks:
+        total = sum(sizes[i] for i in t)
+        assert total <= knee or len(t) == 1
+
+
+@given(st.lists(
+    st.tuples(st.floats(min_value=0.1, max_value=1e6, allow_nan=False),
+              st.floats(min_value=0.0, max_value=1e6, allow_nan=False)),
+    min_size=2, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_kneepoint_always_returns_a_measured_size(points):
+    # dedupe sizes to keep the curve a function
+    seen = {}
+    for s, c in points:
+        seen[s] = c
+    if len(seen) < 2:
+        return
+    pts = [CurvePoint(s, c) for s, c in seen.items()]
+    res = find_kneepoint(pts)
+    assert any(p.task_size == res.task_size for p in pts)
+    assert 0 <= res.index < len(pts)

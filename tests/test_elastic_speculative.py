@@ -1,0 +1,57 @@
+"""Elastic worker-pool controller + speculative-execution option."""
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (SchedulerConfig, SimParams, SimWorker,
+                                  Task, simulate_job)
+from repro.launch.elastic import ElasticWorkerPool, demo_elastic_run
+
+
+def mk_tasks(n):
+    return [Task(i, (i,), 1.0) for i in range(n)]
+
+
+def test_speculation_rescues_a_straggler():
+    """One worker is 20× slower; with speculation an idle fast worker
+    re-runs the straggling task and the job finishes much earlier."""
+    workers = [SimWorker(0, speed=0.05)] + [SimWorker(i) for i in (1, 2, 3)]
+    params = SimParams(exec_time=lambda t: 0.01, fetch_time=lambda t: 0.0)
+    # few tasks: the slow worker's probe task dominates the makespan
+    base = simulate_job(mk_tasks(8), workers, params,
+                        SchedulerConfig(speculative=False))
+    spec = simulate_job(mk_tasks(8), workers, params,
+                        SchedulerConfig(speculative=True,
+                                        speculative_factor=2.0))
+    assert spec.makespan < 0.7 * base.makespan, (base.makespan,
+                                                 spec.makespan)
+    # every task still completes exactly once
+    assert sorted(r.task_id for r in spec.results) == list(range(8))
+
+
+def test_speculation_no_op_on_uniform_workers():
+    workers = [SimWorker(i) for i in range(4)]
+    params = SimParams(exec_time=lambda t: 0.01, fetch_time=lambda t: 0.0)
+    out = simulate_job(mk_tasks(64), workers, params,
+                       SchedulerConfig(speculative=True))
+    assert sorted(r.task_id for r in out.results) == list(range(64))
+
+
+def test_elastic_pool_scales_with_job_size():
+    pool = ElasticWorkerPool(
+        (4, 8, 16, 32), throughput=lambda c, b: c * 1e8,
+        startup=lambda c: 0.05 + 0.002 * c)
+    small = pool.plan_job(1e6, slo_seconds=0.2)
+    big = pool.plan_job(1e10, slo_seconds=60.0)
+    assert big.cores >= small.cores
+    assert any(e.action == "grow" for e in pool.events)
+
+
+def test_elastic_demo_session_recovers_and_meets_slos():
+    out = demo_elastic_run([1e8, 1e9, 1e8], slo_seconds=30.0)
+    reports = out["reports"]
+    assert len(reports) == 3
+    assert all(r["met_slo"] for r in reports)
+    # job 1 had an injected failure → job-level restart happened
+    assert reports[1]["restarts"] >= 1
+    assert any(e.action == "restart" for e in out["events"])

@@ -1,0 +1,163 @@
+"""Per-kernel allclose validation against the pure-jnp oracles, sweeping
+shapes and dtypes (interpret mode on CPU; compiled on TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+# -- flash attention --------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,sq,skv,hd", [
+    (2, 128, 128, 64),
+    (1, 256, 256, 128),
+    (3, 128, 256, 32),     # cross lengths (prefill against longer KV)
+])
+def test_flash_attention_matches_ref(bh, sq, skv, hd, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], (bh, sq, hd), dtype)
+    k = _rand(keys[1], (bh, skv, hd), dtype)
+    v = _rand(keys[2], (bh, skv, hd), dtype)
+    causal = sq == skv
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64,
+                              block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_sweep():
+    q = _rand(jax.random.PRNGKey(1), (1, 256, 64), jnp.float32)
+    k = _rand(jax.random.PRNGKey(2), (1, 256, 64), jnp.float32)
+    v = _rand(jax.random.PRNGKey(3), (1, 256, 64), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        out = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# -- rwkv6 chunked scan ------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,s,hd,chunk", [
+    (1, 2, 64, 16, 16),
+    (2, 1, 128, 32, 32),
+    (1, 4, 64, 64, 64),    # single chunk
+])
+def test_rwkv6_chunked_matches_sequential_ref(b, h, s, hd, chunk, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = _rand(keys[0], (b, h, s, hd), dtype)
+    k = _rand(keys[1], (b, h, s, hd), dtype)
+    v = _rand(keys[2], (b, h, s, hd), dtype)
+    # realistic decays: logw in [-2.5, -0.05]
+    logw = (-0.05 - 2.45 * jax.random.uniform(keys[3], (b, h, s, hd))
+            ).astype(dtype)
+    u = 0.3 * _rand(keys[4], (h, hd), dtype)
+    out = ops.rwkv6_chunked(r, k, v, logw, u, chunk=chunk)
+    want = ref.rwkv6_chunked_ref(r, k, v, logw, u)
+    # chunked closed form vs sequential scan: different fp32 summation
+    # order ⇒ ~1e-3 relative drift is expected
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_rwkv6_model_chunk_body_matches_kernel():
+    """The model's jnp chunk body and the kernel agree (same math)."""
+    from repro.models.rwkv6 import chunk_body
+    b, h, s, hd = 1, 2, 64, 32
+    keys = jax.random.split(jax.random.PRNGKey(7), 5)
+    r = _rand(keys[0], (b, h, s, hd), jnp.float32)
+    k = _rand(keys[1], (b, h, s, hd), jnp.float32)
+    v = _rand(keys[2], (b, h, s, hd), jnp.float32)
+    logw = -0.05 - 2.45 * jax.random.uniform(keys[3], (b, h, s, hd))
+    u = 0.3 * _rand(keys[4], (h, hd), jnp.float32)
+    out_k = ops.rwkv6_chunked(r, k, v, logw, u, chunk=s)
+    out_m, _ = chunk_body(r, k, v, logw, u,
+                          jnp.zeros((b, h, hd, hd), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_m),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- rg-lru scan --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,w,chunk,wb", [
+    (2, 64, 128, 16, 64),
+    (1, 128, 256, 64, 256),
+    (3, 32, 64, 32, 32),
+])
+def test_rglru_scan_matches_associative_ref(b, s, w, chunk, wb):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    a = jax.random.uniform(keys[0], (b, s, w), minval=0.2, maxval=0.99)
+    bb = _rand(keys[1], (b, s, w), jnp.float32) * 0.5
+    h0 = _rand(keys[2], (b, w), jnp.float32)
+    out = ops.rglru_scan(a, bb, h0, chunk=chunk, width_block=wb)
+    want = ref.linear_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(min_value=1, max_value=4),
+       st.sampled_from([16, 32, 64]),
+       st.sampled_from([32, 128]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_rglru_scan_property(b, s, w, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.uniform(keys[0], (b, s, w), minval=0.0, maxval=1.0)
+    bb = _rand(keys[1], (b, s, w), jnp.float32)
+    h0 = _rand(keys[2], (b, w), jnp.float32)
+    out = ops.rglru_scan(a, bb, h0, chunk=min(16, s), width_block=min(32, w))
+    want = ref.linear_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- subsample gather -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,t", [(64, 128, 32), (256, 64, 128),
+                                   (32, 256, 8)])
+def test_subsample_gather_matches_ref(n, d, t, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    data = _rand(keys[0], (n, d), dtype)
+    idx = jax.random.randint(keys[1], (t,), 0, n, jnp.int32)
+    gathered, stats = ops.subsample_gather(data, idx)
+    g_ref, s_ref = ref.subsample_stats_ref(data, idx)
+    np.testing.assert_allclose(np.asarray(gathered, np.float32),
+                               np.asarray(g_ref, np.float32))
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(stats), np.asarray(s_ref),
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_subsample_gather_property(t, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    data = _rand(keys[0], (32, 16), jnp.float32)
+    idx = jax.random.randint(keys[1], (t,), 0, 32, jnp.int32)
+    gathered, stats = ops.subsample_gather(data, idx)
+    g_ref, s_ref = ref.subsample_stats_ref(data, idx)
+    np.testing.assert_allclose(np.asarray(gathered), np.asarray(g_ref))
+    np.testing.assert_allclose(np.asarray(stats), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)

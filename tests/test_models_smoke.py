@@ -1,0 +1,72 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step + prefill + decode on CPU; asserts output shapes and
+no NaNs.  (Full configs are exercised allocation-free by the dry-run.)"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ARCH_IDS, ShapeConfig, get_config
+from repro.models import build_model
+from tests.conftest import assert_finite, reduced
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "paper-subsample"]
+
+B, S = 2, 32
+
+
+def _train_shape(cfg):
+    p = cfg.num_patches if cfg.frontend == "patch" else 0
+    return ShapeConfig("smoke_train", "train", S + p, B)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_train_step_smoke(arch, rng):
+    cfg = reduced(arch)
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = model.make_inputs(_train_shape(cfg), rng)
+    (loss, metrics), grads = jax.value_and_grad(
+        model.loss, has_aux=True)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    assert_finite(grads, f"{arch}.grads")
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_prefill_then_decode_smoke(arch, rng):
+    cfg = reduced(arch)
+    model = build_model(cfg)
+    params = model.init(rng)
+    p = cfg.num_patches if cfg.frontend == "patch" else 0
+    shape = ShapeConfig("smoke_prefill", "prefill", S + p, B)
+    batch = model.make_inputs(shape, rng)
+    logits, caches = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert_finite(logits, f"{arch}.prefill_logits")
+
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    pos = jnp.asarray(S + p, jnp.int32)
+    # re-home stacked prefill caches into the flat decode layout with
+    # head-room for the new token (the serving engine's path)
+    from repro.serving import grow_caches
+    caches = model.prefill_to_decode(
+        grow_caches(caches, S + p + 4, cfg.local_window))
+    logits2, new_caches = jax.jit(model.decode_step)(
+        params, tok, caches, pos)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert_finite(logits2, f"{arch}.decode_logits")
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_param_count_matches_defs(arch):
+    """Analytic param_count (used for 6ND roofline) ≈ actual defs count."""
+    from repro.parallel.sharding import param_count as defs_count
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    analytic = cfg.param_count()
+    actual = defs_count(model.param_defs())
+    rel = abs(analytic - actual) / max(actual, 1)
+    assert rel < 0.02, (arch, analytic, actual, rel)

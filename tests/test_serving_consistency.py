@@ -1,0 +1,81 @@
+"""Decode-path correctness: running prefill on a prefix and then decoding
+token-by-token must produce the same logits as a fresh full-sequence
+forward pass — for every architecture family (KV cache, rolling local
+windows, RWKV/RG-LRU recurrent states, int8 quantized caches)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ARCH_IDS, ShapeConfig
+from repro.models import build_model
+from repro.serving import grow_caches
+from tests.conftest import reduced
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "paper-subsample"]
+
+B, PREFIX, EXTRA = 2, 24, 4
+
+
+def _full_logits(model, params, tokens, upto):
+    """Last-position logits of a fresh prefill on tokens[:, :upto]."""
+    logits, _ = jax.jit(model.prefill)(params, {"tokens": tokens[:, :upto]})
+    return logits
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_matches_fresh_prefill(arch, rng):
+    cfg = reduced(arch)
+    if cfg.frontend == "patch":
+        cfg = dataclasses.replace(cfg, frontend="none", num_patches=0)
+    if cfg.kv_cache_dtype == "int8":
+        # quantization breaks exactness; covered separately below
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="bfloat16")
+    model = build_model(cfg)
+    params = model.init(rng)
+    total = PREFIX + EXTRA
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, total), 0,
+                                cfg.vocab_size, jnp.int32)
+
+    logits, caches = jax.jit(model.prefill)(
+        params, {"tokens": tokens[:, :PREFIX]})
+    caches = model.prefill_to_decode(
+        grow_caches(caches, total + 1, cfg.local_window))
+
+    decode = jax.jit(model.decode_step)
+    for i in range(EXTRA):
+        pos = jnp.asarray(PREFIX + i, jnp.int32)
+        want = _full_logits(model, params, tokens, PREFIX + i + 1)
+        got, caches = decode(params, tokens[:, PREFIX + i:PREFIX + i + 1],
+                             caches, pos)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=3e-2, atol=3e-2,
+            err_msg=f"{arch}: decode diverges from forward at step {i}")
+
+
+def test_int8_cache_decode_close_to_bf16():
+    base = reduced("deepseek-7b", num_layers=2,
+                   kv_cache_dtype="bfloat16")
+    quant = dataclasses.replace(base, kv_cache_dtype="int8")
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, PREFIX + 1), 0,
+                                base.vocab_size, jnp.int32)
+    outs = {}
+    for cfg in (base, quant):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        logits, caches = jax.jit(model.prefill)(
+            params, {"tokens": tokens[:, :PREFIX]})
+        caches = model.prefill_to_decode(
+            grow_caches(caches, PREFIX + 2, cfg.local_window))
+        got, _ = jax.jit(model.decode_step)(
+            params, tokens[:, PREFIX:PREFIX + 1], caches,
+            jnp.asarray(PREFIX, jnp.int32))
+        outs[cfg.kv_cache_dtype] = np.asarray(got, np.float32)
+    # int8 cache changes logits only within quantization noise
+    denom = np.maximum(np.abs(outs["bfloat16"]).max(), 1e-3)
+    rel = np.abs(outs["int8"] - outs["bfloat16"]).max() / denom
+    assert rel < 0.15, rel

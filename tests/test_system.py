@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests for the paper's system: the full pipeline
+(offline kneepoint → task packing → two-phase scheduling with prefetch and
+adaptive-replication datastore → map/reduce → job-level recovery) produces
+correct statistics and the platform orderings the thesis claims."""
+
+import numpy as np
+import pytest
+
+from repro.core import subsample as ss
+from repro.core.datastore import ReplicatedDataStore, ReplicationPolicy
+from repro.core.recovery import JobRunner
+from repro.core.tiny_task import run_subsampling_job
+from repro.data.synthetic import NetflixSpec, netflix_dataset
+
+
+@pytest.fixture(scope="module")
+def netflix():
+    return netflix_dataset(NetflixSpec(n_movies=32, mean_ratings=4096))
+
+
+def test_end_to_end_job_statistically_correct(netflix):
+    """The tiny-task platform's subsampled monthly means must track the
+    exhaustive computation."""
+    samples, months = netflix
+    rep = run_subsampling_job(samples, months, ss.NETFLIX_HIGH,
+                              platform="BTS", n_workers=2,
+                              knee_bytes=8 * 4096 * 4)
+    est = rep.result["monthly_mean"]
+    counts = rep.result["count"]
+
+    ids = sorted(samples)
+    n = min(len(samples[i]) for i in ids)
+    exact = ss.exhaustive_monthly_mean(
+        np.stack([samples[i][:n] for i in ids]),
+        np.stack([months[i][:n] for i in ids]), 120)
+    valid = counts > 100
+    assert valid.sum() > 30
+    assert np.mean(np.abs(est[valid] - exact[valid])) < 0.4
+
+
+def test_all_platforms_agree_on_the_statistic(netflix):
+    """Task sizing changes performance, not answers (up to subsample
+    noise + padding duplicates)."""
+    samples, months = netflix
+    outs = {}
+    for plat in ("BTS", "BLT", "BTT"):
+        rep = run_subsampling_job(samples, months, ss.NETFLIX_HIGH,
+                                  platform=plat, n_workers=2,
+                                  knee_bytes=8 * 4096 * 4)
+        outs[plat] = rep.result["monthly_mean"]
+    valid = np.ones_like(outs["BTS"], bool)
+    for a in outs.values():
+        valid &= np.isfinite(a) & (a > 0)
+    assert valid.sum() > 30
+    assert np.max(np.abs(outs["BTS"][valid] - outs["BTT"][valid])) < 0.6
+    assert np.max(np.abs(outs["BTS"][valid] - outs["BLT"][valid])) < 0.6
+
+
+def test_job_with_datastore_and_recovery(netflix):
+    """Full stack: adaptive-replication store + job-level restart."""
+    samples, months = netflix
+    store = ReplicatedDataStore(
+        n_initial=1, policy=ReplicationPolicy(fetch_slo=5e-3, window=32))
+    attempts = []
+
+    def job():
+        attempts.append(1)
+        if len(attempts) == 1:
+            raise RuntimeError("injected failure before completion")
+        return run_subsampling_job(samples, months, ss.NETFLIX_LOW,
+                                   platform="BTS", n_workers=2,
+                                   knee_bytes=8 * 4096 * 4,
+                                   datastore=store)
+
+    outcome = JobRunner(max_restarts=2).run(job)
+    assert outcome.attempts == 2
+    assert outcome.value.result is not None
+    assert store.replication_factor >= 1
+    assert store.stats()["fetch_p95"] >= 0
