@@ -3,33 +3,34 @@
 Thesis: throughput scales linearly 12→72 cores for large jobs; small jobs
 waste cores (startup dominates); under a 2-minute SLO the 72-core config
 reaches ~50% of peak throughput and tighter SLOs prefer fewer cores.
+
+Worker counts beyond the container's cores run through
+``Platform.run_scaleout`` (virtual time); the per-sample cost model is
+calibrated once from real map execution (``measure_per_sample_cost``).
 """
 
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, measured_task_cost
-from repro.core import scheduler as sch
+from benchmarks.common import Row
 from repro.core import subsample as ss
 from repro.core.slo import choose_cores
-from repro.core.tiny_task import make_tasks
 from repro.data.synthetic import EagletSpec, eaglet_dataset
+from repro.platform import Platform, PlatformSpec, measure_per_sample_cost
 
 SAMPLE_BYTES = 2048 * 4
 
 
 def _throughput(n_cores: int, n_samples: int, per_sample: float,
                 startup: float) -> float:
-    sizes = [SAMPLE_BYTES] * n_samples
-    tasks = make_tasks(sizes, "kneepoint", 8 * SAMPLE_BYTES, n_cores)
-    workers = [sch.SimWorker(i) for i in range(n_cores)]
-    params = sch.SimParams(
-        exec_time=lambda t: len(t.sample_ids) * per_sample,
-        fetch_time=lambda t: 1e-4 * len(t.sample_ids),
-        launch_overhead=5e-4, startup_time=startup)
-    out = sch.simulate_job(tasks, workers, params)
-    return n_samples * SAMPLE_BYTES / out.makespan
+    spec = PlatformSpec(platform="BTS", n_workers=n_cores,
+                        backend="simulated", knee_bytes=8 * SAMPLE_BYTES,
+                        startup_time=startup)
+    rep = Platform(spec).run_scaleout(
+        [SAMPLE_BYTES] * n_samples, per_sample_exec=per_sample,
+        fetch_model=lambda t: 1e-4 * len(t.sample_ids))
+    return rep.throughput_bps
 
 
 def run() -> List[Row]:
@@ -37,7 +38,7 @@ def run() -> List[Row]:
     samples, months = eaglet_dataset(EagletSpec(n_families=32,
                                                 mean_markers=2048,
                                                 heavy_tail=False))
-    per_sample = measured_task_cost(samples, months, ss.EAGLET)
+    per_sample = measure_per_sample_cost(samples, months, ss.EAGLET)
     startup = 0.2
 
     tp12 = None

@@ -2,57 +2,45 @@
 
 Thesis: BTS speeds up vanilla Hadoop ≈5× on small (12MB-task) jobs, ≈3.7×
 vs JLH; the gap narrows as startup amortizes, but BTS keeps ≈25% at 1TB.
-Simulated with measured task costs (worker-count > physical cores).
+
+Runs through ``repro.platform.Platform`` (simulated backend, 12 virtual
+workers, thesis-scale startup).  Per-task costs are *measured* on the real
+map compute, one representative task per block shape
+(``compute_values=False``), so large-task configs pay the real cache
+penalty past the knee instead of a hard-coded factor.
 """
 
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row, measured_task_cost
-from repro.core import scheduler as sch
+from benchmarks.common import Row
 from repro.core import subsample as ss
-from repro.core.tiny_task import PLATFORMS, make_tasks
 from repro.data.synthetic import EagletSpec, eaglet_dataset
+from repro.platform import Platform, PlatformSpec
 
 
 def run() -> List[Row]:
     rows: List[Row] = []
-    samples, months = eaglet_dataset(EagletSpec(n_families=32,
-                                                mean_markers=2048,
-                                                heavy_tail=False))
-    per_sample = measured_task_cost(samples, months, ss.EAGLET)
     sample_bytes = 2048 * 4
     knee = 8 * sample_bytes
-    workers = [sch.SimWorker(i) for i in range(12)]
 
     for n_samples in (64, 512, 4096):
-        job_bytes = n_samples * sample_bytes
+        samples, months = eaglet_dataset(EagletSpec(n_families=n_samples,
+                                                    mean_markers=2048,
+                                                    heavy_tail=False))
         tputs = {}
         for name in ("BTS", "VH", "JLH", "LH"):
-            plat = PLATFORMS[name]
-            sizes = [sample_bytes] * n_samples
-            tasks = make_tasks(sizes, plat.task_sizing,
-                               knee if plat.task_sizing == "kneepoint"
-                               else None, len(workers))
-            # kneepoint-sized tasks keep per-sample cost at the knee; the
-            # large-task configs pay the measured cache penalty (~the
-            # curve's growth past the knee, measured ≈1.35× at Sn-size)
-            cache_penalty = 1.0 if plat.task_sizing == "kneepoint" else 1.35
-            params = sch.SimParams(
-                exec_time=lambda t, cp=cache_penalty: (
-                    len(t.sample_ids) * per_sample * cp
-                    * (1.20 if plat.monitoring else 1.0)
-                    * (1.0 + plat.dfs_tax)),
-                fetch_time=lambda t: 1e-4 * len(t.sample_ids),
-                launch_overhead=plat.launch_overhead,
-                startup_time=plat.startup_time * 20,   # thesis-scale startup
-            )
-            out = sch.simulate_job(tasks, workers, params,
-                                   sch.SchedulerConfig(recovery="job"))
-            tputs[name] = job_bytes / out.makespan
+            spec = PlatformSpec(
+                platform=name, n_workers=12, backend="simulated",
+                compute_values=False,          # per-shape cost calibration
+                knee_bytes=knee if name == "BTS" else None,
+                startup_scale=20.0)            # thesis-scale startup
+            rep = Platform(spec).run(samples, months, ss.EAGLET)
+            tputs[name] = rep.throughput_bps
             rows.append((f"jobsize.{n_samples}s.{name}.bytes_per_s",
-                         tputs[name], f"makespan={out.makespan:.3f}s"))
+                         rep.throughput_bps,
+                         f"makespan={rep.makespan:.3f}s"))
         rows.append((f"jobsize.{n_samples}s.BTS_speedup", 0.0,
                      f"vs_VH={tputs['BTS'] / tputs['VH']:.2f};"
                      f"vs_JLH={tputs['BTS'] / tputs['JLH']:.2f};"

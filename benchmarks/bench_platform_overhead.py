@@ -2,9 +2,10 @@
 
 Thesis: vanilla Hadoop starts jobs ≈4× slower than BashReduce (monitoring
 adds 21% startup); per-task monitoring costs ≈20%, the DFS tax dominates
-runtime overhead, BashReduce ≈12% over bare Linux.  We measure a
-hello-world job (startup) and a fixed task batch (runtime) on every
-platform config, normalized to BTS.
+runtime overhead, BashReduce ≈12% over bare Linux.  We run a fixed batch
+of spin tasks through ``repro.platform.Platform`` (threaded backend, one
+worker) on every platform config — overheads are spent by the backend, not
+re-modelled here — normalized to BTS.
 """
 
 from __future__ import annotations
@@ -15,46 +16,35 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import Row
-from repro.core import scheduler as sch
-from repro.core.tiny_task import PLATFORMS
+from repro.platform import PLATFORMS, Platform, PlatformSpec
 
 
-def _run_platform(plat, n_tasks: int, task_sec: float) -> tuple:
-    """Returns (startup_s, per_task_overhead_s) under real threading."""
-    def run_task(task):
-        if plat.launch_overhead:
-            time.sleep(plat.launch_overhead)
+def _run_platform(name: str, n_tasks: int, task_sec: float) -> tuple:
+    """Returns (startup_s, per_task_overhead_s) measured through the
+    platform driver (launch/DFS/monitoring taxes applied by the backend)."""
+
+    def spin(task, block, months, seed):
         t0 = time.perf_counter()
-        # the "work": spin for task_sec
         while time.perf_counter() - t0 < task_sec:
             pass
-        extra = 0.0
-        if plat.dfs_tax:
-            extra += plat.dfs_tax * task_sec
-        if plat.monitoring:
-            extra += 0.20 * task_sec
-        if extra:
-            time.sleep(extra)
-        return task.task_id
+        return {"count": np.asarray(1.0, np.float32)}
 
-    tasks = [sch.Task(i, (i,), 1.0) for i in range(n_tasks)]
-    runner = sch.ThreadedRunner(
-        1, run_task, cfg=sch.SchedulerConfig(recovery=plat.recovery))
-    t0 = time.perf_counter()
-    time.sleep(plat.startup_time)
-    runner.run_job(tasks)
-    total = time.perf_counter() - t0
-    per_task = (total - plat.startup_time) / n_tasks - task_sec
-    return plat.startup_time, max(per_task, 0.0)
+    samples = {i: np.zeros(4, np.float32) for i in range(n_tasks)}
+    months = {i: np.zeros(4, np.int32) for i in range(n_tasks)}
+    spec = PlatformSpec(platform=name, n_workers=1, backend="threaded",
+                        task_sizing="tiny")      # fixed task count
+    rep = Platform(spec, map_fn=spin).run(samples, months, None)
+    assert rep.n_tasks == n_tasks
+    per_task = (rep.makespan - rep.startup_time) / n_tasks - task_sec
+    return rep.startup_time, max(per_task, 0.0)
 
 
 def run() -> List[Row]:
     rows: List[Row] = []
     base_start = None
     base_task = None
-    for name, plat in PLATFORMS.items():
-        startup, overhead = _run_platform(plat, n_tasks=40,
-                                          task_sec=2e-3)
+    for name in PLATFORMS:
+        startup, overhead = _run_platform(name, n_tasks=40, task_sec=2e-3)
         if name == "BTS":
             base_start, base_task = startup, max(overhead, 1e-6)
         rows.append((f"overhead.{name}.startup", startup * 1e6,

@@ -34,11 +34,7 @@ def measured_task_cost(samples: Dict[int, np.ndarray],
                        months: Dict[int, np.ndarray], workload,
                        block: int = 8) -> float:
     """Median seconds per sample for a block-sized map task (calibrates
-    the simulator from real execution)."""
-    from repro.core import tiny_task as tt
-    from repro.core import subsample as ss
-    ids = sorted(samples)[:block]
-    arr = np.stack(tt._pad_to_common([samples[i] for i in ids]))
-    mo = np.stack(tt._pad_to_common([months[i] for i in ids]))
-    sec = timeit(lambda: ss.run_map_task_np(arr, mo, 0, workload))
-    return sec / block
+    the simulator from real execution).  Thin alias for
+    :func:`repro.platform.measure_per_sample_cost`."""
+    from repro.platform import measure_per_sample_cost
+    return measure_per_sample_cost(samples, months, workload, block=block)

@@ -2,18 +2,26 @@
 
 1. Generate a Netflix-like subsampling workload.
 2. Offline kneepoint phase: measure the task-size→cost curve, find the knee.
-3. Run the job on the tiny-task platform (two-phase scheduler, prefetch,
-   adaptive-replication datastore) and compare against large/tiniest tasks.
+3. Run the job through ``repro.platform.Platform`` (kneepoint sizing →
+   adaptive-replication datastore → two-phase scheduler → streaming
+   reduce) and compare against large/tiniest tasks.
+4. Replay the same job on the virtual-time simulated backend and check the
+   statistics are bit-identical to the threaded run.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py        (or PYTHONPATH=src python ...)
 """
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
 from repro.core import subsample as ss
 from repro.core.datastore import ReplicatedDataStore, ReplicationPolicy
-from repro.core.tiny_task import measure_kneepoint, run_subsampling_job
 from repro.data.synthetic import NetflixSpec, netflix_dataset
+from repro.platform import Platform, PlatformSpec, measure_kneepoint
 
 
 def main():
@@ -34,10 +42,13 @@ def main():
           f"{'throughput':>12s}")
     reports = {}
     for platform in ("BTS", "BLT", "BTT"):
-        rep = run_subsampling_job(
-            samples, months, ss.NETFLIX_HIGH, platform=platform,
-            n_workers=2, knee_bytes=knee if platform == "BTS" else None,
-            datastore=store if platform == "BTS" else None)
+        spec = PlatformSpec(
+            platform=platform, n_workers=2, backend="threaded",
+            knee_bytes=knee if platform == "BTS" else None)
+        rep = Platform(
+            spec,
+            datastore=store if platform == "BTS" else None,
+        ).run(samples, months, ss.NETFLIX_HIGH)
         reports[platform] = rep
         print(f"{platform:8s} {rep.n_tasks:6d} {rep.makespan:8.2f}s "
               f"{rep.throughput_bps / 2**20:9.2f} MiB/s")
@@ -46,10 +57,24 @@ def main():
     print(f"\nBTS vs BLT: {bts.throughput_bps / reports['BLT'].throughput_bps:.2f}x"
           f"   BTS vs BTT: "
           f"{bts.throughput_bps / reports['BTT'].throughput_bps:.2f}x")
+    print(f"phase timings: "
+          f"{ {k: round(v, 3) for k, v in bts.phases.items()} }")
+    print(f"queue-depth trace (dynamic k): {bts.queue_depths[:8]} ... "
+          f"stragglers: {bts.stragglers}")
     print(f"datastore: {store.stats()}")
     mean = bts.result["monthly_mean"]
     print(f"\nestimated monthly mean ratings (first 6 months): "
           f"{np.round(mean[:6], 2)}")
+
+    # same job, virtual-time backend at 8 workers: statistics must be
+    # bit-identical (same seed, same engine, same reduce-tree order)
+    sim = Platform(PlatformSpec(
+        platform="BTS", n_workers=8, backend="simulated",
+        knee_bytes=knee)).run(samples, months, ss.NETFLIX_HIGH)
+    same = np.array_equal(sim.result["monthly_mean"], mean)
+    print(f"\nsimulated backend (8 virtual workers): "
+          f"makespan {sim.makespan:.2f}s, statistics bit-identical: {same}")
+    assert same, "backends diverged"
 
 
 if __name__ == "__main__":

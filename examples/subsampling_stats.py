@@ -1,24 +1,31 @@
 """The thesis' two workloads end to end: EAGLET (genetic linkage, heavy-
 tailed family sizes with outliers) and Netflix (high/low confidence), with
-job-level recovery demonstrated by injecting a worker failure.
+job-level recovery demonstrated by injecting a worker failure.  Jobs run
+through ``repro.platform.Platform`` (the tiny-task driver).
 
-Run:  PYTHONPATH=src python examples/subsampling_stats.py
+Run:  python examples/subsampling_stats.py   (or PYTHONPATH=src python ...)
 """
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
 from repro.core import subsample as ss
 from repro.core.recovery import JobRunner, decide_policy
-from repro.core.tiny_task import run_subsampling_job
 from repro.data.synthetic import (EagletSpec, NetflixSpec, eaglet_dataset,
                                   netflix_dataset)
+from repro.platform import Platform, PlatformSpec
 
 
 def eaglet_job():
     samples, months = eaglet_dataset(EagletSpec(n_families=48,
                                                 mean_markers=2048))
-    rep = run_subsampling_job(samples, months, ss.EAGLET, platform="BTS",
-                              n_workers=2, knee_bytes=8 * 2048 * 4)
+    spec = PlatformSpec(platform="BTS", n_workers=2, backend="threaded",
+                        knee_bytes=8 * 2048 * 4)
+    rep = Platform(spec).run(samples, months, ss.EAGLET)
     curve = rep.result["alod"]
     locus = int(np.argmax(curve))
     print(f"EAGLET: {rep.n_tasks} tiny tasks, {rep.makespan:.2f}s, "

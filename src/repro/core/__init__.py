@@ -38,5 +38,9 @@ from repro.core.recovery import (  # noqa: F401
     recovery_overhead_budget,
 )
 from repro.core import subsample  # noqa: F401
-from repro.core import tiny_task  # noqa: F401
 from repro.core import slo  # noqa: F401
+
+# NOTE: repro.core.tiny_task is intentionally NOT imported here — it is a
+# facade over repro.platform (which itself imports repro.core); importing
+# it eagerly would create a package-level cycle.  `from repro.core import
+# tiny_task` still works as a plain submodule import.

@@ -103,6 +103,7 @@ class TwoPhaseScheduler:
         self._completed: set = set()
         self.speculative_launches = 0
         self.results: List[TaskResult] = []
+        self.depth_trace: List[int] = []   # dynamic-k after each completion
         self.avg_exec = None
         self.avg_fetch = None
         self._rng = np.random.default_rng(cfg.seed)
@@ -170,6 +171,7 @@ class TwoPhaseScheduler:
         w = result.worker_id
         out: List[Tuple[int, Task]] = []
         depth = self.queue_depth()
+        self.depth_trace.append(depth)
         # batched refill: top this worker's queue up to k (two-choice may
         # divert some of the batch to a shorter queue)
         while self.backlog and len(self.queues[w]) < depth:
@@ -261,6 +263,8 @@ class SimOutcome:
     results: List[TaskResult]
     per_worker_busy: Dict[int, float]
     restarts: int = 0
+    queue_depths: List[int] = dataclasses.field(default_factory=list)
+    speculative_launches: int = 0
 
 
 def simulate_job(
@@ -378,7 +382,9 @@ def _simulate_once(tasks, workers, params, cfg, restarts) -> SimOutcome:
             makespan = max(makespan, now)
         dispatch(widx, now)
     return SimOutcome(makespan=makespan, results=sched.results,
-                      per_worker_busy=busy, restarts=restarts)
+                      per_worker_busy=busy, restarts=restarts,
+                      queue_depths=list(sched.depth_trace),
+                      speculative_launches=sched.speculative_launches)
 
 
 # ---------------------------------------------------------------------------
@@ -399,9 +405,11 @@ class ThreadedRunner:
         self.run_task = run_task
         self.fetch = fetch
         self.cfg = cfg
+        self.last_scheduler: Optional[TwoPhaseScheduler] = None
 
     def run_job(self, tasks: Sequence[Task]) -> List[TaskResult]:
         sched = TwoPhaseScheduler(self.n_workers, tasks, self.cfg)
+        self.last_scheduler = sched
         lock = threading.Lock()
         results: List[TaskResult] = []
         errors: List[BaseException] = []
@@ -409,6 +417,8 @@ class ThreadedRunner:
         def worker_loop(wid: int):
             while True:
                 with lock:
+                    if errors:                 # a peer died: job-level
+                        return                 # abort (thesis §3.3)
                     t = sched.on_worker_idle(wid)
                     if t is not None:
                         sched.on_task_start(wid, t)

@@ -1,218 +1,55 @@
-"""End-to-end tiny-task job execution — the platform configurations of the
-thesis' evaluation (§4.1.3) as selectable configs:
+"""Back-compat facade over :mod:`repro.platform` (thesis §4.1.3 configs).
 
-  BTS  BashReduce + Task Sizing (kneepoint)        — the contribution
-  BLT  BashReduce + Large Tasks (all samples/node)
-  BTT  BashReduce + Tiniest Tasks (1 sample/task)
-  VH   Vanilla-Hadoop-like: task-level monitoring + heavy startup + per-task
-       launch overhead (JVM) + distributed-FS tax
-  JLH  Job-level-Hadoop-like: monitoring off, startup reduced
-  LH   Lite-Hadoop-like: no DFS interference (results "incorrect" in the
-       thesis; kept for overhead benchmarking only)
-
-Overhead constants are calibrated to the thesis' measurements (Fig 5/6:
-vanilla Hadoop ≈ 4× BashReduce startup, ≈ 21% startup tax from monitoring,
-≈ 20% per-task runtime tax, BashReduce ≈ 12% scheduling overhead).
+The end-to-end tiny-task pipeline — kneepoint sizing, task partitioning,
+scheduling, datastore fetch, streaming reduce — now lives in
+``repro.platform`` (the Platform driver).  This module keeps the original
+entry points (``PLATFORMS``, ``make_tasks``, ``run_subsampling_job``,
+``measure_kneepoint``) so existing callers and tests keep working; new
+code should use :class:`repro.platform.Platform` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import kneepoint as kp
-from repro.core import scheduler as sch
-from repro.core import subsample as ss
-from repro.core.datastore import ReplicatedDataStore
-
-
-@dataclasses.dataclass(frozen=True)
-class PlatformConfig:
-    name: str
-    task_sizing: str           # "kneepoint" | "large" | "tiny"
-    startup_time: float        # one-time job startup (seconds)
-    launch_overhead: float     # per-task launch cost (seconds)
-    monitoring: bool           # task-level monitoring tax
-    recovery: str              # "job" | "task"
-    dfs_tax: float = 0.0       # per-task distributed-FS overhead factor
-
-
-# Calibrated against Fig 5/6 (normalized to BashReduce startup ≈ 1 unit,
-# ≈ 13 s on the thesis cluster; vanilla Hadoop ≈ 4×, monitoring +21%).
-BASH_STARTUP = 0.050           # scaled-down unit startup for this container
-PLATFORMS: Dict[str, PlatformConfig] = {
-    "BTS": PlatformConfig("BTS", "kneepoint", BASH_STARTUP, 0.0005,
-                          monitoring=False, recovery="job"),
-    "BLT": PlatformConfig("BLT", "large", BASH_STARTUP, 0.0005,
-                          monitoring=False, recovery="job"),
-    "BTT": PlatformConfig("BTT", "tiny", BASH_STARTUP, 0.0005,
-                          monitoring=False, recovery="job"),
-    "VH": PlatformConfig("VH", "large", 4.0 * BASH_STARTUP, 0.008,
-                         monitoring=True, recovery="task", dfs_tax=0.25),
-    "JLH": PlatformConfig("JLH", "large", 2.0 * BASH_STARTUP, 0.004,
-                          monitoring=False, recovery="job", dfs_tax=0.25),
-    "LH": PlatformConfig("LH", "large", 2.0 * BASH_STARTUP, 0.004,
-                         monitoring=False, recovery="job", dfs_tax=0.0),
-}
-
-
-@dataclasses.dataclass
-class JobReport:
-    platform: str
-    n_tasks: int
-    task_size_bytes: float
-    makespan: float
-    throughput_bps: float      # input bytes / second
-    startup_time: float
-    result: Optional[dict] = None
-    kneepoint: Optional[kp.KneepointResult] = None
-
-
-def make_tasks(sample_sizes: Sequence[int], sizing: str,
-               knee_bytes: Optional[float], n_workers: int) -> List[sch.Task]:
-    total = float(sum(sample_sizes))
-    if sizing == "tiny":
-        groups = [[i] for i in range(len(sample_sizes))]
-    elif sizing == "large":
-        # all samples partitioned to a node in one file (Sn samples/task)
-        per_node = total / max(n_workers, 1)
-        groups = kp.pack_tasks_by_count(sample_sizes, per_node)
-    else:
-        assert knee_bytes is not None, "kneepoint sizing needs a knee"
-        groups = kp.pack_tasks_by_count(sample_sizes, knee_bytes)
-    out = []
-    for tid, g in enumerate(groups):
-        out.append(sch.Task(
-            task_id=tid, sample_ids=tuple(g),
-            size_bytes=float(sum(sample_sizes[i] for i in g))))
-    return out
+from repro.platform.compute import pad_to_common
+from repro.platform.driver import (  # noqa: F401  (re-exported API)
+    BASH_STARTUP,
+    PLATFORMS,
+    JobReport,
+    Platform,
+    PlatformConfig,
+    PlatformSpec,
+    make_tasks,
+    measure_kneepoint,
+)
 
 
 def run_subsampling_job(
     samples: Dict[int, np.ndarray],
     months: Dict[int, np.ndarray],
-    workload: ss.SubsampleWorkload,
+    workload,
     *,
     platform: str = "BTS",
     n_workers: int = 4,
     knee_bytes: Optional[float] = None,
-    datastore: Optional[ReplicatedDataStore] = None,
+    datastore=None,
     seed: int = 0,
 ) -> JobReport:
-    """Execute a subsampling job on the threaded runner (real wall time).
+    """Execute a subsampling job on the threaded backend (real wall time).
 
-    The offline kneepoint phase, if needed and not supplied, measures the
-    task-size→cost curve on this node first (its time is charged to the
-    report, matching the thesis' accounting: offline ≈ 3% of online).
+    Thin wrapper over :class:`repro.platform.Platform`; the offline
+    kneepoint phase, if needed and not supplied, runs first and is charged
+    to the report (thesis accounting: offline ≈ 3% of online).
     """
-    plat = PLATFORMS[platform]
-    sizes = [samples[i].nbytes for i in sorted(samples)]
-    ids = sorted(samples)
-
-    knee_res = None
-    if plat.task_sizing == "kneepoint" and knee_bytes is None:
-        knee_res, knee_bytes = measure_kneepoint(samples, months, workload)
-
-    tasks = make_tasks(sizes, plat.task_sizing, knee_bytes, n_workers)
-
-    if datastore is not None:
-        datastore.put_all({i: samples[i] for i in ids})
-
-    def fetch(task: sch.Task):
-        if datastore is not None:
-            for sid in task.sample_ids:
-                datastore.fetch(ids[sid])
-
-    # uniform task shape: every task's block is padded to the config's
-    # (max count × pow2 length) so ONE compiled kernel serves the whole
-    # job — the thesis' BashReduce ships precompiled task binaries, so
-    # compilation is one-time startup cost (Fig 5), not a per-task cost
-    max_count = max(len(t.sample_ids) for t in tasks)
-
-    def build_block(task: sch.Task):
-        rows = [samples[ids[i]] for i in task.sample_ids]
-        mrows = [months[ids[i]] for i in task.sample_ids]
-        while len(rows) < max_count:           # wrap-pad short tasks
-            rows.append(rows[len(rows) % len(task.sample_ids)])
-            mrows.append(mrows[len(mrows) % len(task.sample_ids)])
-        return (np.stack(_pad_to_common(rows)),
-                np.stack(_pad_to_common(mrows)))
-
-    def run_task(task: sch.Task):
-        if plat.launch_overhead:
-            time.sleep(plat.launch_overhead)
-        block, mo = build_block(task)
-        t0 = time.perf_counter()
-        out = ss.run_map_task_np(block, mo, seed + task.task_id, workload)
-        if plat.dfs_tax:
-            time.sleep(plat.dfs_tax * (time.perf_counter() - t0))
-        if plat.monitoring:
-            time.sleep(0.20 * (time.perf_counter() - t0))   # Fig 6 tax
-        return out
-
-    # warm one kernel per distinct block shape (outlier tasks land in
-    # larger pow2 length buckets) — compile is startup, not per-task
-    seen_shapes = set()
-    for t in tasks:
-        wb, wm = build_block(t)
-        if wb.shape not in seen_shapes:
-            seen_shapes.add(wb.shape)
-            ss.run_map_task_np(wb, wm, seed, workload)
-
-    cfg = sch.SchedulerConfig(recovery=plat.recovery)
-    runner = sch.ThreadedRunner(n_workers, run_task, fetch=fetch, cfg=cfg)
-    t0 = time.perf_counter()
-    time.sleep(plat.startup_time)
-    results = runner.run_job(tasks)
-    makespan = time.perf_counter() - t0
-    if datastore is not None:
-        for r in results:
-            datastore.report_exec_time(r.exec_time)
-    combined = ss.reduce_stats([r.value for r in results],
-                               workload.statistic)
-    total_bytes = float(sum(sizes))
-    return JobReport(
-        platform=platform, n_tasks=len(tasks),
-        task_size_bytes=(knee_bytes or total_bytes / max(len(tasks), 1)),
-        makespan=makespan,
-        throughput_bps=total_bytes / makespan,
-        startup_time=plat.startup_time,
-        result=combined, kneepoint=knee_res)
-
-
-def measure_kneepoint(samples: Dict[int, np.ndarray],
-                      months: Dict[int, np.ndarray],
-                      workload: ss.SubsampleWorkload,
-                      sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
-                      ) -> tuple:
-    """Offline phase (Fig 3): run isolated map tasks of increasing block
-    size, record per-sample wall time, find the knee."""
-    ids = sorted(samples)
-    sample_bytes = np.mean([samples[i].nbytes for i in ids])
-
-    def exec_task(n: int) -> float:
-        n = min(n, len(ids))
-        block = np.stack(_pad_to_common([samples[i] for i in ids[:n]]))
-        mo = np.stack(_pad_to_common([months[i] for i in ids[:n]]))
-        t0 = time.perf_counter()
-        ss.run_map_task_np(block, mo, 0, workload)
-        return (time.perf_counter() - t0) / n
-
-    curve = kp.measure_curve(exec_task, [s for s in sizes
-                                         if s <= len(ids)], repeats=3)
-    curve = [kp.CurvePoint(p.task_size * sample_bytes, p.cost)
-             for p in curve]
-    res = kp.find_kneepoint(curve)
-    return res, res.task_size
+    spec = PlatformSpec(platform=platform, n_workers=n_workers,
+                        backend="threaded", knee_bytes=knee_bytes,
+                        seed=seed)
+    return Platform(spec, datastore=datastore).run(samples, months, workload)
 
 
 def _pad_to_common(arrays: List[np.ndarray]) -> List[np.ndarray]:
-    """Samples are heavy-tailed (§3.2.1 outliers); pad to the block max,
-    rounded up to a power of two so jit recompiles stay bounded."""
-    n = max(a.shape[0] for a in arrays)
-    n = 1 << (n - 1).bit_length()
-    return [np.pad(a, (0, n - a.shape[0]), mode="wrap")
-            if a.shape[0] < n else a for a in arrays]
+    """Deprecated alias — moved to ``repro.platform.compute.pad_to_common``."""
+    return pad_to_common(arrays)

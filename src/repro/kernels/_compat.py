@@ -1,0 +1,17 @@
+"""jax version compatibility for the Pallas TPU kernels."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    """TPU compiler params across the jax rename (``TPUCompilerParams``
+    became ``CompilerParams`` around 0.4.38)."""
+    cls = (getattr(pltpu, "CompilerParams", None)
+           or getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "this jax build exposes neither pltpu.CompilerParams nor "
+            "pltpu.TPUCompilerParams; cannot set TPU compiler params")
+    return cls(**kwargs)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import compiler_params
+
 NEG_INF = -1e30
 
 
@@ -107,7 +109,7 @@ def flash_attention(
             pltpu.VMEM((bq,), jnp.float32),       # l (running denom)
             pltpu.VMEM((bq, hd), jnp.float32),    # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

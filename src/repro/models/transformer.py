@@ -27,6 +27,20 @@ from repro.models import rwkv6 as RW
 from repro.parallel.sharding import EMBED, LAYERS, ParamDef, is_param_def
 
 
+@jax.custom_jvp
+def _diff_barrier(x):
+    """``optimization_barrier`` that stays differentiable on jax builds
+    (< 0.4.38) where the primitive has no differentiation rule: the
+    primal is barriered, the tangent passes through untouched."""
+    return jax.lax.optimization_barrier(x)
+
+
+@_diff_barrier.defjvp
+def _diff_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t
+
+
 # ---------------------------------------------------------------------------
 # Per-layer definitions
 # ---------------------------------------------------------------------------
@@ -304,7 +318,7 @@ def forward(
                 # convert of this carry out of the (remat) backward loop,
                 # which would materialize an f32 copy of the whole saved
                 # stack (L × tokens × d) at once
-                x = jax.lax.optimization_barrier(x)
+                x = _diff_barrier(x)
                 bp, bc = xs
                 ncs = []
                 for p, kind in enumerate(pat_kinds):

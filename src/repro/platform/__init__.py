@@ -1,0 +1,39 @@
+"""``repro.platform`` — the end-to-end tiny-task platform driver.
+
+Composes the thesis' pieces (kneepoint task sizing → replicated datastore →
+two-phase dynamic scheduler → streaming reduce) into one pipeline behind
+:class:`Platform`, with threaded (real wall time) and simulated
+(virtual-time scale-out) execution backends behind one protocol.  See
+DESIGN.md §1-§2 and the thesis §3 (arXiv:1404.4653).
+"""
+
+from repro.platform.backend import (  # noqa: F401
+    BackendOutcome,
+    PlatformBackend,
+    SimulatedBackend,
+    ThreadedBackend,
+)
+from repro.platform.compute import (  # noqa: F401
+    MOMENTS,
+    MomentsSpec,
+    build_block,
+    pad_to_common,
+    resolve_engine,
+    run_map_task,
+)
+from repro.platform.driver import (  # noqa: F401
+    BASH_STARTUP,
+    PLATFORMS,
+    JobReport,
+    Platform,
+    PlatformConfig,
+    PlatformSpec,
+    make_tasks,
+    measure_kneepoint,
+    measure_per_sample_cost,
+)
+from repro.platform.reduce import (  # noqa: F401
+    StreamingReduceTree,
+    finalize_stats,
+    tree_add,
+)

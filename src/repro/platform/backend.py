@@ -1,0 +1,206 @@
+"""Execution backends behind one protocol (thesis §4 evaluation drivers).
+
+``PlatformBackend`` is the seam between the driver's job plan (tasks +
+compute + fetch closures) and an execution substrate:
+
+  * :class:`ThreadedBackend` — real threads, real wall time, the two-phase
+    scheduler's :class:`~repro.core.scheduler.ThreadedRunner` (thesis §3.4
+    phase 1/2 with work stealing).  Platform overheads (startup, per-task
+    launch, DFS tax, task-level monitoring — Fig 5/6) are *spent* as real
+    sleeps.
+  * :class:`SimulatedBackend` — the discrete-event simulator
+    (:func:`~repro.core.scheduler.simulate_job`) under virtual time, for
+    scale-out / elasticity / heterogeneity studies on a one-core container.
+    Per-task costs are **measured on the real compute** first (all tasks,
+    or one representative per block shape), then the same scheduler policy
+    runs against those costs at any worker count.  Overheads are *charged*
+    in virtual time (monitoring via the scheduler's ``cost_tl`` when the
+    platform uses task-level recovery, DFS as an execution-time factor).
+
+Both backends call the identical compute closure with the identical
+per-task seed and stream partials into the same deterministic reduce tree,
+so job statistics are bit-identical across backends for a fixed seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
+
+from repro.core import scheduler as sch
+
+Emit = Callable[[int, Any], None]
+Compute = Callable[[sch.Task], Any]
+Fetch = Optional[Callable[[sch.Task], Any]]
+
+
+@dataclasses.dataclass
+class BackendOutcome:
+    makespan: float                      # startup + execution (s)
+    results: List[sch.TaskResult]
+    queue_depths: List[int]              # dynamic-k trace (thesis §3.5)
+    speculative_launches: int = 0
+    restarts: int = 0
+    per_worker_busy: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    calibration_seconds: float = 0.0     # sim: real compute spent measuring
+
+
+class PlatformBackend(Protocol):
+    name: str
+
+    def run(self, tasks: Sequence[sch.Task], *, compute: Optional[Compute],
+            fetch: Fetch, plat, cfg: sch.SchedulerConfig, emit: Emit,
+            shape_key: Optional[Callable[[sch.Task], Any]] = None,
+            ) -> BackendOutcome:
+        """Execute ``tasks``; stream each task's partial through ``emit``.
+        ``shape_key(task)`` identifies the task's compiled block shape
+        (per-shape cost calibration in the simulator)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Real threads, real wall time
+# ---------------------------------------------------------------------------
+
+
+class ThreadedBackend:
+    name = "threaded"
+
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+
+    def run(self, tasks, *, compute, fetch, plat, cfg, emit,
+            shape_key=None):
+        del shape_key                      # real execution: no calibration
+        assert compute is not None, "threaded backend needs real compute"
+
+        def run_task(task: sch.Task):
+            if plat.launch_overhead:
+                time.sleep(plat.launch_overhead)
+            t0 = time.perf_counter()
+            value = compute(task)
+            took = time.perf_counter() - t0
+            if plat.dfs_tax:
+                time.sleep(plat.dfs_tax * took)
+            if plat.monitoring:
+                time.sleep(0.20 * took)           # Fig 6 monitoring tax
+            emit(task.task_id, value)
+            return value
+
+        runner = sch.ThreadedRunner(self.n_workers, run_task, fetch=fetch,
+                                    cfg=cfg)
+        t0 = time.perf_counter()
+        time.sleep(plat.startup_time)
+        results = runner.run_job(tasks)
+        makespan = time.perf_counter() - t0
+        sched = runner.last_scheduler
+        return BackendOutcome(
+            makespan=makespan, results=results,
+            queue_depths=list(sched.depth_trace) if sched else [],
+            speculative_launches=sched.speculative_launches if sched else 0)
+
+
+# ---------------------------------------------------------------------------
+# Virtual time over measured costs
+# ---------------------------------------------------------------------------
+
+
+class SimulatedBackend:
+    """Scale-out in virtual time, calibrated from real execution.
+
+    ``compute_values=True`` (default) executes *every* task's compute for
+    real — once, single-threaded — measuring per-task exec/fetch seconds
+    and emitting the true partials; the scheduler then replays those costs
+    at ``workers`` scale.  ``compute_values=False`` measures one
+    representative task per distinct block shape (fast; no statistics).
+    ``exec_model`` bypasses measurement entirely (cost-model studies over
+    datasets too large to materialize).
+    """
+
+    name = "simulated"
+
+    def __init__(self, workers, *, compute_values: bool = True,
+                 startup_scale: float = 1.0,
+                 exec_model: Optional[Callable[[sch.Task], float]] = None,
+                 fetch_model: Optional[Callable[[sch.Task], float]] = None,
+                 max_restarts: int = 3):
+        if isinstance(workers, int):
+            workers = [sch.SimWorker(i) for i in range(workers)]
+        self.workers = list(workers)
+        self.compute_values = compute_values
+        self.startup_scale = startup_scale
+        self.exec_model = exec_model
+        self.fetch_model = fetch_model
+        self.max_restarts = max_restarts
+
+    def _measure(self, tasks, compute, fetch, emit, shape_key):
+        """Calibration pass: real compute → per-task costs (+ partials).
+        ``shape_key`` buckets tasks by compiled block shape so heavy-tail
+        outlier tasks (padded longer) get their own measurement."""
+        if shape_key is None:
+            shape_key = lambda t: len(t.sample_ids)      # noqa: E731
+        exec_s: Dict[int, float] = {}
+        fetch_s: Dict[int, float] = {}
+        rep_exec: Dict[Any, float] = {}
+        rep_fetch: Dict[Any, float] = {}
+        t_cal = time.perf_counter()
+        for task in tasks:
+            key = shape_key(task)
+            if not self.compute_values and key in rep_exec:
+                exec_s[task.task_id] = rep_exec[key]
+                fetch_s[task.task_id] = rep_fetch[key]
+                continue
+            tf = 0.0
+            if fetch is not None:
+                t0 = time.perf_counter()
+                fetch(task)
+                tf = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            value = compute(task)
+            te = time.perf_counter() - t0
+            exec_s[task.task_id] = te
+            fetch_s[task.task_id] = tf
+            rep_exec[key] = te
+            rep_fetch[key] = tf
+            if self.compute_values:
+                emit(task.task_id, value)
+        return exec_s, fetch_s, time.perf_counter() - t_cal
+
+    def run(self, tasks, *, compute, fetch, plat, cfg, emit,
+            shape_key=None):
+        calibration = 0.0
+        if self.exec_model is not None:
+            exec_time = self.exec_model
+            fetch_time = self.fetch_model or (
+                lambda t: 1e-4 * len(t.sample_ids))
+        else:
+            assert compute is not None, "need compute or an exec_model"
+            exec_s, fetch_s, calibration = self._measure(
+                tasks, compute, fetch, emit, shape_key)
+            exec_time = lambda t: exec_s[t.task_id]          # noqa: E731
+            if self.fetch_model is not None:
+                fetch_time = self.fetch_model
+            elif fetch is not None:
+                fetch_time = lambda t: fetch_s[t.task_id]    # noqa: E731
+            else:
+                fetch_time = lambda t: 1e-4 * len(t.sample_ids)  # noqa: E731
+
+        # DFS interference is an execution-time factor in virtual time;
+        # task-level monitoring is charged once, by the scheduler's
+        # cost_tl multiplier when plat.recovery == "task" (Fig 6).
+        dfs = 1.0 + plat.dfs_tax
+        params = sch.SimParams(
+            exec_time=lambda t: exec_time(t) * dfs,
+            fetch_time=fetch_time,
+            launch_overhead=plat.launch_overhead,
+            startup_time=plat.startup_time * self.startup_scale)
+        out = sch.simulate_job(tasks, self.workers, params, cfg,
+                               max_restarts=self.max_restarts)
+        return BackendOutcome(
+            makespan=out.makespan, results=out.results,
+            queue_depths=list(out.queue_depths),
+            speculative_launches=out.speculative_launches,
+            restarts=out.restarts, per_worker_busy=out.per_worker_busy,
+            calibration_seconds=calibration)

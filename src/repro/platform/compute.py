@@ -1,0 +1,205 @@
+"""Map-task compute engines for the platform driver (thesis §3.1, Fig 1).
+
+The driver resolves ONE engine per job so every backend executes the exact
+same per-task computation (this is what makes the threaded and simulated
+backends bit-identical for a fixed seed):
+
+  ``pallas``  — the TPU Pallas ``subsample_gather`` kernel (scalar-prefetch
+                row gather + VMEM-resident moment accumulators) for the
+                row-subsampling ``moments`` statistic; interpret mode on
+                CPU, compiled on TPU.
+  ``jnp``     — the jitted ``repro.core.subsample.map_task`` engine for the
+                paper workloads (ALOD / monthly means); on TPU its gather
+                is served by the same kernel family.
+  ``numpy``   — pure-NumPy reference path, used when JAX is unavailable
+                (hermetic containers) or forced for debugging.  Mirrors the
+                jnp semantics but draws indices from NumPy's RNG, so it is
+                statistically — not bitwise — equivalent to ``jnp``.
+
+Hardware adaptation (DESIGN.md §2): block building pads samples to a
+common power-of-two length so one compiled kernel serves every task —
+compilation is startup cost (thesis Fig 5), never a per-task cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+try:  # JAX is the primary engine but the platform must degrade gracefully
+    import jax  # noqa: F401
+
+    HAVE_JAX = True
+except Exception:  # pragma: no cover - exercised only in JAX-less images
+    HAVE_JAX = False
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentsSpec:
+    """Row-subsampling workload whose map task IS the Pallas kernel's
+    semantics: each draw gathers ``draw_size`` random *rows* (samples) of
+    the task block and accumulates (Σrow, Σrow²)."""
+
+    name: str = "moments"
+    statistic: str = "moments"
+    draws: int = 8
+    draw_size: int = 64
+    grid: int = 0             # unused; kept for workload interface parity
+
+
+MOMENTS = MomentsSpec()
+
+
+def resolve_engine(statistic: str, prefer: str = "auto") -> str:
+    """Pick the compute engine once per job (never per task)."""
+    if prefer != "auto":
+        if prefer in ("pallas", "jnp") and not HAVE_JAX:
+            raise RuntimeError(f"engine {prefer!r} requires JAX")
+        if prefer == "pallas" and statistic != "moments":
+            raise ValueError(
+                "engine 'pallas' computes the row-subsample 'moments' "
+                f"statistic; workload statistic is {statistic!r} — use "
+                "engine 'jnp' (or 'auto')")
+        return prefer
+    if not HAVE_JAX:
+        return "numpy"
+    return "pallas" if statistic == "moments" else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Block building — uniform task shapes (thesis §3.2.1 outlier handling)
+# ---------------------------------------------------------------------------
+
+
+def padded_len(longest: int, min_len: int = 0) -> int:
+    """The block length ``pad_to_common`` will produce for rows whose
+    longest member is ``longest`` — the single source of the padding
+    policy (shape keys for warmup/calibration derive from this too)."""
+    n = max(longest, min_len, 1)
+    return 1 << (n - 1).bit_length()
+
+
+def pad_to_common(arrays: List[np.ndarray],
+                  min_len: int = 0) -> List[np.ndarray]:
+    """Samples are heavy-tailed (§3.2.1 outliers); pad to the block max,
+    rounded up to a power of two so jit recompiles stay bounded.
+    ``min_len`` forces a job-global length (statistics whose partial shape
+    depends on sample length must align across tasks)."""
+    n = padded_len(max(a.shape[0] for a in arrays), min_len)
+    return [np.pad(a, (0, n - a.shape[0]), mode="wrap")
+            if a.shape[0] < n else a for a in arrays]
+
+
+def partial_pad_len(statistic: str, samples: Dict[int, np.ndarray]) -> int:
+    """Job-global pad length: grid statistics (alod/monthly_mean) emit
+    fixed-size partials so per-block padding suffices (0); per-column
+    statistics (moments) must pad every block to the dataset max."""
+    if statistic == "moments":
+        return max(a.shape[0] for a in samples.values())
+    return 0
+
+
+def build_block(samples: Dict[int, np.ndarray],
+                months: Dict[int, np.ndarray],
+                ids: Sequence[int],
+                sample_ids: Sequence[int],
+                max_count: int,
+                pad_len: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Materialize one task's [count, len] block, wrap-padded to the job's
+    max task count so one compiled kernel serves the whole job."""
+    rows = [samples[ids[i]] for i in sample_ids]
+    mrows = [months[ids[i]] for i in sample_ids]
+    while len(rows) < max_count:
+        rows.append(rows[len(rows) % len(sample_ids)])
+        mrows.append(mrows[len(mrows) % len(sample_ids)])
+    return (np.stack(pad_to_common(rows, pad_len)),
+            np.stack(pad_to_common(mrows, pad_len)))
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+
+def run_map_task(block: np.ndarray, months: np.ndarray, seed: int,
+                 workload, engine: str) -> Dict[str, np.ndarray]:
+    """One map task: subsample the block, compute the statistic partial.
+
+    Partials are plain dicts of NumPy arrays so the reduce tree can combine
+    them with element-wise addition regardless of engine or backend.
+    """
+    if engine == "jnp":
+        from repro.core import subsample as ss
+        return ss.run_map_task_np(block, months, seed, workload)
+    if engine == "pallas":
+        return _moments_pallas(block, seed, workload)
+    if engine == "numpy":
+        return _map_task_numpy(block, months, seed, workload)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def _moments_pallas(block: np.ndarray, seed: int,
+                    workload) -> Dict[str, np.ndarray]:
+    """Route the Pallas kernel in as the map-task compute (tentpole):
+    the random row gather + (Σ, Σ²) accumulation happen inside
+    ``repro.kernels.subsample_gather`` (scalar-prefetch DMA pipeline)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    ns = block.shape[0]
+    n_idx = workload.draws * workload.draw_size
+    idx = jax.random.randint(jax.random.PRNGKey(seed), (n_idx,), 0, ns,
+                             dtype=jnp.int32)
+    _, stats = ops.subsample_gather(jnp.asarray(block), idx)
+    stats = np.asarray(stats, np.float32)
+    return {"sum": stats[0], "sumsq": stats[1],
+            "count": np.asarray(float(n_idx), np.float32)}
+
+
+def _map_task_numpy(block: np.ndarray, months: np.ndarray, seed: int,
+                    workload) -> Dict[str, np.ndarray]:
+    """Pure-NumPy reference path (mirrors ``subsample.map_task`` /
+    ``kernels.ref.subsample_stats_ref``)."""
+    rng = np.random.default_rng(seed)
+    ns, sl = block.shape
+    stat = workload.statistic
+
+    if stat == "moments":
+        idx = rng.integers(0, ns, workload.draws * workload.draw_size)
+        rows = block[idx].astype(np.float32)
+        return {"sum": rows.sum(axis=0), "sumsq": (rows * rows).sum(axis=0),
+                "count": np.asarray(float(len(idx)), np.float32)}
+
+    draws, ds, grid = workload.draws, workload.draw_size, workload.grid
+    idx = rng.integers(0, sl, (draws, ns, ds))
+    gathered = np.take_along_axis(block[None, :, :], idx, axis=2)
+    gathered = np.swapaxes(gathered, 0, 1)          # [ns, draws, ds]
+    idx = np.swapaxes(idx, 0, 1)
+
+    if stat == "alod":
+        pos = idx.astype(np.float32) / sl
+        cell = np.clip((pos * grid).astype(np.int32), 0, grid - 1)
+        mean = gathered.mean(axis=2, keepdims=True)
+        sd = gathered.std(axis=2, keepdims=True) + 1e-6
+        z = np.abs((gathered - mean) / sd)
+        curve = np.zeros(grid, np.float32)
+        hits = np.zeros(grid, np.float32)
+        np.add.at(curve, cell.reshape(-1), z.reshape(-1))
+        np.add.at(hits, cell.reshape(-1), 1.0)
+        return {"sum_curve": curve, "hits": hits,
+                "count": np.asarray(float(ns * draws), np.float32)}
+
+    if stat == "monthly_mean":
+        m = np.take_along_axis(months[:, None, :], idx, axis=2)
+        m = np.clip(m, 0, grid - 1)
+        sums = np.zeros(grid, np.float32)
+        cnts = np.zeros(grid, np.float32)
+        np.add.at(sums, m.reshape(-1), gathered.reshape(-1))
+        np.add.at(cnts, m.reshape(-1), 1.0)
+        return {"sum": sums, "count": cnts}
+
+    raise ValueError(f"unknown statistic {stat!r}")

@@ -1,0 +1,438 @@
+"""End-to-end tiny-task platform driver (thesis §3, Fig 1/4).
+
+One object composes the pieces the thesis argues only win *together*:
+
+  kneepoint task sizing (§3.2)  →  datastore distribution (§3.5)
+      →  two-phase dynamic scheduling (§3.4)  →  streaming reduce (§3.1)
+
+:class:`Platform` takes a dataset (sample dict) + a stats workload (or a
+custom map callable), runs the offline kneepoint phase to size tasks,
+partitions them through the replicated :class:`~repro.core.datastore`
+shards, executes them on a pluggable backend — real threads
+(:class:`~repro.platform.backend.ThreadedBackend`) or virtual-time
+scale-out (:class:`~repro.platform.backend.SimulatedBackend`) — streams
+partials through the deterministic async reduce tree, and emits a
+structured :class:`JobReport` (per-phase timings, queue-depth trace,
+cache-proxy miss curve, straggler counts).
+
+The platform *configurations* of the evaluation (§4.1.3) select overhead
+profiles:
+
+  BTS  BashReduce + Task Sizing (kneepoint)        — the contribution
+  BLT  BashReduce + Large Tasks (all samples/node)
+  BTT  BashReduce + Tiniest Tasks (1 sample/task)
+  VH   Vanilla-Hadoop-like: task-level monitoring + heavy startup + per-task
+       launch overhead (JVM) + distributed-FS tax
+  JLH  Job-level-Hadoop-like: monitoring off, startup reduced
+  LH   Lite-Hadoop-like: no DFS interference (results "incorrect" in the
+       thesis; kept for overhead benchmarking only)
+
+Overhead constants are calibrated to the thesis' measurements (Fig 5/6:
+vanilla Hadoop ≈ 4× BashReduce startup, ≈ 21% startup tax from monitoring,
+≈ 20% per-task runtime tax, BashReduce ≈ 12% scheduling overhead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import kneepoint as kp
+from repro.core import scheduler as sch
+from repro.platform import compute as pc
+from repro.platform.backend import (
+    BackendOutcome,
+    PlatformBackend,
+    SimulatedBackend,
+    ThreadedBackend,
+)
+from repro.platform.reduce import StreamingReduceTree, finalize_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformConfig:
+    name: str
+    task_sizing: str           # "kneepoint" | "large" | "tiny"
+    startup_time: float        # one-time job startup (seconds)
+    launch_overhead: float     # per-task launch cost (seconds)
+    monitoring: bool           # task-level monitoring tax
+    recovery: str              # "job" | "task"
+    dfs_tax: float = 0.0       # per-task distributed-FS overhead factor
+
+
+# Calibrated against Fig 5/6 (normalized to BashReduce startup ≈ 1 unit,
+# ≈ 13 s on the thesis cluster; vanilla Hadoop ≈ 4×, monitoring +21%).
+BASH_STARTUP = 0.050           # scaled-down unit startup for this container
+PLATFORMS: Dict[str, PlatformConfig] = {
+    "BTS": PlatformConfig("BTS", "kneepoint", BASH_STARTUP, 0.0005,
+                          monitoring=False, recovery="job"),
+    "BLT": PlatformConfig("BLT", "large", BASH_STARTUP, 0.0005,
+                          monitoring=False, recovery="job"),
+    "BTT": PlatformConfig("BTT", "tiny", BASH_STARTUP, 0.0005,
+                          monitoring=False, recovery="job"),
+    "VH": PlatformConfig("VH", "large", 4.0 * BASH_STARTUP, 0.008,
+                         monitoring=True, recovery="task", dfs_tax=0.25),
+    "JLH": PlatformConfig("JLH", "large", 2.0 * BASH_STARTUP, 0.004,
+                          monitoring=False, recovery="job", dfs_tax=0.25),
+    "LH": PlatformConfig("LH", "large", 2.0 * BASH_STARTUP, 0.004,
+                         monitoring=False, recovery="job", dfs_tax=0.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """Everything that selects a job's execution, in one value."""
+
+    platform: str = "BTS"                  # PLATFORMS key
+    n_workers: int = 2
+    backend: str = "threaded"              # "threaded" | "simulated"
+    engine: str = "auto"                   # compute.resolve_engine
+    knee_bytes: Optional[float] = None     # skip the offline phase if set
+    kneepoint_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+    seed: int = 0
+    task_sizing: Optional[str] = None      # override the config's sizing
+    startup_time: Optional[float] = None   # override the config's startup
+    startup_scale: float = 1.0             # sim: thesis-scale startup
+    compute_values: bool = True            # sim: real partials vs cost-only
+    sim_workers: Optional[Tuple[sch.SimWorker, ...]] = None
+    scheduler: Optional[sch.SchedulerConfig] = None
+
+
+@dataclasses.dataclass
+class JobReport:
+    """Structured job outcome — superset of the legacy tiny_task report."""
+
+    platform: str
+    n_tasks: int
+    task_size_bytes: float
+    makespan: float
+    throughput_bps: float      # input bytes / second
+    startup_time: float
+    result: Optional[dict] = None
+    kneepoint: Optional[kp.KneepointResult] = None
+    # platform-driver extensions
+    backend: str = "threaded"
+    engine: str = "auto"
+    phases: Dict[str, float] = dataclasses.field(default_factory=dict)
+    queue_depths: List[int] = dataclasses.field(default_factory=list)
+    miss_curve: Tuple[kp.CurvePoint, ...] = ()
+    max_task_bytes: float = 0.0
+    stragglers: int = 0
+    speculative_launches: int = 0
+    restarts: int = 0
+    calibration_seconds: float = 0.0
+    datastore_stats: Optional[Dict[str, float]] = None
+    reduce_info: Optional[Dict[str, float]] = None
+
+
+def make_tasks(sample_sizes: Sequence[int], sizing: str,
+               knee_bytes: Optional[float], n_workers: int) -> List[sch.Task]:
+    """Partition samples into tasks per the config's sizing policy."""
+    total = float(sum(sample_sizes))
+    if sizing == "tiny":
+        groups = [[i] for i in range(len(sample_sizes))]
+    elif sizing == "large":
+        # all samples partitioned to a node in one file (Sn samples/task)
+        per_node = total / max(n_workers, 1)
+        groups = kp.pack_tasks_by_count(sample_sizes, per_node)
+    else:
+        assert knee_bytes is not None, "kneepoint sizing needs a knee"
+        groups = kp.pack_tasks_by_count(sample_sizes, knee_bytes)
+    out = []
+    for tid, g in enumerate(groups):
+        out.append(sch.Task(
+            task_id=tid, sample_ids=tuple(g),
+            size_bytes=float(sum(sample_sizes[i] for i in g))))
+    return out
+
+
+def measure_kneepoint(samples: Dict[int, np.ndarray],
+                      months: Dict[int, np.ndarray],
+                      workload,
+                      sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
+                      *,
+                      engine: str = "auto",
+                      map_fn: Optional["MapFn"] = None,
+                      ) -> Tuple[kp.KneepointResult, float]:
+    """Offline phase (Fig 3): run isolated map tasks of increasing block
+    size, record per-sample wall time (the cost-per-byte miss proxy of
+    DESIGN.md §2), find the knee.  With ``map_fn`` the curve is measured
+    on the custom compute that will actually execute."""
+    ids = sorted(samples)
+    sample_bytes = np.mean([samples[i].nbytes for i in ids])
+    eng = (None if map_fn is not None
+           else pc.resolve_engine(workload.statistic, engine))
+
+    def exec_task(n: int) -> float:
+        n = min(n, len(ids))
+        block = np.stack(pc.pad_to_common([samples[i] for i in ids[:n]]))
+        mo = np.stack(pc.pad_to_common([months[i] for i in ids[:n]]))
+        t0 = time.perf_counter()
+        if map_fn is not None:
+            probe = sch.Task(task_id=-1, sample_ids=tuple(range(n)),
+                             size_bytes=float(n * sample_bytes))
+            map_fn(probe, block, mo, 0)
+        else:
+            pc.run_map_task(block, mo, 0, workload, eng)
+        return (time.perf_counter() - t0) / n
+
+    curve = kp.measure_curve(exec_task, [s for s in sizes
+                                         if s <= len(ids)], repeats=3)
+    curve = [kp.CurvePoint(p.task_size * sample_bytes, p.cost)
+             for p in curve]
+    res = kp.find_kneepoint(curve)
+    return res, res.task_size
+
+
+def measure_per_sample_cost(samples: Dict[int, np.ndarray],
+                            months: Dict[int, np.ndarray],
+                            workload, *, block: int = 8,
+                            engine: str = "auto", repeats: int = 3) -> float:
+    """Median seconds per sample for a ``block``-sized map task — the
+    calibration input for :meth:`Platform.run_scaleout` cost models."""
+    ids = sorted(samples)[:block]
+    arr = np.stack(pc.pad_to_common([samples[i] for i in ids]))
+    mo = np.stack(pc.pad_to_common([months[i] for i in ids]))
+    eng = pc.resolve_engine(workload.statistic, engine)
+    pc.run_map_task(arr, mo, 0, workload, eng)           # warm/compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        pc.run_map_task(arr, mo, 0, workload, eng)
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] / len(ids)
+
+
+MapFn = Callable[[sch.Task, np.ndarray, np.ndarray, int], Dict[str, Any]]
+
+
+class Platform:
+    """The end-to-end driver.  ``datastore`` is an optional
+    :class:`~repro.core.datastore.ReplicatedDataStore`; ``map_fn`` replaces
+    the workload engine with a custom per-task callable
+    ``(task, block, months, seed) -> partial`` (overhead benchmarks)."""
+
+    def __init__(self, spec: PlatformSpec = PlatformSpec(), *,
+                 datastore=None, map_fn: Optional[MapFn] = None):
+        self.spec = spec
+        self.datastore = datastore
+        self.map_fn = map_fn
+
+    # -- config plumbing -----------------------------------------------------
+    def _platform_config(self) -> PlatformConfig:
+        if self.spec.platform not in PLATFORMS:
+            raise ValueError(
+                f"unknown platform config {self.spec.platform!r}; "
+                f"choose one of {sorted(PLATFORMS)}")
+        plat = PLATFORMS[self.spec.platform]
+        overrides = {}
+        if self.spec.task_sizing is not None:
+            overrides["task_sizing"] = self.spec.task_sizing
+        if self.spec.startup_time is not None:
+            overrides["startup_time"] = self.spec.startup_time
+        return dataclasses.replace(plat, **overrides) if overrides else plat
+
+    def _n_exec_workers(self) -> int:
+        if self.spec.backend == "simulated" and self.spec.sim_workers:
+            return len(self.spec.sim_workers)
+        return self.spec.n_workers
+
+    def _scheduler_cfg(self, plat: PlatformConfig) -> sch.SchedulerConfig:
+        if self.spec.scheduler is not None:
+            return self.spec.scheduler
+        return sch.SchedulerConfig(recovery=plat.recovery,
+                                   seed=self.spec.seed)
+
+    def _backend(self) -> PlatformBackend:
+        if self.spec.backend == "threaded":
+            return ThreadedBackend(self.spec.n_workers)
+        if self.spec.backend == "simulated":
+            workers = (list(self.spec.sim_workers) if self.spec.sim_workers
+                       else self.spec.n_workers)
+            return SimulatedBackend(workers,
+                                    compute_values=self.spec.compute_values,
+                                    startup_scale=self.spec.startup_scale)
+        raise ValueError(f"unknown backend {self.spec.backend!r}")
+
+    # -- the full data path --------------------------------------------------
+    def run(self, samples: Dict[int, np.ndarray],
+            months: Dict[int, np.ndarray], workload) -> JobReport:
+        """Kneepoint → distribute → schedule/execute → streaming reduce."""
+        spec = self.spec
+        plat = self._platform_config()
+        ids = sorted(samples)
+        sizes = [samples[i].nbytes for i in ids]
+        total_bytes = float(sum(sizes))
+        engine = ("custom" if self.map_fn is not None
+                  else pc.resolve_engine(workload.statistic, spec.engine))
+        phases: Dict[str, float] = {}
+
+        # phase 1 — offline kneepoint (thesis §3.2: ≈3% of online time);
+        # a custom map_fn is calibrated on itself, not the workload engine
+        t0 = time.perf_counter()
+        knee_bytes, knee_res = spec.knee_bytes, None
+        if plat.task_sizing == "kneepoint" and knee_bytes is None:
+            knee_res, knee_bytes = measure_kneepoint(
+                samples, months, workload, sizes=spec.kneepoint_sizes,
+                engine="auto" if engine == "custom" else engine,
+                map_fn=self.map_fn)
+        phases["plan"] = time.perf_counter() - t0
+
+        # phase 2 — partition + distribute onto the data plane
+        t0 = time.perf_counter()
+        tasks = make_tasks(sizes, plat.task_sizing, knee_bytes,
+                           self._n_exec_workers())
+        if self.datastore is not None:
+            self.datastore.put_all({i: samples[i] for i in ids})
+        phases["distribute"] = time.perf_counter() - t0
+        max_count = max(len(t.sample_ids) for t in tasks)
+        pad_len = (0 if self.map_fn is not None else
+                   pc.partial_pad_len(workload.statistic, samples))
+
+        def task_shape(task: sch.Task) -> Tuple[int, int]:
+            """Padded block shape, derived from row lengths without
+            materializing the block (same policy as pad_to_common)."""
+            longest = max(samples[ids[i]].shape[0]
+                          for i in task.sample_ids)
+            return (max_count, pc.padded_len(longest, pad_len))
+
+        def compute_task(task: sch.Task):
+            block, mo = pc.build_block(samples, months, ids,
+                                       task.sample_ids, max_count, pad_len)
+            task_seed = spec.seed + task.task_id
+            if self.map_fn is not None:
+                return self.map_fn(task, block, mo, task_seed)
+            return pc.run_map_task(block, mo, task_seed, workload, engine)
+
+        fetch = None
+        if self.datastore is not None:
+            store = self.datastore
+
+            def fetch(task: sch.Task):
+                for sid in task.sample_ids:
+                    store.fetch(ids[sid])
+
+        # phase 3 — compile warmup: one kernel per distinct block shape
+        # (precompiled task binaries are startup cost, Fig 5); shapes are
+        # derived from row lengths so only new shapes build a block
+        t0 = time.perf_counter()
+        if engine in ("jnp", "pallas"):
+            seen = set()
+            for task in tasks:
+                key = task_shape(task)
+                if key not in seen:
+                    seen.add(key)
+                    block, mo = pc.build_block(samples, months, ids,
+                                               task.sample_ids, max_count,
+                                               pad_len)
+                    pc.run_map_task(block, mo, spec.seed, workload, engine)
+        phases["compile"] = time.perf_counter() - t0
+
+        # phase 4 — execute; partials stream into the reduce tree
+        want_values = (spec.backend == "threaded" or spec.compute_values)
+        tree = StreamingReduceTree(len(tasks)) if want_values else None
+        emit = tree.offer if tree is not None else (lambda tid, v: None)
+        t0 = time.perf_counter()
+        try:
+            outcome = self._backend().run(
+                tasks, compute=compute_task, fetch=fetch, plat=plat,
+                cfg=self._scheduler_cfg(plat), emit=emit,
+                shape_key=task_shape)
+            phases["execute"] = time.perf_counter() - t0
+
+            # phase 5 — drain the reduce tree, finalize the statistic
+            t0 = time.perf_counter()
+            result, reduce_info = None, None
+            if tree is not None:
+                root = tree.result(timeout=600.0)
+                result = finalize_stats(
+                    root, getattr(workload, "statistic", "custom"))
+                reduce_info = tree.stats()
+            phases["reduce"] = time.perf_counter() - t0
+        except BaseException:
+            if tree is not None:
+                tree.close()           # unblock the combiner thread
+            raise
+
+        if self.datastore is not None:
+            for r in outcome.results:
+                self.datastore.report_exec_time(r.exec_time)
+
+        return self._report(plat, outcome, tasks, total_bytes, knee_bytes,
+                            knee_res, engine, phases, result, reduce_info)
+
+    # -- virtual-time scale-out over a cost model ----------------------------
+    def run_scaleout(self, sample_sizes: Sequence[int], *,
+                     per_sample_exec: Optional[float] = None,
+                     exec_model: Optional[Callable[[sch.Task], float]] = None,
+                     fetch_model: Optional[Callable[[sch.Task], float]] = None,
+                     ) -> JobReport:
+        """Run the scheduling/distribution layers in virtual time over a
+        calibrated cost model (datasets too large to materialize: Fig
+        10-13 sweeps).  No statistics are computed (``result=None``)."""
+        assert (per_sample_exec is None) != (exec_model is None), \
+            "pass exactly one of per_sample_exec / exec_model"
+        spec = self.spec
+        plat = self._platform_config()
+        if exec_model is None:
+            rate = float(per_sample_exec)
+            exec_model = lambda t: rate * len(t.sample_ids)   # noqa: E731
+        t0 = time.perf_counter()
+        tasks = make_tasks(list(sample_sizes), plat.task_sizing,
+                           spec.knee_bytes, self._n_exec_workers())
+        phases = {"plan": 0.0, "distribute": time.perf_counter() - t0,
+                  "compile": 0.0}
+        workers = (list(spec.sim_workers) if spec.sim_workers
+                   else spec.n_workers)
+        backend = SimulatedBackend(workers, exec_model=exec_model,
+                                   fetch_model=fetch_model,
+                                   startup_scale=spec.startup_scale)
+        t0 = time.perf_counter()
+        outcome = backend.run(tasks, compute=None, fetch=None, plat=plat,
+                              cfg=self._scheduler_cfg(plat),
+                              emit=lambda tid, v: None)
+        phases["execute"] = time.perf_counter() - t0
+        phases["reduce"] = 0.0
+        return self._report(plat, outcome, tasks, float(sum(sample_sizes)),
+                            spec.knee_bytes, None, "cost-model", phases,
+                            None, None, backend_name="simulated")
+
+    # -- report assembly -----------------------------------------------------
+    def _report(self, plat: PlatformConfig, outcome: BackendOutcome,
+                tasks: List[sch.Task], total_bytes: float,
+                knee_bytes: Optional[float],
+                knee_res: Optional[kp.KneepointResult], engine: str,
+                phases: Dict[str, float], result, reduce_info, *,
+                backend_name: Optional[str] = None) -> JobReport:
+        backend_name = backend_name or self.spec.backend
+        execs = sorted(r.exec_time for r in outcome.results)
+        median = execs[len(execs) // 2] if execs else 0.0
+        stragglers = sum(1 for e in execs if median and e > 2.0 * median)
+        return JobReport(
+            platform=plat.name,
+            n_tasks=len(tasks),
+            task_size_bytes=(knee_bytes if knee_bytes is not None
+                             else total_bytes / max(len(tasks), 1)),
+            makespan=outcome.makespan,
+            throughput_bps=total_bytes / max(outcome.makespan, 1e-12),
+            startup_time=plat.startup_time * (
+                self.spec.startup_scale
+                if backend_name == "simulated" else 1.0),
+            result=result,
+            kneepoint=knee_res,
+            backend=backend_name,
+            engine=engine,
+            phases=phases,
+            queue_depths=outcome.queue_depths,
+            miss_curve=knee_res.curve if knee_res is not None else (),
+            max_task_bytes=max((t.size_bytes for t in tasks), default=0.0),
+            stragglers=stragglers,
+            speculative_launches=outcome.speculative_launches,
+            restarts=outcome.restarts,
+            calibration_seconds=outcome.calibration_seconds,
+            datastore_stats=(self.datastore.stats()
+                             if self.datastore is not None else None),
+            reduce_info=reduce_info)

@@ -1,0 +1,137 @@
+"""Async streaming reduce tree (thesis §3.1 reduce stage, §3.5 overlap).
+
+The thesis overlaps data movement with task execution; the same idea
+applies to the reduce stage: per-task partials are combined *while the map
+phase is still running*, on a background combiner thread fed by a queue, so
+workers never block on aggregation (the reduce analogue of the prefetch
+pipeline's fetch/execute overlap).  At job end only the last few tree
+levels remain, so reduce latency is O(log n) combines past the final map.
+
+Determinism: partials are leaves of a **fixed binary tree keyed by task
+id** — node ``(level, i)`` always combines children ``(level-1, 2i)`` and
+``(level-1, 2i+1)`` in that order, whatever order results arrive in.  Both
+platform backends therefore produce bit-identical job statistics for the
+same seed (threads and virtual time cannot reorder float additions).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+def tree_add(a: Dict[str, Any], b: Dict[str, Any]) -> Dict[str, Any]:
+    """Default combine: element-wise sum of dict-of-array partials."""
+    return {k: a[k] + b[k] for k in a}
+
+
+class StreamingReduceTree:
+    """Combine ``n_leaves`` partials into one, streaming and deterministic.
+
+    ``offer(leaf, partial)`` may be called from any thread (map workers,
+    the simulator's calibration pass); combining happens on a dedicated
+    thread.  ``result()`` closes the stream and returns the root.
+    """
+
+    def __init__(self, n_leaves: int,
+                 combine: Callable[[Any, Any], Any] = tree_add):
+        assert n_leaves >= 1
+        self.n_leaves = n_leaves
+        self._combine = combine
+        # level sizes: n, ceil(n/2), ... 1
+        self._sizes: List[int] = [n_leaves]
+        while self._sizes[-1] > 1:
+            self._sizes.append((self._sizes[-1] + 1) // 2)
+        self._nodes: List[List[Optional[Any]]] = [
+            [None] * s for s in self._sizes]
+        self._queue: "queue.SimpleQueue" = queue.SimpleQueue()
+        self.combines = 0
+        self.idle_wait_seconds = 0.0       # combiner starved (map-bound)
+        self.max_backlog = 0               # combiner behind (reduce-bound)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    # -- producer side -------------------------------------------------------
+    def offer(self, leaf: int, partial: Any) -> None:
+        self._queue.put((leaf, partial))
+
+    # -- combiner thread -----------------------------------------------------
+    def _run(self) -> None:
+        seen: set = set()
+        while len(seen) < self.n_leaves:
+            t0 = time.perf_counter()
+            item = self._queue.get()
+            self.idle_wait_seconds += time.perf_counter() - t0
+            if item is None:               # closed early (error path)
+                return
+            self.max_backlog = max(self.max_backlog, self._queue.qsize())
+            leaf, partial = item
+            if leaf in seen:               # speculative re-execution dup
+                continue
+            seen.add(leaf)
+            self._insert(0, leaf, partial)
+
+    def _insert(self, level: int, idx: int, value: Any) -> None:
+        """Place a completed node and bubble combines up the fixed tree."""
+        while level + 1 < len(self._sizes):
+            sibling = idx ^ 1
+            if sibling >= self._sizes[level]:
+                # dangling node at an odd level edge: promote unchanged
+                level, idx = level + 1, idx // 2
+                continue
+            other = self._nodes[level][sibling]
+            if other is None:
+                self._nodes[level][idx] = value
+                return
+            self._nodes[level][sibling] = None
+            left, right = (other, value) if sibling < idx else (value, other)
+            value = self._combine(left, right)
+            self.combines += 1
+            level, idx = level + 1, idx // 2
+        self._nodes[-1][0] = value
+
+    # -- consumer side -------------------------------------------------------
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until every offered leaf is combined; return the root."""
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"reduce tree incomplete after {timeout}s "
+                f"(backlog={self._queue.qsize()})")
+        root = self._nodes[-1][0]
+        assert root is not None, "result() before all leaves were offered"
+        return root
+
+    def close(self) -> None:
+        """Abort the combiner (error paths only)."""
+        self._queue.put(None)
+
+    def stats(self) -> Dict[str, float]:
+        return {"combines": float(self.combines),
+                "idle_wait_seconds": self.idle_wait_seconds,
+                "max_backlog": float(self.max_backlog)}
+
+
+def finalize_stats(root: Dict[str, Any], statistic: str) -> Dict[str, Any]:
+    """Turn the root partial into the job result (mirrors
+    ``subsample.reduce_stats`` for the paper workloads, plus the kernel's
+    ``moments`` statistic)."""
+    import numpy as np
+
+    if statistic == "alod":
+        curve = np.asarray(root["sum_curve"]) / np.maximum(
+            np.asarray(root["hits"]), 1.0)
+        return {"alod": curve, "n": float(root["count"])}
+    if statistic == "monthly_mean":
+        mean = np.asarray(root["sum"]) / np.maximum(
+            np.asarray(root["count"]), 1.0)
+        return {"monthly_mean": mean, "count": np.asarray(root["count"])}
+    if statistic == "moments":
+        n = float(root["count"])
+        mean = np.asarray(root["sum"]) / max(n, 1.0)
+        var = np.asarray(root["sumsq"]) / max(n, 1.0) - mean * mean
+        return {"mean": mean, "var": np.maximum(var, 0.0), "count": n}
+    # custom map_fn partials pass through untouched
+    return dict(root)

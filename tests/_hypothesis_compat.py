@@ -1,0 +1,107 @@
+"""Hypothesis import shim for the property-based tests.
+
+When ``hypothesis`` is installed (CI, dev boxes) this module re-exports the
+real ``given`` / ``settings`` / ``strategies``.  In hermetic containers
+without it, a minimal deterministic fallback implements the strategy subset
+the test suite uses (integers, floats, lists, tuples, sampled_from), so the
+same property tests still collect and run — each property is exercised on a
+fixed-seed sample of ``max_examples`` generated inputs instead of
+Hypothesis' adaptive search.  Shrinking and the example database are
+(deliberately) not reimplemented.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by the whole suite
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import math
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False, width=64):
+            del allow_nan, allow_infinity, width
+            lo, hi = float(min_value), float(max_value)
+
+            def sample(rng: random.Random) -> float:
+                # mix uniform and log-uniform draws so wide ranges still
+                # produce small magnitudes (roughly what hypothesis does)
+                if lo > 0 and hi / max(lo, 1e-300) > 1e3 and rng.random() < 0.5:
+                    return float(math.exp(rng.uniform(math.log(lo),
+                                                      math.log(hi))))
+                return rng.uniform(lo, hi)
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.example(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda rng: tuple(e.example(rng)
+                                               for e in elements))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    st = _Strategies()
+
+    def settings(max_examples=50, deadline=None, **_kwargs):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            inner = fn
+            n_examples = getattr(fn, "_compat_max_examples", 50)
+
+            @functools.wraps(fn)
+            def runner(*fixture_args, **fixture_kwargs):
+                rng = random.Random(0xB75)
+                for _ in range(n_examples):
+                    args = tuple(s.example(rng) for s in arg_strategies)
+                    kwargs = {k: s.example(rng)
+                              for k, s in kw_strategies.items()}
+                    inner(*fixture_args, *args,
+                          **{**fixture_kwargs, **kwargs})
+
+            # strip the strategy-bound parameters from the visible
+            # signature so pytest does not look for fixtures of the same
+            # name (hypothesis does the equivalent rewrite)
+            params = list(inspect.signature(fn).parameters.values())
+            bound = set(kw_strategies)
+            remaining = [p for p in params[len(arg_strategies):]
+                         if p.name not in bound]
+            runner.__signature__ = inspect.Signature(remaining)
+            return runner
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

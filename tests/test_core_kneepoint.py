@@ -2,8 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.kneepoint import (
     SANDY_BRIDGE_HIERARCHY,

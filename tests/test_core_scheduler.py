@@ -3,8 +3,8 @@ stealing, straggler behaviour, job- vs task-level recovery."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.scheduler import (
     JobFailure,

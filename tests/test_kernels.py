@@ -5,10 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.kernels import ops, ref
+from tests._hypothesis_compat import given, settings, st
 
 
 def _rand(key, shape, dtype):

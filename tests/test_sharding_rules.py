@@ -90,7 +90,10 @@ def _local_mesh():
 
 
 def test_ring_all_reduce_matches_psum_single_device():
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:           # renamed from jax.experimental < 0.7
+        from jax.experimental.shard_map import shard_map
     from repro.parallel.collectives import ring_all_reduce
     mesh = _local_mesh()
     x = jnp.arange(16.0).reshape(4, 4)
@@ -100,7 +103,10 @@ def test_ring_all_reduce_matches_psum_single_device():
 
 
 def test_compressed_psum_error_bounded():
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:           # renamed from jax.experimental < 0.7
+        from jax.experimental.shard_map import shard_map
     from repro.parallel.collectives import compressed_psum
     mesh = _local_mesh()
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
