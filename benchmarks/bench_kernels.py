@@ -48,4 +48,21 @@ def run() -> List[Row]:
     sec = timeit(lambda: jax.block_until_ready(
         ref.subsample_stats_ref(data, idx)[1]))
     rows.append(("kernels.subsample_ref_jnp.256x128", sec * 1e6, "cpu_jnp"))
+    sec = timeit(lambda: jax.block_until_ready(
+        ops.subsample_gather(data, idx)[1]))
+    rows.append(("kernels.subsample_gathered_interp.256x128", sec * 1e6,
+                 "writes_TxD"))
+    sec = timeit(lambda: jax.block_until_ready(
+        ops.subsample_stats(data[None], idx[None])))
+    rows.append(("kernels.subsample_stats_only_interp.256x128", sec * 1e6,
+                 "no_TxD_write"))
+
+    # wave batching: 8 tasks in one dispatch vs 8 stats-only dispatches
+    wave_b = 8
+    data8 = jax.random.normal(k0, (wave_b, 256, 128), jnp.float32)
+    idx8 = jax.random.randint(k0, (wave_b, 128), 0, 256, jnp.int32)
+    sec = timeit(lambda: jax.block_until_ready(
+        ops.subsample_stats(data8, idx8)))
+    rows.append((f"kernels.subsample_wave{wave_b}_interp.256x128",
+                 sec / wave_b * 1e6, "us_per_task"))
     return rows

@@ -1,27 +1,40 @@
-"""Fig 5/6 — platform startup + per-task runtime overhead.
+"""Fig 5/6 — platform startup + per-task runtime overhead, and the wave
+engine's dispatch-overhead reduction.
 
 Thesis: vanilla Hadoop starts jobs ≈4× slower than BashReduce (monitoring
 adds 21% startup); per-task monitoring costs ≈20%, the DFS tax dominates
-runtime overhead, BashReduce ≈12% over bare Linux.  We run a fixed batch
+runtime overhead, BashReduce ≈ 12% over bare Linux.  We run a fixed batch
 of spin tasks through ``repro.platform.Platform`` (threaded backend, one
 worker) on every platform config — overheads are spent by the backend, not
 re-modelled here — normalized to BTS.
+
+The wave section measures the tentpole claim at tiny/kneepoint task
+sizing: per-task execution pays one device dispatch (+ upload + launch)
+per map task, wave execution drains same-shape ready tasks into one
+dispatch against the device-resident block arena.  Results (dispatch
+counts, makespans, wave sizes) are also published via ``STRUCTURED`` so
+``benchmarks/run.py`` can write BENCH_platform.json and fail on
+dispatch-count regressions.
 """
 
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
 from benchmarks.common import Row
-from repro.platform import PLATFORMS, Platform, PlatformSpec
+from repro.platform import PLATFORMS, MomentsSpec, Platform, PlatformSpec
+
+# machine-readable results for BENCH_platform.json (populated by run())
+STRUCTURED: Dict[str, dict] = {}
 
 
 def _run_platform(name: str, n_tasks: int, task_sec: float) -> tuple:
-    """Returns (startup_s, per_task_overhead_s) measured through the
-    platform driver (launch/DFS/monitoring taxes applied by the backend)."""
+    """Returns (startup_s, per_task_overhead_s, report) measured through
+    the platform driver (launch/DFS/monitoring taxes applied by the
+    backend)."""
 
     def spin(task, block, months, seed):
         t0 = time.perf_counter()
@@ -36,19 +49,82 @@ def _run_platform(name: str, n_tasks: int, task_sec: float) -> tuple:
     rep = Platform(spec, map_fn=spin).run(samples, months, None)
     assert rep.n_tasks == n_tasks
     per_task = (rep.makespan - rep.startup_time) / n_tasks - task_sec
-    return rep.startup_time, max(per_task, 0.0)
+    return rep.startup_time, max(per_task, 0.0), rep
 
 
-def run() -> List[Row]:
+def _wave_report(rep) -> dict:
+    return {"makespan_s": rep.makespan,
+            "device_dispatches": rep.device_dispatches,
+            "bytes_uploaded": rep.bytes_uploaded,
+            "wave_sizes": list(rep.wave_sizes),
+            "n_tasks": rep.n_tasks,
+            "phases": dict(rep.phases)}
+
+
+def _wave_comparison(smoke: bool) -> List[Row]:
+    """Per-task vs wave at BTT (tiniest tasks) and BTS (kneepoint) sizing
+    — the tentpole's ≥5× dispatch reduction with lower wall time.  Sizes
+    are fixed regardless of ``smoke``: the dispatch-ratio gate in run.py
+    needs a stable task count (BTT: 64 tasks, BTS: 16 tasks)."""
+    del smoke
+    n = 64
+    sample_len = 96
+    wl = MomentsSpec(draws=4, draw_size=16)
+    rng = np.random.default_rng(0)
+    samples = {i: rng.standard_normal(sample_len).astype(np.float32)
+               for i in range(n)}
+    months = {i: np.zeros(sample_len, np.int32) for i in range(n)}
+    knee = 4 * sample_len * 4                    # 4 samples per BTS task
+
+    rows: List[Row] = []
+    wave_struct: Dict[str, dict] = {}
+    for plat in ("BTT", "BTS"):
+        base = dict(platform=plat, n_workers=2, backend="threaded",
+                    engine="pallas", seed=3, knee_bytes=knee,
+                    max_wave=16)
+        per = Platform(PlatformSpec(wave="off", **base)).run(
+            samples, months, wl)
+        wav = Platform(PlatformSpec(wave="on", **base)).run(
+            samples, months, wl)
+        for key in per.result:                   # wave must not drift
+            np.testing.assert_array_equal(
+                np.asarray(per.result[key]), np.asarray(wav.result[key]),
+                err_msg=f"wave diverged from per-task on {key!r}")
+        ratio = per.device_dispatches / max(wav.device_dispatches, 1)
+        speedup = per.makespan / max(wav.makespan, 1e-12)
+        rows.append((f"wave.{plat}.per_task_makespan",
+                     per.makespan * 1e6,
+                     f"{per.device_dispatches}_dispatches"))
+        rows.append((f"wave.{plat}.wave_makespan", wav.makespan * 1e6,
+                     f"{wav.device_dispatches}_dispatches"))
+        rows.append((f"wave.{plat}.dispatch_ratio", ratio,
+                     f"x{speedup:.2f}_speedup"))
+        wave_struct[plat] = {
+            "per_task": _wave_report(per), "wave": _wave_report(wav),
+            "dispatch_ratio": ratio, "speedup": speedup}
+    STRUCTURED["wave"] = wave_struct
+    return rows
+
+
+def run(smoke: bool = False) -> List[Row]:
     rows: List[Row] = []
     base_start = None
     base_task = None
+    configs: Dict[str, dict] = {}
+    n_tasks = 12 if smoke else 40
     for name in PLATFORMS:
-        startup, overhead = _run_platform(name, n_tasks=40, task_sec=2e-3)
+        startup, overhead, rep = _run_platform(name, n_tasks=n_tasks,
+                                               task_sec=2e-3)
         if name == "BTS":
             base_start, base_task = startup, max(overhead, 1e-6)
         rows.append((f"overhead.{name}.startup", startup * 1e6,
                      f"x{startup / (base_start or startup):.2f}_vs_BTS"))
         rows.append((f"overhead.{name}.per_task", overhead * 1e6,
                      f"x{overhead / (base_task or 1e-6):.2f}_vs_BTS"))
+        configs[name] = {"startup_s": startup, "per_task_overhead_s": overhead,
+                         "makespan_s": rep.makespan,
+                         "phases": dict(rep.phases),
+                         "n_tasks": rep.n_tasks}
+    STRUCTURED["configs"] = configs
+    rows.extend(_wave_comparison(smoke))
     return rows

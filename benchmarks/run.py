@@ -1,23 +1,75 @@
 """Benchmark harness — one module per thesis table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Figure map:
+Prints ``name,us_per_call,derived`` CSV and writes machine-readable
+``BENCH_platform.json`` (per-config makespans, dispatch counts, phase
+timings, the per-task-vs-wave comparison) so the perf trajectory is
+tracked across PRs.  Figure map:
   Fig 2      bench_kneepoint        task-size→cost curve + knees
   Fig 4/8/9  bench_task_sizing      BTS vs BLT vs BTT speedups
-  Fig 5/6    bench_platform_overhead  startup + per-task overhead
+  Fig 5/6    bench_platform_overhead  startup + per-task overhead + wave
   Fig 10/11  bench_jobsize          BTS vs Hadoop-like across job sizes
   Fig 12/13  bench_elasticity       core scaling + SLO-bounded choice
   Fig 14/15  bench_hetero           heterogeneity + virtualization
   Fig 16     bench_reduce_sim       reduce-stage model
   (kernels)  bench_kernels          Pallas/oracle microbenchmarks
+
+``--smoke`` runs the fast subset (platform_overhead + kernels, scaled
+down) for CI; the harness FAILS (exit 2) when the wave engine's
+dispatch-count reduction regresses below the acceptance threshold.
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
 import sys
 import time
 
+# the wave engine must cut device dispatches by at least this factor at
+# tiny-task sizing (ISSUE 2 acceptance criterion)
+MIN_DISPATCH_RATIO = 5.0
+SMOKE_MODULES = ("platform_overhead", "kernels")
 
-def main() -> None:
+
+def _check_wave_regression(structured: dict) -> list:
+    """Dispatch-count regression gate over bench_platform_overhead's
+    structured wave results."""
+    failures = []
+    for plat, res in structured.get("wave", {}).items():
+        ratio = res["dispatch_ratio"]
+        if ratio < MIN_DISPATCH_RATIO:
+            failures.append(
+                f"wave dispatch ratio regressed on {plat}: {ratio:.2f}x "
+                f"< {MIN_DISPATCH_RATIO}x "
+                f"({res['per_task']['device_dispatches']} per-task vs "
+                f"{res['wave']['device_dispatches']} wave dispatches)")
+        if res["wave"]["makespan_s"] >= res["per_task"]["makespan_s"]:
+            # recorded for trend analysis; wall time is noisy on shared
+            # CI runners so it warns rather than fails
+            print(f"# WARNING: wave not faster on {plat}: "
+                  f"{res['wave']['makespan_s']:.3f}s vs "
+                  f"{res['per_task']['makespan_s']:.3f}s", file=sys.stderr)
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("only", nargs="?", default=None,
+                        help="run a single benchmark module by name")
+    parser.add_argument("--smoke", action="store_true",
+                        help="fast CI subset with scaled-down sizes")
+    parser.add_argument("--json", default=None,
+                        help="machine-readable output path ('' disables; "
+                        "defaults to BENCH_platform.json on full and "
+                        "--smoke runs — the smoke subset IS the committed "
+                        "cross-PR record and the CI artifact — and off "
+                        "for single-module runs so a partial report "
+                        "never clobbers it)")
+    args = parser.parse_args(argv)
+    if args.json is None:
+        args.json = "" if args.only else "BENCH_platform.json"
+
     from benchmarks import (bench_elasticity, bench_hetero, bench_jobsize,
                             bench_kernels, bench_kneepoint,
                             bench_platform_overhead, bench_reduce_sim,
@@ -32,17 +84,41 @@ def main() -> None:
         ("reduce_sim", bench_reduce_sim),
         ("kernels", bench_kernels),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+
+    report = {"schema": 1, "smoke": args.smoke, "modules": {}}
+    failures = []
     print("name,us_per_call,derived")
     for name, mod in modules:
-        if only and only != name:
+        if args.only and args.only != name:
             continue
+        if args.smoke and name not in SMOKE_MODULES:
+            continue
+        takes_smoke = "smoke" in inspect.signature(mod.run).parameters
         t0 = time.perf_counter()
-        for row_name, us, derived in mod.run():
+        rows = (mod.run(smoke=True) if args.smoke and takes_smoke
+                else mod.run())
+        took = time.perf_counter() - t0
+        for row_name, us, derived in rows:
             print(f"{row_name},{us:.3f},{derived}")
-        print(f"_meta.{name}.bench_seconds,"
-              f"{(time.perf_counter() - t0) * 1e6:.0f},wall")
+        print(f"_meta.{name}.bench_seconds,{took * 1e6:.0f},wall")
+        entry = {"bench_seconds": took,
+                 "rows": [{"name": n, "us_per_call": us, "derived": d}
+                          for n, us, d in rows]}
+        structured = getattr(mod, "STRUCTURED", None)
+        if structured:
+            entry["structured"] = structured
+            failures.extend(_check_wave_regression(structured))
+        report["modules"][name] = entry
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+    for msg in failures:
+        print(f"# FAIL: {msg}", file=sys.stderr)
+    return 2 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

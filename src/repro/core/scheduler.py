@@ -215,6 +215,34 @@ class TwoPhaseScheduler:
                 return self.inflight[tid]
         return None
 
+    def claim_batch(self, worker: int, first: Task, max_n: int,
+                    key_fn: Callable[[Task], Any]) -> List[Task]:
+        """Wave draining: extend ``first`` (already claimed via
+        :meth:`on_worker_idle`) with more ready tasks whose shape key
+        matches, popped FIFO from this worker's own queue and then the
+        backlog.  The first key mismatch stops the drain so waves stay
+        same-shape (one compiled kernel per wave); the caller bounds
+        ``max_n`` (the driver sizes it per shape bucket so every worker
+        gets a fair share and one worker cannot swallow the backlog).
+        The caller must :meth:`on_task_start` every claimed task.
+
+        NOTE: ``inflight_by_worker`` tracks ONE task per worker, so
+        task-level failure recovery (``recovery="task"``) would reclaim
+        only the last wave member of a dead worker.  Waves are currently
+        driven only by :class:`ThreadedRunner`, which aborts the whole
+        job on a worker error (job-level recovery) — a caller combining
+        waves with task-level recovery must first widen
+        ``inflight_by_worker`` to a set per worker."""
+        q = self.queues[worker]
+        out = [first]
+        key = key_fn(first)
+        while len(out) < max_n and q and key_fn(q[0]) == key:
+            out.append(q.popleft())
+        while (len(out) < max_n and self.backlog
+               and key_fn(self.backlog[0]) == key):
+            out.append(self.backlog.popleft())
+        return out
+
     def on_worker_failure(self, worker: int) -> List[Task]:
         """Job-level: raise (driver restarts whole job).  Task-level:
         reclaim the dead worker's queued+inflight tasks for re-execution."""
@@ -395,16 +423,34 @@ def _simulate_once(tasks, workers, params, cfg, restarts) -> SimOutcome:
 class ThreadedRunner:
     """Executes tasks with real threads; one queue per worker.  The worker
     callable receives (task) and returns a value; fetch is performed by the
-    optional datastore before execution (overlapped via the queue)."""
+    optional datastore before execution (overlapped via the queue).
+
+    Wave mode: with ``run_batch`` set (and ``max_batch > 1``), an idle
+    worker drains up to ``max_batch`` ready tasks of the same ``batch_key``
+    shape in one claim and executes them through ``run_batch(tasks) ->
+    values`` — one device dispatch per wave instead of per task.  Each
+    task still yields its own :class:`TaskResult` (exec time split evenly)
+    so the feedback loop and straggler accounting are unchanged."""
 
     def __init__(self, n_workers: int,
                  run_task: Callable[[Task], Any],
                  fetch: Optional[Callable[[Task], Any]] = None,
-                 cfg: SchedulerConfig = SchedulerConfig()):
+                 cfg: SchedulerConfig = SchedulerConfig(),
+                 run_batch: Optional[Callable[[List[Task]],
+                                              List[Any]]] = None,
+                 batch_key: Optional[Callable[[Task], Any]] = None,
+                 max_batch: int = 1,
+                 batch_cap: Optional[Callable[[Task], int]] = None):
         self.n_workers = n_workers
         self.run_task = run_task
         self.fetch = fetch
         self.cfg = cfg
+        self.run_batch = run_batch
+        self.batch_key = batch_key or (lambda t: len(t.sample_ids))
+        self.max_batch = max_batch
+        # per-shape wave-size cap (the driver pins one padded wave width
+        # per shape bucket; claims must not exceed it)
+        self.batch_cap = batch_cap
         self.last_scheduler: Optional[TwoPhaseScheduler] = None
 
     def run_job(self, tasks: Sequence[Task]) -> List[TaskResult]:
@@ -413,36 +459,55 @@ class ThreadedRunner:
         lock = threading.Lock()
         results: List[TaskResult] = []
         errors: List[BaseException] = []
+        use_waves = self.run_batch is not None and self.max_batch > 1
 
         def worker_loop(wid: int):
             while True:
+                batch = None
                 with lock:
                     if errors:                 # a peer died: job-level
                         return                 # abort (thesis §3.3)
                     t = sched.on_worker_idle(wid)
                     if t is not None:
-                        sched.on_task_start(wid, t)
+                        if use_waves:
+                            cap = (min(self.max_batch, self.batch_cap(t))
+                                   if self.batch_cap else self.max_batch)
+                            batch = sched.claim_batch(wid, t, cap,
+                                                      self.batch_key)
+                            for x in batch:
+                                sched.on_task_start(wid, x)
+                        else:
+                            sched.on_task_start(wid, t)
                 if t is None:
                     with lock:
                         if sched.done():
                             return
                     time.sleep(1e-4)
                     continue
+                claimed = batch if batch is not None else [t]
                 try:
                     t0 = time.perf_counter()
                     if self.fetch is not None:
-                        self.fetch(t)
+                        for x in claimed:
+                            self.fetch(x)
                     t1 = time.perf_counter()
-                    value = self.run_task(t)
+                    if batch is not None:
+                        values = self.run_batch(batch)
+                    else:
+                        values = [self.run_task(t)]
                     t2 = time.perf_counter()
                 except BaseException as e:     # noqa: BLE001
                     with lock:
                         errors.append(e)
                     return
-                res = TaskResult(t.task_id, wid, t0, t1 - t0, t2 - t1, value)
+                fetch_each = (t1 - t0) / len(claimed)
+                exec_each = (t2 - t1) / len(claimed)
                 with lock:
-                    results.append(res)
-                    sched.on_task_complete(res)
+                    for x, value in zip(claimed, values):
+                        res = TaskResult(x.task_id, wid, t0, fetch_each,
+                                         exec_each, value)
+                        results.append(res)
+                        sched.on_task_complete(res)
 
         sched.initial_assignments()
         threads = [threading.Thread(target=worker_loop, args=(w,))

@@ -45,5 +45,41 @@ def rglru_scan(a, b, h0, *, chunk=128, width_block=256,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _subsample_gather_padded(data, indices, n_valid, *, interpret):
+    return _sg.subsample_gather(data, indices, n_valid, interpret=interpret)
+
+
+def _pow2(n: int) -> int:
+    # keep in sync with repro.platform.compute.pow2_ceil — the kernels
+    # layer must stay importable without the platform package (and
+    # platform/compute without jax), so the one-liner lives in both
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
 def subsample_gather(data, indices, *, interpret=not ON_TPU):
-    return _sg.subsample_gather(data, indices, interpret=interpret)
+    """(gathered [T, D], stats [2, D]) for random row ids ``indices``.
+
+    The index count is rounded up to a power of two *outside* the jit
+    boundary (tail masked out of the accumulator by the kernel, padded
+    gathered rows sliced off here), so one compiled kernel serves every
+    draw count of a given padded length instead of retracing per ``T``.
+    """
+    t = indices.shape[0]
+    t_pad = _pow2(t)
+    if t_pad != t:
+        indices = jnp.pad(indices, (0, t_pad - t))
+    n_valid = jnp.full((1,), t, jnp.int32)
+    gathered, stats = _subsample_gather_padded(data, indices, n_valid,
+                                               interpret=interpret)
+    return gathered[:t], stats
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_step", "interpret"))
+def subsample_stats(data, indices, *, rows_per_step=8,
+                    interpret=not ON_TPU):
+    """Stats-only wave gather: data [B, N, D] + indices [B, T] → stats
+    [B, 2, D], no gathered output (the moments engine discards it, so the
+    kernel never pays the [T, D] HBM write).  One dispatch per wave."""
+    return _sg.subsample_stats_wave(data, indices,
+                                    rows_per_step=rows_per_step,
+                                    interpret=interpret)

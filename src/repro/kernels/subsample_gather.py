@@ -1,20 +1,31 @@
-"""Subsample-gather kernel (Pallas, TPU target) — the paper's map task.
+"""Subsample-gather kernels (Pallas, TPU target) — the paper's map task.
 
 Random-subsample statistics need ``rows = data[indices]; stats(rows)`` where
-``indices`` are random (the cache-hostile pattern of thesis Fig 2).  The
-TPU-native adaptation uses **scalar prefetch**
+``indices`` are random (the cache-hostile pattern of thesis Fig 2).  Two
+TPU-native adaptations live here:
+
+``subsample_gather`` — **scalar prefetch**
 (``pltpu.PrefetchScalarGridSpec``): the index vector is available to the
 BlockSpec ``index_map`` *before* the grid runs, so the pipeline issues the
 HBM→VMEM DMA for row ``indices[i+1]`` while row ``indices[i]`` is being
 reduced — exactly the thesis' "prefetch data for the next k tasks while the
 current task executes" (§3.5), with the Pallas pipeline playing the role of
-the two-phase scheduler's queue.
+the two-phase scheduler's queue.  Each grid step is a tiny task: one
+gathered row, reduced into VMEM-resident accumulators (sum, sum of squares)
+that persist across the sequential grid; the final step writes the
+``[2, D]`` statistics block.  A scalar ``n_valid`` masks trailing padded
+indices out of the accumulator so the caller can round the index count up
+(one compiled kernel serves every draw count).
 
-Each grid step is a tiny task: one gathered row, reduced into VMEM-resident
-accumulators (sum, sum of squares) that persist across the sequential grid;
-the final step writes the ``[2, D]`` statistics block.  Working set per
-step = one ``[1, D]`` row + the ``[2, D]`` accumulator — far under the VMEM
-knee by construction.
+``subsample_stats_wave`` — the **stats-only wave variant**: statistics
+consumers (the ``moments`` map engine) immediately discard the ``[T, D]``
+gathered array, so this kernel never writes it — pure HBM write bandwidth
+saved.  It gathers ``rows_per_step`` rows per grid step with explicit
+HBM→VMEM DMAs issued back-to-back (fewer, larger transfers in flight at
+once) and batches a whole *wave* of tasks behind one leading grid
+dimension: ``data [B, N, D]`` + ``indices [B, T]`` → ``stats [B, 2, D]``,
+one device dispatch for B map tasks.  Per-task accumulation order is
+independent of B, so a wave is bit-identical to B separate calls.
 
 Validated in interpret mode against ``ref.subsample_stats_ref``.
 """
@@ -29,8 +40,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gather_kernel(idx_ref, row_ref, gathered_ref, stats_ref, acc_ref, *,
-                   n_idx: int):
+def _gather_kernel(idx_ref, nvalid_ref, row_ref, gathered_ref, stats_ref,
+                   acc_ref, *, n_idx: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -39,8 +50,11 @@ def _gather_kernel(idx_ref, row_ref, gathered_ref, stats_ref, acc_ref, *,
 
     row = row_ref[0].astype(jnp.float32)            # [D]
     gathered_ref[0] = row.astype(gathered_ref.dtype)
-    acc_ref[0, :] += row
-    acc_ref[1, :] += row * row
+
+    @pl.when(i < nvalid_ref[0])                     # padded tail: no stats
+    def _accumulate():
+        acc_ref[0, :] += row
+        acc_ref[1, :] += row * row
 
     @pl.when(i == n_idx - 1)
     def _finalize():
@@ -49,25 +63,29 @@ def _gather_kernel(idx_ref, row_ref, gathered_ref, stats_ref, acc_ref, *,
 
 def subsample_gather(
     data: jax.Array,          # [N, D] the task's working set
-    indices: jax.Array,       # [T] int32 random row ids
+    indices: jax.Array,       # [T] int32 random row ids (may be padded)
+    n_valid: jax.Array,       # [1] int32: only indices[:n_valid] accumulate
     *,
     interpret: bool = True,
 ):
-    """Returns (gathered [T, D], stats [2, D]) with stats = (Σrow, Σrow²)."""
+    """Returns (gathered [T, D], stats [2, D]) with stats = (Σrow, Σrow²)
+    over the first ``n_valid`` rows.  Rows past ``n_valid`` are still
+    gathered (callers slice them off) but masked out of the statistics, so
+    ``indices`` can be padded to a canonical length without retracing."""
     n, d = data.shape
     t = indices.shape[0]
     kernel = functools.partial(_gather_kernel, n_idx=t)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(t,),
         in_specs=[
             # one data row per grid step, chosen by the prefetched index —
             # the DMA for step i+1 overlaps step i's reduction
-            pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((1, d), lambda i, idx_ref, nv_ref: (idx_ref[i], 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
-            pl.BlockSpec((2, d), lambda i, idx_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, idx_ref, nv_ref: (i, 0)),
+            pl.BlockSpec((2, d), lambda i, idx_ref, nv_ref: (0, 0)),
         ],
         scratch_shapes=[pltpu.VMEM((2, d), jnp.float32)],
     )
@@ -79,4 +97,87 @@ def subsample_gather(
             jax.ShapeDtypeStruct((2, d), jnp.float32),
         ],
         interpret=interpret,
+    )(indices, n_valid, data)
+
+
+def _stats_wave_kernel(idx_ref, data_ref, stats_ref, acc_ref, rows_ref,
+                       sems, *, rows_per_step: int, n_idx: int, steps: int):
+    b = pl.program_id(0)                            # task within the wave
+    s = pl.program_id(1)                            # row group within task
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # R explicit HBM→VMEM row DMAs issued back-to-back, then awaited: the
+    # copies are all in flight at once (fewer, larger transfer windows than
+    # the one-row-per-step pipeline) while ``data`` itself never leaves HBM
+    def row_dma(j: int):
+        return pltpu.make_async_copy(
+            data_ref.at[b, pl.ds(idx_ref[b, s * rows_per_step + j], 1), :],
+            rows_ref.at[pl.ds(j, 1), :],
+            sems.at[j])
+
+    for j in range(rows_per_step):
+        row_dma(j).start()
+    for j in range(rows_per_step):
+        row_dma(j).wait()
+
+    rows = rows_ref[...].astype(jnp.float32)        # [R, D]
+    valid = (s * rows_per_step
+             + jax.lax.broadcasted_iota(jnp.int32, rows.shape, 0)) < n_idx
+    rows = jnp.where(valid, rows, 0.0)              # mask the padded tail
+    acc_ref[0, :] += jnp.sum(rows, axis=0)
+    acc_ref[1, :] += jnp.sum(rows * rows, axis=0)
+
+    @pl.when(s == steps - 1)
+    def _finalize():
+        stats_ref[0] = acc_ref[...].astype(stats_ref.dtype)
+
+
+def subsample_stats_wave(
+    data: jax.Array,          # [B, N, D] one padded block per wave task
+    indices: jax.Array,       # [B, T] int32 random row ids per task
+    *,
+    rows_per_step: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Stats-only wave gather: returns stats [B, 2, D] = per-task
+    (Σrow, Σrow²) with no gathered output.  ``T`` is rounded up to a
+    multiple of ``rows_per_step`` internally (tail masked), and each task's
+    accumulation order is fixed (R-row groups in index order) regardless of
+    B — so any wave partition of the same tasks is bit-identical."""
+    bsz, n, d = data.shape
+    b2, t = indices.shape
+    assert b2 == bsz, (b2, bsz)
+    t_pad = -(-t // rows_per_step) * rows_per_step
+    if t_pad != t:
+        indices = jnp.pad(indices, ((0, 0), (0, t_pad - t)))
+    steps = t_pad // rows_per_step
+    kernel = functools.partial(_stats_wave_kernel,
+                               rows_per_step=rows_per_step, n_idx=t,
+                               steps=steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, steps),
+        in_specs=[
+            # the wave arena stays device-resident in HBM; rows are pulled
+            # by the kernel's own DMAs, so no [B, N, D] VMEM residency
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 2, d), lambda b, s, idx_ref: (b, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, d), jnp.float32),
+            pltpu.VMEM((rows_per_step, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((rows_per_step,)),
+        ],
+    )
+    (stats,) = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bsz, 2, d), jnp.float32)],
+        interpret=interpret,
     )(indices, data)
+    return stats

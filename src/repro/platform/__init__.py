@@ -15,11 +15,15 @@ from repro.platform.backend import (  # noqa: F401
 )
 from repro.platform.compute import (  # noqa: F401
     MOMENTS,
+    BlockArena,
+    DispatchStats,
     MomentsSpec,
     build_block,
     pad_to_common,
     resolve_engine,
     run_map_task,
+    run_map_wave,
+    wave_supported,
 )
 from repro.platform.driver import (  # noqa: F401
     BASH_STARTUP,

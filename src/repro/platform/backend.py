@@ -32,6 +32,7 @@ from repro.core import scheduler as sch
 
 Emit = Callable[[int, Any], None]
 Compute = Callable[[sch.Task], Any]
+ComputeWave = Callable[[List[sch.Task]], List[Any]]
 Fetch = Optional[Callable[[sch.Task], Any]]
 
 
@@ -53,10 +54,18 @@ class PlatformBackend(Protocol):
     def run(self, tasks: Sequence[sch.Task], *, compute: Optional[Compute],
             fetch: Fetch, plat, cfg: sch.SchedulerConfig, emit: Emit,
             shape_key: Optional[Callable[[sch.Task], Any]] = None,
+            compute_wave: Optional[ComputeWave] = None,
+            max_wave: int = 1,
+            wave_cap: Optional[Callable[[sch.Task], int]] = None,
             ) -> BackendOutcome:
         """Execute ``tasks``; stream each task's partial through ``emit``.
         ``shape_key(task)`` identifies the task's compiled block shape
-        (per-shape cost calibration in the simulator)."""
+        (per-shape cost calibration in the simulator; same-shape wave
+        draining in the threaded backend).  ``compute_wave(batch)`` — when
+        a backend supports it — executes up to ``max_wave`` same-shape
+        tasks in one device dispatch, returning per-task partials;
+        ``wave_cap(task)`` further bounds the wave size for that task's
+        shape bucket (the driver's fixed padded wave width)."""
         ...
 
 
@@ -72,8 +81,7 @@ class ThreadedBackend:
         self.n_workers = n_workers
 
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
-            shape_key=None):
-        del shape_key                      # real execution: no calibration
+            shape_key=None, compute_wave=None, max_wave=1, wave_cap=None):
         assert compute is not None, "threaded backend needs real compute"
 
         def run_task(task: sch.Task):
@@ -89,8 +97,29 @@ class ThreadedBackend:
             emit(task.task_id, value)
             return value
 
+        run_wave = None
+        if compute_wave is not None and max_wave > 1:
+            # one launch + one device dispatch amortized over the wave;
+            # runtime taxes (DFS, monitoring) still scale with real compute
+            def run_wave(batch: List[sch.Task]) -> List[Any]:
+                if plat.launch_overhead:
+                    time.sleep(plat.launch_overhead)
+                t0 = time.perf_counter()
+                values = compute_wave(batch)
+                took = time.perf_counter() - t0
+                if plat.dfs_tax:
+                    time.sleep(plat.dfs_tax * took)
+                if plat.monitoring:
+                    time.sleep(0.20 * took)
+                for task, value in zip(batch, values):
+                    emit(task.task_id, value)
+                return values
+
         runner = sch.ThreadedRunner(self.n_workers, run_task, fetch=fetch,
-                                    cfg=cfg)
+                                    cfg=cfg, run_batch=run_wave,
+                                    batch_key=shape_key,
+                                    max_batch=max_wave,
+                                    batch_cap=wave_cap)
         t0 = time.perf_counter()
         time.sleep(plat.startup_time)
         results = runner.run_job(tasks)
@@ -169,7 +198,9 @@ class SimulatedBackend:
         return exec_s, fetch_s, time.perf_counter() - t_cal
 
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
-            shape_key=None):
+            shape_key=None, compute_wave=None, max_wave=1, wave_cap=None):
+        # calibration measures per-task costs; waves don't apply
+        del compute_wave, max_wave, wave_cap
         calibration = 0.0
         if self.exec_model is not None:
             exec_time = self.exec_model

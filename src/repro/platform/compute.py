@@ -19,12 +19,21 @@ backends bit-identical for a fixed seed):
 Hardware adaptation (DESIGN.md §2): block building pads samples to a
 common power-of-two length so one compiled kernel serves every task —
 compilation is startup cost (thesis Fig 5), never a per-task cost.
+
+Wave execution (DESIGN.md §7): a *wave* is a batch of same-shape ready
+tasks executed in ONE device dispatch.  :class:`BlockArena` packs the
+job's padded blocks into a device-resident ``[n_tasks, count, len]`` array
+per distinct shape (uploaded once); :func:`run_map_wave` folds per-task
+seeds in with ``jax.vmap`` / a batched Pallas grid so one compiled kernel
+serves the whole wave.  Per-task accumulation order is independent of the
+wave partition, so wave and per-task execution are bit-identical for a
+fixed seed.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +61,40 @@ class MomentsSpec:
 MOMENTS = MomentsSpec()
 
 
+@dataclasses.dataclass
+class DispatchStats:
+    """Observable device-overhead counters (thesis Fig 5/6 made visible):
+    how many device dispatches the map phase issued, how many bytes went
+    host→device, and how large each executed wave was.  Per-task execution
+    shows ``device_dispatches == n_tasks``; wave execution collapses that
+    by roughly the mean wave size."""
+
+    device_dispatches: int = 0
+    bytes_uploaded: float = 0.0
+    wave_sizes: List[int] = dataclasses.field(default_factory=list)
+
+
+def wave_supported(engine: str) -> bool:
+    """Wave execution batches device dispatches, so it exists only for the
+    device engines; numpy and custom map_fns fall back to per-task."""
+    return engine in ("pallas", "jnp")
+
+
+# Auto-wave threshold: waves amortize the fixed per-dispatch tax, which
+# only dominates when per-task compute is tiny (the thesis' Fig 5/6 story
+# — large tasks amortize their own overhead).  Per-task compute scales
+# with the workload's drawn elements; above this many, auto mode stays
+# per-task (``wave="on"`` overrides).
+WAVE_AUTO_MAX_DRAW = 4096
+
+
+def wave_profitable(workload) -> bool:
+    try:
+        return workload.draws * workload.draw_size <= WAVE_AUTO_MAX_DRAW
+    except (AttributeError, TypeError):
+        return False
+
+
 def resolve_engine(statistic: str, prefer: str = "auto") -> str:
     """Pick the compute engine once per job (never per task)."""
     if prefer != "auto":
@@ -73,12 +116,18 @@ def resolve_engine(statistic: str, prefer: str = "auto") -> str:
 # ---------------------------------------------------------------------------
 
 
+def pow2_ceil(n: int) -> int:
+    """Round up to a power of two — the padding primitive shared by block
+    lengths (:func:`padded_len`) and wave widths.  Kept in sync with
+    ``repro.kernels.ops._pow2`` (this module must import without jax)."""
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
 def padded_len(longest: int, min_len: int = 0) -> int:
     """The block length ``pad_to_common`` will produce for rows whose
     longest member is ``longest`` — the single source of the padding
     policy (shape keys for warmup/calibration derive from this too)."""
-    n = max(longest, min_len, 1)
-    return 1 << (n - 1).bit_length()
+    return pow2_ceil(max(longest, min_len))
 
 
 def pad_to_common(arrays: List[np.ndarray],
@@ -119,6 +168,76 @@ def build_block(samples: Dict[int, np.ndarray],
 
 
 # ---------------------------------------------------------------------------
+# Device-resident block arena (wave execution)
+# ---------------------------------------------------------------------------
+
+
+class BlockArena:
+    """The job's padded task blocks, packed per distinct block shape into
+    one ``[n_tasks, count, len]`` array and uploaded to the device ONCE.
+
+    Per-task execution re-uploads every block; the arena replaces that
+    with a single upload plus a device-side row gather per wave (the slot
+    vector is the only host→device traffic a wave pays).  ``slots`` maps a
+    wave of same-shape tasks to rows of its shape bucket.
+    """
+
+    def __init__(self):
+        self._data: Dict[Any, Any] = {}      # shape key -> [B, count, len]
+        self._months: Dict[Any, Any] = {}
+        self._slot: Dict[int, Tuple[Any, int]] = {}   # task_id -> (key, row)
+        self.nbytes = 0.0
+
+    @classmethod
+    def pack(cls, tasks: Sequence, shape_key: Callable, build: Callable,
+             with_months: bool = True) -> "BlockArena":
+        """Bucket ``tasks`` by ``shape_key``, materialize each task's
+        padded block via ``build(task) -> (block, months)``, stack each
+        bucket and upload it once.  ``with_months=False`` skips the
+        months plane (the moments/pallas wave never reads it — packing
+        it would double the upload and skew ``bytes_uploaded``)."""
+        import jax.numpy as jnp
+
+        arena = cls()
+        buckets: Dict[Any, List] = {}
+        for task in tasks:
+            buckets.setdefault(shape_key(task), []).append(task)
+        for key, group in buckets.items():
+            pairs = [build(t) for t in group]
+            data = np.stack([p[0] for p in pairs])
+            arena._data[key] = jnp.asarray(data)
+            arena.nbytes += float(data.nbytes)
+            if with_months:
+                months = np.stack([p[1] for p in pairs])
+                arena._months[key] = jnp.asarray(months)
+                arena.nbytes += float(months.nbytes)
+            else:
+                arena._months[key] = None
+            for row, task in enumerate(group):
+                arena._slot[task.task_id] = (key, row)
+        return arena
+
+    def keys(self) -> List[Any]:
+        return list(self._data)
+
+    def bucket(self, key) -> Tuple[Any, Any]:
+        return self._data[key], self._months[key]
+
+    def bucket_size(self, key) -> int:
+        return int(self._data[key].shape[0])
+
+    def slots(self, tasks: Sequence) -> Tuple[Any, np.ndarray]:
+        """Arena rows for a wave.  Waves are drained same-shape by the
+        scheduler, so all tasks must live in one shape bucket."""
+        keys = {self._slot[t.task_id][0] for t in tasks}
+        assert len(keys) == 1, f"wave spans shape buckets: {keys}"
+        key = keys.pop()
+        rows = np.asarray([self._slot[t.task_id][1] for t in tasks],
+                          np.int32)
+        return key, rows
+
+
+# ---------------------------------------------------------------------------
 # Engines
 # ---------------------------------------------------------------------------
 
@@ -142,22 +261,142 @@ def run_map_task(block: np.ndarray, months: np.ndarray, seed: int,
 
 def _moments_pallas(block: np.ndarray, seed: int,
                     workload) -> Dict[str, np.ndarray]:
-    """Route the Pallas kernel in as the map-task compute (tentpole):
-    the random row gather + (Σ, Σ²) accumulation happen inside
-    ``repro.kernels.subsample_gather`` (scalar-prefetch DMA pipeline)."""
+    """Route the Pallas kernel in as the map-task compute: the random row
+    gather + (Σ, Σ²) accumulation happen inside the stats-only
+    ``repro.kernels.subsample_gather`` wave kernel, as a wave of one —
+    identical math to :func:`run_map_wave`, so per-task and wave execution
+    agree to the last bit for the same per-task seed."""
+    import jax.numpy as jnp
+
+    stats = _moments_wave_device(
+        jnp.asarray(block)[None], np.zeros(1, np.int32),
+        np.asarray([seed], np.int32),
+        n_idx=workload.draws * workload.draw_size)
+    return _split_moments(np.asarray(stats, np.float32),
+                          workload.draws * workload.draw_size)[0]
+
+
+def _split_moments(stats: np.ndarray, n_idx: int) -> List[Dict[str, np.ndarray]]:
+    """[B, 2, D] kernel stats → per-task reduce-tree partials."""
+    return [{"sum": s[0], "sumsq": s[1],
+             "count": np.asarray(float(n_idx), np.float32)}
+            for s in stats]
+
+
+def _moments_wave_jit():
+    """Module-cached jitted wave pipeline (one compile per arena/wave
+    shape, reused across every wave of the job): slot gather out of the
+    resident arena → per-task index derivation (vmapped over the folded
+    seeds) → batched stats-only Pallas kernel."""
+    import functools
+
     import jax
     import jax.numpy as jnp
 
     from repro.kernels import ops
 
-    ns = block.shape[0]
-    n_idx = workload.draws * workload.draw_size
-    idx = jax.random.randint(jax.random.PRNGKey(seed), (n_idx,), 0, ns,
-                             dtype=jnp.int32)
-    _, stats = ops.subsample_gather(jnp.asarray(block), idx)
-    stats = np.asarray(stats, np.float32)
-    return {"sum": stats[0], "sumsq": stats[1],
-            "count": np.asarray(float(n_idx), np.float32)}
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def wave(arena, rows, seeds, *, n):
+        data = jnp.take(arena, rows, axis=0)          # [B, count, len]
+        ns = data.shape[1]
+        idx = jax.vmap(
+            lambda s: jax.random.randint(jax.random.PRNGKey(s), (n,), 0,
+                                         ns, dtype=jnp.int32))(seeds)
+        return ops.subsample_stats(data, idx)
+
+    return wave
+
+
+def _jnp_wave_jit():
+    """Module-cached jitted wave for the jnp engine: ``jax.vmap`` over the
+    jitted ``subsample.map_task`` with per-task PRNG keys derived in-graph
+    — bit-identical to per-task calls for the same seeds."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import subsample as ss
+
+    @functools.partial(jax.jit, static_argnames=("draws", "draw_size",
+                                                 "grid", "statistic"))
+    def wave(arena, arena_mo, rows, seeds, *, draws, draw_size, grid,
+             statistic):
+        data = jnp.take(arena, rows, axis=0)
+        months = jnp.take(arena_mo, rows, axis=0)
+        keys = jax.vmap(jax.random.PRNGKey)(seeds)
+        return jax.vmap(lambda d, m, k: ss.map_task(
+            d, m, k, draws=draws, draw_size=draw_size, grid=grid,
+            statistic=statistic))(data, months, keys)
+
+    return wave
+
+
+_WAVE_FNS: Dict[str, Any] = {}
+
+
+def _wave_fn(kind: str):
+    """Build the jitted wave entry point once per process so its jit
+    cache persists across calls (a per-call jit would retrace every
+    wave — exactly the per-task overhead waves exist to remove)."""
+    if kind not in _WAVE_FNS:
+        _WAVE_FNS[kind] = (_moments_wave_jit() if kind == "moments"
+                           else _jnp_wave_jit())
+    return _WAVE_FNS[kind]
+
+
+def _moments_wave_device(arena_data, rows, seeds, *, n_idx: int):
+    import jax.numpy as jnp
+
+    return _wave_fn("moments")(arena_data, jnp.asarray(rows),
+                               jnp.asarray(seeds), n=n_idx)
+
+
+def _jnp_wave_device(arena_data, arena_months, rows, seeds, workload):
+    import jax.numpy as jnp
+
+    return _wave_fn("jnp")(arena_data, arena_months, jnp.asarray(rows),
+                           jnp.asarray(seeds), draws=workload.draws,
+                           draw_size=workload.draw_size,
+                           grid=workload.grid,
+                           statistic=workload.statistic)
+
+
+def run_map_wave(arena: BlockArena, tasks: Sequence, seeds: np.ndarray,
+                 workload, engine: str,
+                 pad_to: Optional[int] = None) -> List[Dict[str, np.ndarray]]:
+    """Execute a wave of same-shape tasks in one device dispatch and split
+    the batched result back into per-task reduce-tree partials.
+
+    The wave is padded (repeating the first slot; padded outputs
+    discarded) to ``pad_to`` when given — the driver pins one wave width
+    per shape bucket so exactly ONE kernel shape compiles per bucket and
+    a small tail wave can never trigger a mid-job recompile — else to the
+    next power of two.
+    """
+    import jax
+
+    key, rows = arena.slots(tasks)
+    b = len(rows)
+    b_pad = max(pad_to, b) if pad_to is not None else pow2_ceil(b)
+    seeds = np.asarray(seeds, np.int32)
+    if b_pad != b:
+        rows = np.concatenate([rows, np.repeat(rows[:1], b_pad - b)])
+        seeds = np.concatenate([seeds, np.repeat(seeds[:1], b_pad - b)])
+    data, months = arena.bucket(key)
+
+    if engine == "pallas":
+        n_idx = workload.draws * workload.draw_size
+        stats = np.asarray(
+            _moments_wave_device(data, rows, seeds, n_idx=n_idx),
+            np.float32)
+        return _split_moments(stats[:b], n_idx)
+    if engine == "jnp":
+        assert months is not None, "jnp waves need pack(with_months=True)"
+        out = _jnp_wave_device(data, months, rows, seeds, workload)
+        out = jax.tree.map(np.asarray, out)
+        return [jax.tree.map(lambda a: a[i], out) for i in range(b)]
+    raise ValueError(f"engine {engine!r} does not support wave execution")
 
 
 def _map_task_numpy(block: np.ndarray, months: np.ndarray, seed: int,

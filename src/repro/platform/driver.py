@@ -35,6 +35,7 @@ vanilla Hadoop ≈ 4× BashReduce startup, ≈ 21% startup tax from monitoring,
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -90,6 +91,10 @@ class PlatformSpec:
     n_workers: int = 2
     backend: str = "threaded"              # "threaded" | "simulated"
     engine: str = "auto"                   # compute.resolve_engine
+    wave: str = "auto"                     # "auto" | "on" | "off": batch
+    #   same-shape ready tasks into one device dispatch (threaded backend,
+    #   pallas/jnp engines; per-task fallback for numpy & custom map_fn)
+    max_wave: int = 32                     # wave size cap (task count)
     knee_bytes: Optional[float] = None     # skip the offline phase if set
     kneepoint_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
     seed: int = 0
@@ -126,6 +131,11 @@ class JobReport:
     calibration_seconds: float = 0.0
     datastore_stats: Optional[Dict[str, float]] = None
     reduce_info: Optional[Dict[str, float]] = None
+    # wave-execution observability (execute-phase map dispatches only;
+    # warmup/kneepoint compiles are startup cost and are not counted)
+    device_dispatches: int = 0
+    bytes_uploaded: float = 0.0
+    wave_sizes: List[int] = dataclasses.field(default_factory=list)
 
 
 def make_tasks(sample_sizes: Sequence[int], sizing: str,
@@ -257,6 +267,31 @@ class Platform:
                                     startup_scale=self.spec.startup_scale)
         raise ValueError(f"unknown backend {self.spec.backend!r}")
 
+    def _wave_enabled(self, engine: str, workload) -> bool:
+        """Wave execution needs the threaded backend (the simulator
+        calibrates per-task costs) and a device engine; ``wave="on"``
+        makes an unsupported combination an error instead of a silent
+        per-task fallback.  ``"auto"`` additionally requires the workload
+        to be dispatch-overhead-bound (small per-task draw volume) —
+        batching heavy tasks buys nothing and costs pad compute."""
+        spec = self.spec
+        if spec.wave not in ("auto", "on", "off"):
+            raise ValueError(f"unknown wave mode {spec.wave!r}; "
+                             "choose 'auto', 'on' or 'off'")
+        if spec.wave == "off" or spec.max_wave <= 1:
+            return False
+        supported = (spec.backend == "threaded" and self.map_fn is None
+                     and pc.wave_supported(engine))
+        if spec.wave == "on" and not supported:
+            raise ValueError(
+                "wave='on' needs the threaded backend and a device engine "
+                f"(pallas|jnp) with no custom map_fn; got backend="
+                f"{spec.backend!r}, engine={engine!r}, map_fn="
+                f"{'set' if self.map_fn is not None else 'None'}")
+        if spec.wave == "auto":
+            return supported and pc.wave_profitable(workload)
+        return supported
+
     # -- the full data path --------------------------------------------------
     def run(self, samples: Dict[int, np.ndarray],
             months: Dict[int, np.ndarray], workload) -> JobReport:
@@ -299,12 +334,28 @@ class Platform:
                           for i in task.sample_ids)
             return (max_count, pc.padded_len(longest, pad_len))
 
+        def build_task_block(task: sch.Task):
+            return pc.build_block(samples, months, ids, task.sample_ids,
+                                  max_count, pad_len)
+
+        wave_on = self._wave_enabled(engine, workload)
+        dispatch = pc.DispatchStats()
+        dispatch_lock = threading.Lock()
+        block_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
         def compute_task(task: sch.Task):
-            block, mo = pc.build_block(samples, months, ids,
-                                       task.sample_ids, max_count, pad_len)
+            # warmup already built this task's block: reuse, don't rebuild
+            cached = block_cache.pop(task.task_id, None)
+            block, mo = cached if cached is not None else \
+                build_task_block(task)
             task_seed = spec.seed + task.task_id
             if self.map_fn is not None:
                 return self.map_fn(task, block, mo, task_seed)
+            if engine in ("jnp", "pallas"):
+                with dispatch_lock:
+                    dispatch.device_dispatches += 1
+                    dispatch.bytes_uploaded += float(block.nbytes) + (
+                        float(mo.nbytes) if engine == "jnp" else 0.0)
             return pc.run_map_task(block, mo, task_seed, workload, engine)
 
         fetch = None
@@ -316,19 +367,61 @@ class Platform:
                     store.fetch(ids[sid])
 
         # phase 3 — compile warmup: one kernel per distinct block shape
-        # (precompiled task binaries are startup cost, Fig 5); shapes are
-        # derived from row lengths so only new shapes build a block
+        # (precompiled task binaries are startup cost, Fig 5).  Wave mode
+        # packs the whole job into the device-resident block arena here —
+        # one upload for the job — and warms one full-size wave per shape;
+        # per-task mode builds one block per distinct shape and caches it
+        # so phase 4 does not rebuild it (the numpy engine skips warmup
+        # entirely: there is nothing to compile).
         t0 = time.perf_counter()
-        if engine in ("jnp", "pallas"):
+        arena: Optional[pc.BlockArena] = None
+        compute_wave = None
+        if wave_on:
+            arena = pc.BlockArena.pack(tasks, task_shape, build_task_block,
+                                       with_months=(engine == "jnp"))
+            dispatch.bytes_uploaded += arena.nbytes
+            by_key: Dict[Any, List[sch.Task]] = {}
+            for task in tasks:
+                by_key.setdefault(task_shape(task), []).append(task)
+            # one fixed wave width per shape bucket: every wave is claimed
+            # and padded to it, so one compiled kernel serves the bucket
+            # and a small tail wave can never recompile mid-job; buckets
+            # split across workers so one worker cannot swallow a bucket
+            # in a single wave while its peers idle
+            n_exec = max(self._n_exec_workers(), 1)
+            wave_pad = {
+                key: pc.pow2_ceil(min(spec.max_wave,
+                                      -(-len(group) // n_exec)))
+                for key, group in by_key.items()}
+            for key, group in by_key.items():
+                warm = group[:min(wave_pad[key], len(group))]
+                pc.run_map_wave(arena, warm,
+                                np.full(len(warm), spec.seed, np.int32),
+                                workload, engine, pad_to=wave_pad[key])
+
+            def compute_wave(batch: List[sch.Task]):
+                seeds = np.asarray([spec.seed + t.task_id for t in batch],
+                                   np.int32)
+                values = pc.run_map_wave(
+                    arena, batch, seeds, workload, engine,
+                    pad_to=wave_pad[task_shape(batch[0])])
+                with dispatch_lock:
+                    dispatch.device_dispatches += 1
+                    dispatch.wave_sizes.append(len(batch))
+                    # the arena is resident; a wave uploads only its slot
+                    # and seed vectors
+                    dispatch.bytes_uploaded += 2.0 * seeds.nbytes
+                return values
+        elif engine in ("jnp", "pallas"):
             seen = set()
             for task in tasks:
                 key = task_shape(task)
                 if key not in seen:
                     seen.add(key)
-                    block, mo = pc.build_block(samples, months, ids,
-                                               task.sample_ids, max_count,
-                                               pad_len)
-                    pc.run_map_task(block, mo, spec.seed, workload, engine)
+                    block, mo = build_task_block(task)
+                    block_cache[task.task_id] = (block, mo)
+                    pc.run_map_task(block, mo, spec.seed + task.task_id,
+                                    workload, engine)
         phases["compile"] = time.perf_counter() - t0
 
         # phase 4 — execute; partials stream into the reduce tree
@@ -340,7 +433,10 @@ class Platform:
             outcome = self._backend().run(
                 tasks, compute=compute_task, fetch=fetch, plat=plat,
                 cfg=self._scheduler_cfg(plat), emit=emit,
-                shape_key=task_shape)
+                shape_key=task_shape, compute_wave=compute_wave,
+                max_wave=spec.max_wave if wave_on else 1,
+                wave_cap=((lambda t: wave_pad[task_shape(t)]) if wave_on
+                          else None))
             phases["execute"] = time.perf_counter() - t0
 
             # phase 5 — drain the reduce tree, finalize the statistic
@@ -362,7 +458,8 @@ class Platform:
                 self.datastore.report_exec_time(r.exec_time)
 
         return self._report(plat, outcome, tasks, total_bytes, knee_bytes,
-                            knee_res, engine, phases, result, reduce_info)
+                            knee_res, engine, phases, result, reduce_info,
+                            dispatch=dispatch)
 
     # -- virtual-time scale-out over a cost model ----------------------------
     def run_scaleout(self, sample_sizes: Sequence[int], *,
@@ -406,8 +503,10 @@ class Platform:
                 knee_bytes: Optional[float],
                 knee_res: Optional[kp.KneepointResult], engine: str,
                 phases: Dict[str, float], result, reduce_info, *,
-                backend_name: Optional[str] = None) -> JobReport:
+                backend_name: Optional[str] = None,
+                dispatch: Optional[pc.DispatchStats] = None) -> JobReport:
         backend_name = backend_name or self.spec.backend
+        dispatch = dispatch or pc.DispatchStats()
         execs = sorted(r.exec_time for r in outcome.results)
         median = execs[len(execs) // 2] if execs else 0.0
         stragglers = sum(1 for e in execs if median and e > 2.0 * median)
@@ -435,4 +534,7 @@ class Platform:
             calibration_seconds=outcome.calibration_seconds,
             datastore_stats=(self.datastore.stats()
                              if self.datastore is not None else None),
-            reduce_info=reduce_info)
+            reduce_info=reduce_info,
+            device_dispatches=dispatch.device_dispatches,
+            bytes_uploaded=dispatch.bytes_uploaded,
+            wave_sizes=list(dispatch.wave_sizes))
