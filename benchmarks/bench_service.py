@@ -1,0 +1,184 @@
+"""Service-layer benchmark (ISSUE 3): the between-jobs platform tax.
+
+Three sections, all published via ``STRUCTURED`` for BENCH_platform.json
+and the run.py regression gates:
+
+* **repeat** — one dataset registered once, K identical queries: the
+  first submit pays the arena pack (bytes_uploaded > 0); every repeat
+  must ship only slot/seed vectors (~0 bytes) and complete far faster
+  (no plan, no pack, no per-job pool startup).
+* **concurrent** — 8 small jobs arriving together, run (a) sequentially
+  through one-shot ``Platform.run`` (each paying startup + pack) vs (b)
+  concurrently through the resident service pool with cross-job wave
+  fusion.  Latency of job *i* is measured from the arrival of the burst
+  (queueing time counts — that is what an interactive user sees).  The
+  service must show BOTH fewer total device dispatches and lower p95.
+* **poisson** — open-loop Poisson arrivals at a fixed rate; p50/p95/p99
+  job latency, dispatch counts, and fusion counts under steady traffic.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.platform import (
+    MomentsSpec,
+    Platform,
+    PlatformService,
+    PlatformSpec,
+)
+
+STRUCTURED: Dict[str, dict] = {}
+
+WL = MomentsSpec(draws=4, draw_size=16)
+SAMPLE_LEN = 96
+KNEE = 4 * SAMPLE_LEN * 4                  # 4 samples/task
+
+
+def _dataset(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    samples = {i: rng.standard_normal(SAMPLE_LEN).astype(np.float32)
+               for i in range(n)}
+    months = {i: np.zeros(SAMPLE_LEN, np.int32) for i in range(n)}
+    return samples, months
+
+
+def _spec(**kw) -> PlatformSpec:
+    base = dict(platform="BTS", n_workers=2, backend="threaded",
+                knee_bytes=KNEE, seed=0, max_wave=16)
+    base.update(kw)
+    return PlatformSpec(**base)
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+# -- section 1: repeat queries on a registered dataset -----------------------
+
+
+def _repeat_section(rows: List[Row], n_repeats: int = 4) -> None:
+    samples, months = _dataset(64)
+    with PlatformService(_spec()) as svc:
+        handle = svc.register_dataset(samples, months, name="bench-repeat")
+        first = svc.submit(handle, WL, seed=0)
+        first.result(timeout=300)
+        repeats = []
+        for s in range(1, 1 + n_repeats):
+            t = svc.submit(handle, WL, seed=s)
+            t.result(timeout=300)
+            repeats.append(t)
+    repeat_bytes = [t.bytes_uploaded for t in repeats]
+    repeat_lat = [t.latency for t in repeats]
+    STRUCTURED["repeat"] = {
+        "first_bytes": first.bytes_uploaded,
+        "repeat_bytes_max": max(repeat_bytes),
+        "first_latency_s": first.latency,
+        "repeat_latency_p50_s": _pct(repeat_lat, 50),
+    }
+    rows.append(("service.repeat.first_query", first.latency * 1e6,
+                 f"{first.bytes_uploaded:.0f}_bytes_uploaded"))
+    rows.append(("service.repeat.cached_query", _pct(repeat_lat, 50) * 1e6,
+                 f"{max(repeat_bytes):.0f}_bytes_uploaded"))
+
+
+# -- section 2: concurrent service vs sequential one-shot runs ----------------
+
+
+def _concurrent_section(rows: List[Row], n_jobs: int = 8) -> None:
+    # 10 tasks/job with wave width 8: each job leaves a 2-task tail that
+    # only cross-job fusion can fill
+    samples, months = _dataset(40)
+    seeds = list(range(n_jobs))
+
+    # (a) the same burst served by one-shot Platform.run, one at a time;
+    # job i waits for jobs 0..i-1 (no resident pool to overlap them)
+    seq_lat, seq_dispatch = [], 0
+    t0 = time.perf_counter()
+    for s in seeds:
+        rep = Platform(_spec(seed=s)).run(samples, months, WL)
+        seq_lat.append(time.perf_counter() - t0)
+        seq_dispatch += rep.device_dispatches
+
+    # (b) the same burst submitted concurrently to the resident service
+    with PlatformService(_spec()) as svc:
+        handle = svc.register_dataset(samples, months, name="bench-burst")
+        svc.submit(handle, WL, seed=99).result(timeout=300)   # class build
+        base_dispatch = svc.stats()["device_dispatches"]
+        t0 = time.perf_counter()
+        tickets = [svc.submit(handle, WL, seed=s) for s in seeds]
+        svc_lat = []
+        for t in tickets:
+            t.result(timeout=300)
+        svc_lat = [t.finished_at - t.submitted_at
+                   + (t.submitted_at - tickets[0].submitted_at)
+                   for t in tickets]   # latency from burst arrival
+        stats = svc.stats()
+    svc_dispatch = stats["device_dispatches"] - base_dispatch
+
+    seq_p95, svc_p95 = _pct(seq_lat, 95), _pct(svc_lat, 95)
+    STRUCTURED["concurrent"] = {
+        "n_jobs": n_jobs,
+        "sequential": {"p95_s": seq_p95, "p50_s": _pct(seq_lat, 50),
+                       "dispatches": seq_dispatch},
+        "service": {"p95_s": svc_p95, "p50_s": _pct(svc_lat, 50),
+                    "dispatches": svc_dispatch,
+                    "fused_dispatches": stats["fused_dispatches"]},
+        "p95_speedup": seq_p95 / max(svc_p95, 1e-12),
+        "dispatch_ratio": seq_dispatch / max(svc_dispatch, 1),
+    }
+    rows.append(("service.concurrent.sequential_p95", seq_p95 * 1e6,
+                 f"{seq_dispatch}_dispatches"))
+    rows.append(("service.concurrent.service_p95", svc_p95 * 1e6,
+                 f"{svc_dispatch}_dispatches"))
+    rows.append(("service.concurrent.p95_speedup",
+                 seq_p95 / max(svc_p95, 1e-12),
+                 f"{stats['fused_dispatches']}_fused_waves"))
+
+
+# -- section 3: open-loop Poisson traffic -------------------------------------
+
+
+def _poisson_section(rows: List[Row], n_jobs: int = 16,
+                     rate_hz: float = 40.0) -> None:
+    samples, months = _dataset(40)
+    rng = np.random.default_rng(7)
+    gaps = rng.exponential(1.0 / rate_hz, n_jobs)
+    with PlatformService(_spec()) as svc:
+        handle = svc.register_dataset(samples, months, name="bench-poisson")
+        svc.submit(handle, WL, seed=999).result(timeout=300)  # class build
+        tickets = []
+        for i, gap in enumerate(gaps):
+            time.sleep(float(gap))         # open loop: arrivals don't wait
+            tickets.append(svc.submit(handle, WL, seed=i))
+        for t in tickets:
+            t.result(timeout=300)
+        stats = svc.stats()
+    lat = [t.latency for t in tickets]
+    STRUCTURED["poisson"] = {
+        "rate_hz": rate_hz, "n_jobs": n_jobs,
+        "p50_s": _pct(lat, 50), "p95_s": _pct(lat, 95),
+        "p99_s": _pct(lat, 99),
+        "device_dispatches": stats["device_dispatches"],
+        "fused_dispatches": stats["fused_dispatches"],
+        "jobs_completed": stats["jobs_completed"],
+    }
+    rows.append(("service.poisson.p50", _pct(lat, 50) * 1e6,
+                 f"{rate_hz:.0f}hz_open_loop"))
+    rows.append(("service.poisson.p95", _pct(lat, 95) * 1e6,
+                 f"{stats['fused_dispatches']}_fused_waves"))
+    rows.append(("service.poisson.p99", _pct(lat, 99) * 1e6,
+                 f"{n_jobs}_jobs"))
+
+
+def run(smoke: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    _repeat_section(rows, n_repeats=3 if smoke else 6)
+    _concurrent_section(rows, n_jobs=8)
+    _poisson_section(rows, n_jobs=12 if smoke else 24,
+                     rate_hz=40.0)
+    return rows

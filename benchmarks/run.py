@@ -29,7 +29,10 @@ import time
 # the wave engine must cut device dispatches by at least this factor at
 # tiny-task sizing (ISSUE 2 acceptance criterion)
 MIN_DISPATCH_RATIO = 5.0
-SMOKE_MODULES = ("platform_overhead", "kernels")
+# repeat queries on a registered dataset must upload ~0 bytes: at most
+# this fraction of the first query's arena pack (ISSUE 3 criterion)
+MAX_REPEAT_BYTES_FRACTION = 0.01
+SMOKE_MODULES = ("platform_overhead", "kernels", "service")
 
 
 def _check_wave_regression(structured: dict) -> list:
@@ -53,6 +56,35 @@ def _check_wave_regression(structured: dict) -> list:
     return failures
 
 
+def _check_service_regression(structured: dict) -> list:
+    """ISSUE 3 gates over bench_service's structured results: repeat
+    queries on a registered dataset must hit the cached arena (~0 bytes
+    uploaded), and a burst of concurrent jobs through the service must
+    beat the same jobs run sequentially through one-shot Platform.run on
+    both p95 latency and total device dispatches."""
+    failures = []
+    rep = structured.get("repeat")
+    if rep:
+        budget = max(MAX_REPEAT_BYTES_FRACTION * rep["first_bytes"], 4096.0)
+        if rep["repeat_bytes_max"] > budget:
+            failures.append(
+                f"repeat-query upload not ~0 on registered dataset: "
+                f"{rep['repeat_bytes_max']:.0f} bytes > {budget:.0f} "
+                f"(first query uploaded {rep['first_bytes']:.0f})")
+    conc = structured.get("concurrent")
+    if conc:
+        seq, svc = conc["sequential"], conc["service"]
+        if svc["p95_s"] >= seq["p95_s"]:
+            failures.append(
+                f"service concurrent p95 regressed vs sequential "
+                f"Platform.run: {svc['p95_s']:.3f}s >= {seq['p95_s']:.3f}s")
+        if svc["dispatches"] >= seq["dispatches"]:
+            failures.append(
+                f"service burst used no fewer dispatches than sequential "
+                f"runs: {svc['dispatches']} >= {seq['dispatches']}")
+    return failures
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("only", nargs="?", default=None,
@@ -73,7 +105,7 @@ def main(argv=None) -> int:
     from benchmarks import (bench_elasticity, bench_hetero, bench_jobsize,
                             bench_kernels, bench_kneepoint,
                             bench_platform_overhead, bench_reduce_sim,
-                            bench_task_sizing)
+                            bench_service, bench_task_sizing)
     modules = [
         ("kneepoint", bench_kneepoint),
         ("task_sizing", bench_task_sizing),
@@ -83,6 +115,7 @@ def main(argv=None) -> int:
         ("hetero", bench_hetero),
         ("reduce_sim", bench_reduce_sim),
         ("kernels", bench_kernels),
+        ("service", bench_service),
     ]
 
     report = {"schema": 1, "smoke": args.smoke, "modules": {}}
@@ -107,7 +140,10 @@ def main(argv=None) -> int:
         structured = getattr(mod, "STRUCTURED", None)
         if structured:
             entry["structured"] = structured
-            failures.extend(_check_wave_regression(structured))
+            if name == "service":
+                failures.extend(_check_service_regression(structured))
+            else:
+                failures.extend(_check_wave_regression(structured))
         report["modules"][name] = entry
 
     if args.json:

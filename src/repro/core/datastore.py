@@ -31,12 +31,19 @@ class DataNode:
     latency: Callable[[int], float] = lambda nbytes: 0.0
     inflight: int = 0
 
-    def fetch(self, sample_id: int) -> Tuple[np.ndarray, float]:
+    def fetch(self, sample_id: int,
+              inflight: Optional[int] = None) -> Tuple[np.ndarray, float]:
+        """``inflight`` is the contention level the latency model charges
+        — the store snapshots it under its lock at claim time so the
+        model is race-free under concurrent fetches (reading
+        ``self.inflight`` here could see a peer's increment that landed
+        after this fetch was already claimed)."""
         t0 = time.perf_counter()
         data = self.store[sample_id]
         lat = self.latency(data.nbytes)
+        n_inflight = self.inflight if inflight is None else inflight
         # queueing interference: concurrent fetches contend on the node
-        lat *= (1.0 + 0.5 * max(0, self.inflight - 1))
+        lat *= (1.0 + 0.5 * max(0, n_inflight - 1))
         if lat:
             time.sleep(min(lat, 0.05))       # bounded real sleep
         return data, (time.perf_counter() - t0) + lat
@@ -72,6 +79,7 @@ class ReplicatedDataStore:
         self._samples: Dict[int, np.ndarray] = {}
         self._obs: List[float] = []
         self._lock = threading.Lock()
+        self._executor = None            # lazy shared pool for fetch_many
         self.resize_events: List[Tuple[int, int]] = []   # (n_obs, replicas)
         self._exec_ema: Optional[float] = None
 
@@ -90,8 +98,9 @@ class ReplicatedDataStore:
         with self._lock:
             node = min(self.nodes, key=lambda n: n.inflight)
             node.inflight += 1
+            snap = node.inflight          # claim-time contention snapshot
         try:
-            data, took = node.fetch(sample_id)
+            data, took = node.fetch(sample_id, inflight=snap)
         finally:
             with self._lock:
                 node.inflight -= 1
@@ -99,7 +108,43 @@ class ReplicatedDataStore:
         return data
 
     def fetch_many(self, sample_ids: Sequence[int]) -> List[np.ndarray]:
-        return [self.fetch(s) for s in sample_ids]
+        """Batch fetch, spread across the replica set concurrently.
+
+        ONE lock acquisition assigns every sample of the batch a replica
+        (round-robin from the least-loaded node, so a multi-sample task
+        never serializes on one node) and snapshots each node's inflight
+        count for the latency model; the fetches themselves then run in
+        parallel on a small shared pool."""
+        if len(sample_ids) <= 1:
+            return [self.fetch(s) for s in sample_ids]
+        with self._lock:
+            ranked = sorted(self.nodes, key=lambda n: n.inflight)
+            claims = []
+            for k, sid in enumerate(sample_ids):
+                node = ranked[k % len(ranked)]
+                node.inflight += 1
+                claims.append((sid, node, node.inflight))
+
+        def one(claim):
+            sid, node, snap = claim
+            try:
+                return node.fetch(sid, inflight=snap)
+            finally:
+                with self._lock:
+                    node.inflight -= 1
+
+        out: List[np.ndarray] = []
+        for data, took in self._fetch_pool().map(one, claims):
+            self._observe(took)
+            out.append(data)
+        return out
+
+    def _fetch_pool(self):
+        if self._executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._executor = ThreadPoolExecutor(
+                max_workers=8, thread_name_prefix="datastore-fetch")
+        return self._executor
 
     # -- feedback from the scheduler ------------------------------------------
     def report_exec_time(self, exec_time: float) -> None:

@@ -265,6 +265,227 @@ class TwoPhaseScheduler:
 
 
 # ---------------------------------------------------------------------------
+# Multi-job service scheduling (service layer, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MultiJobConfig:
+    quantum: float = 8.0          # DRR credit added per visit (tasks)
+    deadline_headroom: float = 1.5   # boost when slack < headroom·remaining
+    default_task_seconds: float = 1e-3   # est. before any completion
+
+
+@dataclasses.dataclass
+class ServiceJob:
+    """One admitted job's scheduling state: a FIFO of job-tagged tasks
+    plus the deficit-round-robin / deadline bookkeeping."""
+
+    job_id: int
+    pending: "deque[Task]"
+    n_tasks: int
+    fuse_key: Callable[[Task], Any]     # cross-job wave-fusion identity
+    cap: Callable[[Task], int]          # wave width for a task's bucket
+    priority: int = 0
+    deadline: Optional[float] = None    # absolute (caller's clock)
+    weight: float = 1.0
+    deficit: float = 0.0
+    inflight: int = 0
+    completed: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.completed >= self.n_tasks
+
+
+class MultiJobScheduler:
+    """Ready-queue policy for many concurrent jobs on one resident pool.
+
+    Pure policy, externally locked (like :class:`TwoPhaseScheduler`):
+    the service pool calls :meth:`claim` under its lock and executes the
+    returned batch outside it.
+
+    * **Fairness** — deficit round robin across jobs, at *wave*
+      granularity: serving a job credits it ``quantum × weight``
+      task-units and debits the tasks actually taken, and each claim
+      picks the least-served ready job (highest deficit, round-robin
+      order breaking ties) in the highest priority tier — so a
+      1000-task job cannot starve an 8-task job.  A wave is never
+      truncated below its bucket width (padding would waste the
+      difference); the deficit only carries the imbalance forward.
+    * **Deadline boost** — a job whose slack (deadline − now) falls
+      under ``deadline_headroom ×`` its estimated remaining runtime
+      jumps the round-robin order (earliest deadline first among the
+      urgent).
+    * **Cross-job wave fusion** — a claimed batch starts FIFO from the
+      chosen job and is then *filled* with ready tasks from other jobs
+      whose ``fuse_key`` matches (same dataset arena + engine + block
+      shape), so one device dispatch serves several jobs.  Fused tasks
+      are charged to their own job's deficit, keeping fairness intact.
+    """
+
+    def __init__(self, n_workers: int,
+                 cfg: MultiJobConfig = MultiJobConfig()):
+        self.cfg = cfg
+        self.n_workers = max(n_workers, 1)
+        self.jobs: Dict[int, ServiceJob] = {}
+        self._rr: deque[int] = deque()      # active round-robin order
+        self.avg_task_seconds: Optional[float] = None
+        self.fused_dispatches = 0           # batches spanning >1 job
+        self.claims = 0
+
+    # -- job lifecycle -------------------------------------------------------
+    def add_job(self, job_id: int, tasks: Sequence[Task], *,
+                fuse_key: Optional[Callable[[Task], Any]] = None,
+                cap: Any = 1, priority: int = 0,
+                deadline: Optional[float] = None,
+                weight: float = 1.0) -> ServiceJob:
+        if job_id in self.jobs:
+            raise ValueError(f"job {job_id} already scheduled")
+        cap_fn = cap if callable(cap) else (lambda t, _c=int(cap): _c)
+        job = ServiceJob(
+            job_id=job_id, pending=deque(tasks), n_tasks=len(tasks),
+            fuse_key=fuse_key or (lambda t: (job_id, t.task_id)),
+            cap=cap_fn, priority=priority, deadline=deadline,
+            weight=weight)
+        self.jobs[job_id] = job
+        self._rr.append(job_id)
+        return job
+
+    def cancel_job(self, job_id: int) -> List[Task]:
+        """Drop a job's queued tasks (in-flight ones finish and are
+        discarded by the caller); returns what was dropped."""
+        job = self.jobs.get(job_id)
+        if job is None:
+            return []
+        dropped = list(job.pending)
+        job.pending.clear()
+        job.n_tasks -= len(dropped)
+        if job.inflight == 0:
+            self.jobs.pop(job_id, None)
+        return dropped
+
+    def fail_job(self, job_id: int) -> None:
+        """Remove a job whose batch errored: queued tasks are dropped and
+        in-flight accounting is abandoned (the pool already owns the
+        error fan-out); peers are unaffected — recovery is job-level,
+        per job (thesis §3.3 applied per tenant)."""
+        job = self.jobs.pop(job_id, None)
+        if job is not None:
+            job.pending.clear()
+
+    def pending_tasks(self) -> int:
+        return sum(len(j.pending) for j in self.jobs.values())
+
+    def has_ready(self) -> bool:
+        return any(j.pending for j in self.jobs.values())
+
+    # -- deadline model ------------------------------------------------------
+    def _task_seconds(self) -> float:
+        return self.avg_task_seconds or self.cfg.default_task_seconds
+
+    def est_remaining(self, job: ServiceJob) -> float:
+        """Remaining runtime if the pool served only this job."""
+        left = len(job.pending) + job.inflight
+        return left * self._task_seconds() / self.n_workers
+
+    def _urgent(self, now: float) -> Optional[ServiceJob]:
+        urgent = [j for j in self.jobs.values()
+                  if j.pending and j.deadline is not None
+                  and (j.deadline - now) < (self.cfg.deadline_headroom
+                                            * self.est_remaining(j))]
+        if not urgent:
+            return None
+        return min(urgent, key=lambda j: j.deadline)
+
+    # -- claim ---------------------------------------------------------------
+    def _pick(self, now: float) -> Optional[ServiceJob]:
+        # lazily drop drained/cancelled entries from the rotation
+        while self._rr and (self._rr[0] not in self.jobs
+                            or not self.jobs[self._rr[0]].pending):
+            self._rr.popleft()
+        boosted = self._urgent(now)
+        if boosted is not None:
+            return boosted
+        ready = [self.jobs[jid] for jid in self._rr
+                 if self.jobs[jid].pending]
+        if not ready:
+            return None
+        top = max(j.priority for j in ready)
+        tier = [j for j in ready if j.priority == top]
+        # least-served first: highest deficit; ties fall to round-robin
+        # order (max() keeps the first maximum, and served jobs rotate
+        # to the back of ``_rr``)
+        return max(tier, key=lambda j: j.deficit)
+
+    def claim(self, now: float,
+              max_n: Optional[int] = None) -> List[Tuple[ServiceJob, Task]]:
+        """Claim the next batch for an idle worker: ``[]`` when nothing
+        is ready.  Every claimed task is marked in-flight; the caller
+        reports each back through :meth:`on_task_complete`."""
+        job = self._pick(now)
+        if job is None:
+            return []
+        self.claims += 1
+        job.deficit += self.cfg.quantum * job.weight
+        first = job.pending[0]
+        key = job.fuse_key(first)
+        cap = max(int(job.cap(first)), 1)
+        if max_n is not None:
+            cap = min(cap, max_n)
+        batch: List[Tuple[ServiceJob, Task]] = []
+        while (job.pending and len(batch) < cap
+               and job.fuse_key(job.pending[0]) == key):
+            batch.append((job, job.pending.popleft()))
+        # debit what was actually served; cap the carried credit at one
+        # quantum so an idle-ish job cannot hoard turns
+        job.deficit = min(job.deficit - len(batch), self.cfg.quantum)
+        # rotate the served job to the back of the round-robin order
+        try:
+            self._rr.remove(job.job_id)
+        except ValueError:
+            pass
+        if job.pending:
+            self._rr.append(job.job_id)
+        # cross-job fusion fill: same fuse key, FIFO from each peer
+        if cap > 1 and len(batch) < cap:
+            for jid in list(self._rr):
+                peer = self.jobs.get(jid)
+                if peer is None or peer is job:
+                    continue
+                took = 0
+                while (peer.pending and len(batch) < cap
+                       and peer.fuse_key(peer.pending[0]) == key):
+                    batch.append((peer, peer.pending.popleft()))
+                    took += 1
+                if took:
+                    peer.deficit -= took    # fused service still counts
+        if len({j.job_id for j, _ in batch}) > 1:
+            self.fused_dispatches += 1
+        for j, _ in batch:
+            j.inflight += 1
+        return batch
+
+    def on_task_complete(self, job_id: int,
+                         exec_seconds: float) -> bool:
+        """Record one finished task; True when its job just completed.
+        Feeds the per-task-seconds EMA the deadline model uses."""
+        a = 0.3
+        self.avg_task_seconds = (
+            exec_seconds if self.avg_task_seconds is None
+            else (1 - a) * self.avg_task_seconds + a * exec_seconds)
+        job = self.jobs.get(job_id)
+        if job is None:
+            return False
+        job.inflight -= 1
+        job.completed += 1
+        if job.done and not job.pending and job.inflight == 0:
+            self.jobs.pop(job_id, None)
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
 # Discrete-event simulation driver
 # ---------------------------------------------------------------------------
 

@@ -10,6 +10,8 @@ DESIGN.md §1-§2 and the thesis §3 (arXiv:1404.4653).
 from repro.platform.backend import (  # noqa: F401
     BackendOutcome,
     PlatformBackend,
+    PoolJob,
+    ServicePool,
     SimulatedBackend,
     ThreadedBackend,
 )
@@ -28,16 +30,31 @@ from repro.platform.compute import (  # noqa: F401
 from repro.platform.driver import (  # noqa: F401
     BASH_STARTUP,
     PLATFORMS,
+    JobPlan,
     JobReport,
     Platform,
     PlatformConfig,
     PlatformSpec,
+    WaveContext,
+    build_wave_context,
     make_tasks,
     measure_kneepoint,
     measure_per_sample_cost,
+    plan_job,
+    resolve_platform_config,
+    wave_enabled,
 )
 from repro.platform.reduce import (  # noqa: F401
     StreamingReduceTree,
     finalize_stats,
     tree_add,
+)
+from repro.platform.service import (  # noqa: F401
+    AdmissionError,
+    AdmissionPolicy,
+    CancelledError,
+    DatasetHandle,
+    JobTicket,
+    PlatformService,
+    QueryClass,
 )

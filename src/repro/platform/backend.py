@@ -25,8 +25,9 @@ so job statistics are bit-identical across backends for a fixed seed.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 from repro.core import scheduler as sch
 
@@ -129,6 +130,191 @@ class ThreadedBackend:
             makespan=makespan, results=results,
             queue_depths=list(sched.depth_trace) if sched else [],
             speculative_launches=sched.speculative_launches if sched else 0)
+
+
+# ---------------------------------------------------------------------------
+# Resident multi-job worker pool (service substrate, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PoolJob:
+    """One job as the resident pool sees it: job-tagged tasks plus the
+    execution/streaming callbacks the service wires up.  ``run_batch``
+    is the job's *query-class* closure — every job sharing a fuse key
+    shares the same closure (same arena, engine, workload), which is
+    what makes cross-job wave fusion a plain batched call."""
+
+    job_id: int
+    tasks: Sequence[sch.Task]
+    seed: int
+    run_batch: Callable[[List[Tuple["PoolJob", sch.Task]]], List[Any]]
+    emit: Callable[[int, Any], None]
+    on_done: Callable[[], None]
+    on_error: Callable[[BaseException], None]
+    fetch: Optional[Callable[[sch.Task], Any]] = None
+    fuse_key: Optional[Callable[[sch.Task], Any]] = None
+    cap: Any = 1                         # int or (task) -> int wave width
+    priority: int = 0
+    deadline: Optional[float] = None     # absolute time.monotonic() value
+    weight: float = 1.0
+    on_start: Optional[Callable[[float], None]] = None
+
+
+class ServicePool:
+    """Resident worker threads draining a multi-job ready queue.
+
+    Unlike :class:`ThreadedBackend` — which builds a thread pool, pays
+    job startup, runs ONE job and tears everything down — the service
+    pool starts once, sleeps ``plat.startup_time`` once, and then serves
+    every job the service admits.  Scheduling policy lives in
+    :class:`~repro.core.scheduler.MultiJobScheduler` (deficit-round-robin
+    fairness, deadline boost, cross-job wave fusion); this class owns the
+    threads, the per-dispatch platform taxes (launch overhead, DFS,
+    monitoring — identical to the single-job backend so service and
+    standalone execution cost the same per dispatch), and job-completion
+    fan-out."""
+
+    name = "service-pool"
+
+    def __init__(self, n_workers: int, plat,
+                 cfg: Optional[sch.MultiJobConfig] = None):
+        self.n_workers = max(n_workers, 1)
+        self.plat = plat
+        self.sched = sch.MultiJobScheduler(self.n_workers,
+                                           cfg or sch.MultiJobConfig())
+        self._jobs: Dict[int, PoolJob] = {}
+        self._started_jobs: set = set()
+        self._cond = threading.Condition()
+        self._threads: List[threading.Thread] = []
+        self._stop = False
+        self.started = False
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        """Spin up the resident workers; job startup cost is paid here,
+        ONCE, instead of per job (the between-jobs platform tax the
+        service exists to remove)."""
+        if self.started:
+            return
+        self.started = True
+        if self.plat.startup_time:
+            time.sleep(self.plat.startup_time)
+        self._threads = [
+            threading.Thread(target=self._worker_loop, args=(w,),
+                             name=f"service-worker-{w}", daemon=True)
+            for w in range(self.n_workers)]
+        for th in self._threads:
+            th.start()
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        for th in self._threads:
+            th.join(timeout=30.0)
+        self._threads = []
+
+    # -- job intake ----------------------------------------------------------
+    def submit(self, job: PoolJob) -> None:
+        self.start()
+        with self._cond:
+            self._jobs[job.job_id] = job
+            self.sched.add_job(
+                job.job_id, job.tasks, fuse_key=job.fuse_key, cap=job.cap,
+                priority=job.priority, deadline=job.deadline,
+                weight=job.weight)
+            self._cond.notify_all()
+
+    def cancel(self, job_id: int) -> int:
+        """Drop a job's queued tasks; in-flight tasks finish and their
+        emits land in a tree the service has already closed."""
+        with self._cond:
+            dropped = self.sched.cancel_job(job_id)
+            if job_id not in self.sched.jobs:
+                self._jobs.pop(job_id, None)
+                self._started_jobs.discard(job_id)
+            return len(dropped)
+
+    def pending_tasks(self) -> int:
+        with self._cond:
+            return self.sched.pending_tasks()
+
+    # -- workers -------------------------------------------------------------
+    def _worker_loop(self, wid: int) -> None:
+        del wid
+        plat = self.plat
+        while True:
+            with self._cond:
+                while not self._stop and not self.sched.has_ready():
+                    self._cond.wait(0.02)
+                if self._stop:
+                    return
+                batch = self.sched.claim(time.monotonic())
+                pool_batch = [(self._jobs[j.job_id], t) for j, t in batch
+                              if j.job_id in self._jobs]
+                now = time.monotonic()
+                fresh = [pj for pj, _ in pool_batch
+                         if pj.job_id not in self._started_jobs]
+                self._started_jobs.update(pj.job_id for pj in fresh)
+            if not batch:
+                continue
+            if not pool_batch:
+                # every job in the claim was cancelled after claiming:
+                # settle the in-flight accounting and move on
+                with self._cond:
+                    for job, _task in batch:
+                        self.sched.on_task_complete(job.job_id, 0.0)
+                    self._cond.notify_all()
+                continue
+            for pj in {pj.job_id: pj for pj in fresh}.values():
+                if pj.on_start is not None:
+                    pj.on_start(now)
+            if plat.launch_overhead:
+                time.sleep(plat.launch_overhead)
+            try:
+                for pj, task in pool_batch:
+                    if pj.fetch is not None:
+                        pj.fetch(task)
+                t1 = time.perf_counter()
+                values = pool_batch[0][0].run_batch(pool_batch)
+                took = time.perf_counter() - t1
+            except BaseException as e:      # noqa: BLE001
+                self._fail_batch(batch, e)
+                continue
+            if plat.dfs_tax:
+                time.sleep(plat.dfs_tax * took)
+            if plat.monitoring:
+                time.sleep(0.20 * took)
+            for (pj, task), value in zip(pool_batch, values):
+                pj.emit(task.task_id, value)
+            exec_each = took / max(len(batch), 1)
+            finished: List[PoolJob] = []
+            with self._cond:
+                for job, _task in batch:
+                    if self.sched.on_task_complete(job.job_id, exec_each):
+                        pj = self._jobs.pop(job.job_id, None)
+                        self._started_jobs.discard(job.job_id)
+                        if pj is not None:
+                            finished.append(pj)
+                self._cond.notify_all()
+            for pj in finished:
+                pj.on_done()
+
+    def _fail_batch(self, batch, error: BaseException) -> None:
+        """A batch died: fail every job with a task in it (their values
+        are lost); job-level recovery is per job — other jobs proceed."""
+        failed: List[PoolJob] = []
+        with self._cond:
+            for job_id in dict.fromkeys(j.job_id for j, _ in batch):
+                self.sched.fail_job(job_id)
+                pj = self._jobs.pop(job_id, None)
+                self._started_jobs.discard(job_id)
+                if pj is not None:
+                    failed.append(pj)
+            self._cond.notify_all()
+        for pj in failed:
+            pj.on_error(error)
 
 
 # ---------------------------------------------------------------------------

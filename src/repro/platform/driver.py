@@ -219,6 +219,179 @@ def measure_per_sample_cost(samples: Dict[int, np.ndarray],
 MapFn = Callable[[sch.Task, np.ndarray, np.ndarray, int], Dict[str, Any]]
 
 
+# ---------------------------------------------------------------------------
+# Reusable job phases (plan → wave/task contexts) — the substrate shared
+# by one-shot Platform.run and the persistent PlatformService
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JobPlan:
+    """Output of the plan phase: kneepoint + task partition + block-shape
+    policy.  Everything execution needs, decoupled from the driver so the
+    service can compute it once per (dataset, query class) and serve many
+    jobs from it."""
+
+    engine: str
+    tasks: List[sch.Task]
+    ids: List[int]                      # sorted sample keys
+    total_bytes: float
+    knee_bytes: Optional[float]
+    knee_res: Optional[kp.KneepointResult]
+    pad_len: int
+    max_count: int
+    task_shape: Callable[[sch.Task], Tuple[int, int]]
+    build_block: Callable[[sch.Task], Tuple[np.ndarray, np.ndarray]]
+    plan_seconds: float = 0.0           # offline kneepoint time
+    partition_seconds: float = 0.0      # task partition time
+
+
+def plan_job(samples: Dict[int, np.ndarray],
+             months: Dict[int, np.ndarray],
+             workload, *,
+             sizing: str,
+             engine: str,
+             n_exec: int,
+             knee_bytes: Optional[float] = None,
+             kneepoint_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
+             map_fn: Optional[MapFn] = None) -> JobPlan:
+    """Phases 1-2 of the data path minus datastore placement: measure the
+    kneepoint if the sizing policy needs one, partition samples into
+    tasks, and derive the padded-shape / block-building closures."""
+    ids = sorted(samples)
+    sizes = [samples[i].nbytes for i in ids]
+    knee_res = None
+    t0 = time.perf_counter()
+    if sizing == "kneepoint" and knee_bytes is None:
+        knee_res, knee_bytes = measure_kneepoint(
+            samples, months, workload, sizes=kneepoint_sizes,
+            engine="auto" if engine == "custom" else engine, map_fn=map_fn)
+    plan_seconds = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tasks = make_tasks(sizes, sizing, knee_bytes, n_exec)
+    max_count = max(len(t.sample_ids) for t in tasks)
+    pad_len = (0 if map_fn is not None else
+               pc.partial_pad_len(workload.statistic, samples))
+
+    def task_shape(task: sch.Task) -> Tuple[int, int]:
+        """Padded block shape, derived from row lengths without
+        materializing the block (same policy as pad_to_common)."""
+        longest = max(samples[ids[i]].shape[0] for i in task.sample_ids)
+        return (max_count, pc.padded_len(longest, pad_len))
+
+    def build_block(task: sch.Task) -> Tuple[np.ndarray, np.ndarray]:
+        return pc.build_block(samples, months, ids, task.sample_ids,
+                              max_count, pad_len)
+
+    return JobPlan(
+        engine=engine, tasks=tasks, ids=ids,
+        total_bytes=float(sum(sizes)), knee_bytes=knee_bytes,
+        knee_res=knee_res, pad_len=pad_len, max_count=max_count,
+        task_shape=task_shape, build_block=build_block,
+        plan_seconds=plan_seconds,
+        partition_seconds=time.perf_counter() - t0)
+
+
+class WaveContext:
+    """Device-resident execution state for one query class: the packed
+    :class:`~repro.platform.compute.BlockArena`, one fixed wave width per
+    shape bucket, and the warmed kernels.  Built once (upload + compile
+    are startup cost), then every wave — from this job or, in the
+    service, from ANY job on the same dataset/workload/engine — ships
+    only its slot and seed vectors."""
+
+    def __init__(self, arena: pc.BlockArena, wave_pad: Dict[Any, int],
+                 workload, engine: str,
+                 task_shape: Callable[[sch.Task], Any]):
+        self.arena = arena
+        self.wave_pad = wave_pad
+        self.workload = workload
+        self.engine = engine
+        self.task_shape = task_shape
+
+    def cap(self, task: sch.Task) -> int:
+        """The fixed padded wave width of this task's shape bucket."""
+        return self.wave_pad[self.task_shape(task)]
+
+    def run(self, tasks: List[sch.Task],
+            seeds: np.ndarray) -> List[Dict[str, np.ndarray]]:
+        return pc.run_map_wave(self.arena, tasks, seeds, self.workload,
+                               self.engine,
+                               pad_to=self.cap(tasks[0]))
+
+    def wave_bytes(self, n: int) -> float:
+        """Host→device traffic of an n-task wave: slot + seed vectors
+        only (the arena is resident)."""
+        return 2.0 * n * np.dtype(np.int32).itemsize
+
+
+def build_wave_context(plan: JobPlan, workload, *, n_exec: int,
+                       max_wave: int, warm_seed: int = 0) -> WaveContext:
+    """Pack the plan's blocks into the device arena, pin one wave width
+    per shape bucket, and warm one full-size wave per bucket so exactly
+    ONE kernel shape compiles per bucket (a tail wave can never recompile
+    mid-job); buckets split across workers so one worker cannot swallow
+    a bucket in a single wave while its peers idle."""
+    arena = pc.BlockArena.pack(plan.tasks, plan.task_shape,
+                               plan.build_block,
+                               with_months=(plan.engine == "jnp"))
+    by_key: Dict[Any, List[sch.Task]] = {}
+    for task in plan.tasks:
+        by_key.setdefault(plan.task_shape(task), []).append(task)
+    n_exec = max(n_exec, 1)
+    wave_pad = {
+        key: pc.pow2_ceil(min(max_wave, -(-len(group) // n_exec)))
+        for key, group in by_key.items()}
+    for key, group in by_key.items():
+        warm = group[:min(wave_pad[key], len(group))]
+        pc.run_map_wave(arena, warm,
+                        np.full(len(warm), warm_seed, np.int32),
+                        workload, plan.engine, pad_to=wave_pad[key])
+    return WaveContext(arena, wave_pad, workload, plan.engine,
+                       plan.task_shape)
+
+
+def resolve_platform_config(spec: PlatformSpec) -> PlatformConfig:
+    """The overhead profile a spec selects, with per-spec overrides."""
+    if spec.platform not in PLATFORMS:
+        raise ValueError(
+            f"unknown platform config {spec.platform!r}; "
+            f"choose one of {sorted(PLATFORMS)}")
+    plat = PLATFORMS[spec.platform]
+    overrides = {}
+    if spec.task_sizing is not None:
+        overrides["task_sizing"] = spec.task_sizing
+    if spec.startup_time is not None:
+        overrides["startup_time"] = spec.startup_time
+    return dataclasses.replace(plat, **overrides) if overrides else plat
+
+
+def wave_enabled(spec: PlatformSpec, engine: str, workload,
+                 has_map_fn: bool = False) -> bool:
+    """Wave execution needs the threaded backend (the simulator
+    calibrates per-task costs) and a device engine; ``wave="on"``
+    makes an unsupported combination an error instead of a silent
+    per-task fallback.  ``"auto"`` additionally requires the workload
+    to be dispatch-overhead-bound (small per-task draw volume) —
+    batching heavy tasks pays pad compute for nothing."""
+    if spec.wave not in ("auto", "on", "off"):
+        raise ValueError(f"unknown wave mode {spec.wave!r}; "
+                         "choose 'auto', 'on' or 'off'")
+    if spec.wave == "off" or spec.max_wave <= 1:
+        return False
+    supported = (spec.backend == "threaded" and not has_map_fn
+                 and pc.wave_supported(engine))
+    if spec.wave == "on" and not supported:
+        raise ValueError(
+            "wave='on' needs the threaded backend and a device engine "
+            f"(pallas|jnp) with no custom map_fn; got backend="
+            f"{spec.backend!r}, engine={engine!r}, map_fn="
+            f"{'set' if has_map_fn else 'None'}")
+    if spec.wave == "auto":
+        return supported and pc.wave_profitable(workload)
+    return supported
+
+
 class Platform:
     """The end-to-end driver.  ``datastore`` is an optional
     :class:`~repro.core.datastore.ReplicatedDataStore`; ``map_fn`` replaces
@@ -233,17 +406,7 @@ class Platform:
 
     # -- config plumbing -----------------------------------------------------
     def _platform_config(self) -> PlatformConfig:
-        if self.spec.platform not in PLATFORMS:
-            raise ValueError(
-                f"unknown platform config {self.spec.platform!r}; "
-                f"choose one of {sorted(PLATFORMS)}")
-        plat = PLATFORMS[self.spec.platform]
-        overrides = {}
-        if self.spec.task_sizing is not None:
-            overrides["task_sizing"] = self.spec.task_sizing
-        if self.spec.startup_time is not None:
-            overrides["startup_time"] = self.spec.startup_time
-        return dataclasses.replace(plat, **overrides) if overrides else plat
+        return resolve_platform_config(self.spec)
 
     def _n_exec_workers(self) -> int:
         if self.spec.backend == "simulated" and self.spec.sim_workers:
@@ -268,29 +431,8 @@ class Platform:
         raise ValueError(f"unknown backend {self.spec.backend!r}")
 
     def _wave_enabled(self, engine: str, workload) -> bool:
-        """Wave execution needs the threaded backend (the simulator
-        calibrates per-task costs) and a device engine; ``wave="on"``
-        makes an unsupported combination an error instead of a silent
-        per-task fallback.  ``"auto"`` additionally requires the workload
-        to be dispatch-overhead-bound (small per-task draw volume) —
-        batching heavy tasks buys nothing and costs pad compute."""
-        spec = self.spec
-        if spec.wave not in ("auto", "on", "off"):
-            raise ValueError(f"unknown wave mode {spec.wave!r}; "
-                             "choose 'auto', 'on' or 'off'")
-        if spec.wave == "off" or spec.max_wave <= 1:
-            return False
-        supported = (spec.backend == "threaded" and self.map_fn is None
-                     and pc.wave_supported(engine))
-        if spec.wave == "on" and not supported:
-            raise ValueError(
-                "wave='on' needs the threaded backend and a device engine "
-                f"(pallas|jnp) with no custom map_fn; got backend="
-                f"{spec.backend!r}, engine={engine!r}, map_fn="
-                f"{'set' if self.map_fn is not None else 'None'}")
-        if spec.wave == "auto":
-            return supported and pc.wave_profitable(workload)
-        return supported
+        return wave_enabled(self.spec, engine, workload,
+                            has_map_fn=self.map_fn is not None)
 
     # -- the full data path --------------------------------------------------
     def run(self, samples: Dict[int, np.ndarray],
@@ -298,45 +440,26 @@ class Platform:
         """Kneepoint → distribute → schedule/execute → streaming reduce."""
         spec = self.spec
         plat = self._platform_config()
-        ids = sorted(samples)
-        sizes = [samples[i].nbytes for i in ids]
-        total_bytes = float(sum(sizes))
         engine = ("custom" if self.map_fn is not None
                   else pc.resolve_engine(workload.statistic, spec.engine))
         phases: Dict[str, float] = {}
 
-        # phase 1 — offline kneepoint (thesis §3.2: ≈3% of online time);
-        # a custom map_fn is calibrated on itself, not the workload engine
+        # phases 1-2 — offline kneepoint (thesis §3.2: ≈3% of online
+        # time; a custom map_fn is calibrated on itself, not the workload
+        # engine), then partition + distribute onto the data plane
+        plan = plan_job(samples, months, workload,
+                        sizing=plat.task_sizing, engine=engine,
+                        n_exec=self._n_exec_workers(),
+                        knee_bytes=spec.knee_bytes,
+                        kneepoint_sizes=spec.kneepoint_sizes,
+                        map_fn=self.map_fn)
+        phases["plan"] = plan.plan_seconds
         t0 = time.perf_counter()
-        knee_bytes, knee_res = spec.knee_bytes, None
-        if plat.task_sizing == "kneepoint" and knee_bytes is None:
-            knee_res, knee_bytes = measure_kneepoint(
-                samples, months, workload, sizes=spec.kneepoint_sizes,
-                engine="auto" if engine == "custom" else engine,
-                map_fn=self.map_fn)
-        phases["plan"] = time.perf_counter() - t0
-
-        # phase 2 — partition + distribute onto the data plane
-        t0 = time.perf_counter()
-        tasks = make_tasks(sizes, plat.task_sizing, knee_bytes,
-                           self._n_exec_workers())
         if self.datastore is not None:
-            self.datastore.put_all({i: samples[i] for i in ids})
-        phases["distribute"] = time.perf_counter() - t0
-        max_count = max(len(t.sample_ids) for t in tasks)
-        pad_len = (0 if self.map_fn is not None else
-                   pc.partial_pad_len(workload.statistic, samples))
-
-        def task_shape(task: sch.Task) -> Tuple[int, int]:
-            """Padded block shape, derived from row lengths without
-            materializing the block (same policy as pad_to_common)."""
-            longest = max(samples[ids[i]].shape[0]
-                          for i in task.sample_ids)
-            return (max_count, pc.padded_len(longest, pad_len))
-
-        def build_task_block(task: sch.Task):
-            return pc.build_block(samples, months, ids, task.sample_ids,
-                                  max_count, pad_len)
+            self.datastore.put_all({i: samples[i] for i in plan.ids})
+        phases["distribute"] = (plan.partition_seconds
+                                + time.perf_counter() - t0)
+        tasks, ids, task_shape = plan.tasks, plan.ids, plan.task_shape
 
         wave_on = self._wave_enabled(engine, workload)
         dispatch = pc.DispatchStats()
@@ -347,7 +470,7 @@ class Platform:
             # warmup already built this task's block: reuse, don't rebuild
             cached = block_cache.pop(task.task_id, None)
             block, mo = cached if cached is not None else \
-                build_task_block(task)
+                plan.build_block(task)
             task_seed = spec.seed + task.task_id
             if self.map_fn is not None:
                 return self.map_fn(task, block, mo, task_seed)
@@ -363,8 +486,7 @@ class Platform:
             store = self.datastore
 
             def fetch(task: sch.Task):
-                for sid in task.sample_ids:
-                    store.fetch(ids[sid])
+                store.fetch_many([ids[sid] for sid in task.sample_ids])
 
         # phase 3 — compile warmup: one kernel per distinct block shape
         # (precompiled task binaries are startup cost, Fig 5).  Wave mode
@@ -374,43 +496,25 @@ class Platform:
         # so phase 4 does not rebuild it (the numpy engine skips warmup
         # entirely: there is nothing to compile).
         t0 = time.perf_counter()
-        arena: Optional[pc.BlockArena] = None
+        ctx: Optional[WaveContext] = None
         compute_wave = None
         if wave_on:
-            arena = pc.BlockArena.pack(tasks, task_shape, build_task_block,
-                                       with_months=(engine == "jnp"))
-            dispatch.bytes_uploaded += arena.nbytes
-            by_key: Dict[Any, List[sch.Task]] = {}
-            for task in tasks:
-                by_key.setdefault(task_shape(task), []).append(task)
-            # one fixed wave width per shape bucket: every wave is claimed
-            # and padded to it, so one compiled kernel serves the bucket
-            # and a small tail wave can never recompile mid-job; buckets
-            # split across workers so one worker cannot swallow a bucket
-            # in a single wave while its peers idle
-            n_exec = max(self._n_exec_workers(), 1)
-            wave_pad = {
-                key: pc.pow2_ceil(min(spec.max_wave,
-                                      -(-len(group) // n_exec)))
-                for key, group in by_key.items()}
-            for key, group in by_key.items():
-                warm = group[:min(wave_pad[key], len(group))]
-                pc.run_map_wave(arena, warm,
-                                np.full(len(warm), spec.seed, np.int32),
-                                workload, engine, pad_to=wave_pad[key])
+            ctx = build_wave_context(plan, workload,
+                                     n_exec=self._n_exec_workers(),
+                                     max_wave=spec.max_wave,
+                                     warm_seed=spec.seed)
+            dispatch.bytes_uploaded += ctx.arena.nbytes
 
             def compute_wave(batch: List[sch.Task]):
                 seeds = np.asarray([spec.seed + t.task_id for t in batch],
                                    np.int32)
-                values = pc.run_map_wave(
-                    arena, batch, seeds, workload, engine,
-                    pad_to=wave_pad[task_shape(batch[0])])
+                values = ctx.run(batch, seeds)
                 with dispatch_lock:
                     dispatch.device_dispatches += 1
                     dispatch.wave_sizes.append(len(batch))
                     # the arena is resident; a wave uploads only its slot
                     # and seed vectors
-                    dispatch.bytes_uploaded += 2.0 * seeds.nbytes
+                    dispatch.bytes_uploaded += ctx.wave_bytes(len(batch))
                 return values
         elif engine in ("jnp", "pallas"):
             seen = set()
@@ -418,7 +522,7 @@ class Platform:
                 key = task_shape(task)
                 if key not in seen:
                     seen.add(key)
-                    block, mo = build_task_block(task)
+                    block, mo = plan.build_block(task)
                     block_cache[task.task_id] = (block, mo)
                     pc.run_map_task(block, mo, spec.seed + task.task_id,
                                     workload, engine)
@@ -435,8 +539,7 @@ class Platform:
                 cfg=self._scheduler_cfg(plat), emit=emit,
                 shape_key=task_shape, compute_wave=compute_wave,
                 max_wave=spec.max_wave if wave_on else 1,
-                wave_cap=((lambda t: wave_pad[task_shape(t)]) if wave_on
-                          else None))
+                wave_cap=(ctx.cap if wave_on else None))
             phases["execute"] = time.perf_counter() - t0
 
             # phase 5 — drain the reduce tree, finalize the statistic
@@ -457,9 +560,9 @@ class Platform:
             for r in outcome.results:
                 self.datastore.report_exec_time(r.exec_time)
 
-        return self._report(plat, outcome, tasks, total_bytes, knee_bytes,
-                            knee_res, engine, phases, result, reduce_info,
-                            dispatch=dispatch)
+        return self._report(plat, outcome, tasks, plan.total_bytes,
+                            plan.knee_bytes, plan.knee_res, engine, phases,
+                            result, reduce_info, dispatch=dispatch)
 
     # -- virtual-time scale-out over a cost model ----------------------------
     def run_scaleout(self, sample_sizes: Sequence[int], *,

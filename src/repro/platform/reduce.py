@@ -48,8 +48,11 @@ class StreamingReduceTree:
             [None] * s for s in self._sizes]
         self._queue: "queue.SimpleQueue" = queue.SimpleQueue()
         self.combines = 0
+        self.leaves_seen = 0               # streamed-progress counter
         self.idle_wait_seconds = 0.0       # combiner starved (map-bound)
         self.max_backlog = 0               # combiner behind (reduce-bound)
+        self._error: Optional[BaseException] = None
+        self._node_lock = threading.Lock()   # snapshot() vs combiner
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -60,18 +63,25 @@ class StreamingReduceTree:
     # -- combiner thread -----------------------------------------------------
     def _run(self) -> None:
         seen: set = set()
-        while len(seen) < self.n_leaves:
-            t0 = time.perf_counter()
-            item = self._queue.get()
-            self.idle_wait_seconds += time.perf_counter() - t0
-            if item is None:               # closed early (error path)
-                return
-            self.max_backlog = max(self.max_backlog, self._queue.qsize())
-            leaf, partial = item
-            if leaf in seen:               # speculative re-execution dup
-                continue
-            seen.add(leaf)
-            self._insert(0, leaf, partial)
+        try:
+            while len(seen) < self.n_leaves:
+                t0 = time.perf_counter()
+                item = self._queue.get()
+                self.idle_wait_seconds += time.perf_counter() - t0
+                if item is None:               # closed early (error path)
+                    return
+                self.max_backlog = max(self.max_backlog, self._queue.qsize())
+                leaf, partial = item
+                if leaf in seen:               # speculative re-execution dup
+                    continue
+                seen.add(leaf)
+                with self._node_lock:
+                    self._insert(0, leaf, partial)
+                    self.leaves_seen = len(seen)
+        except BaseException as e:             # noqa: BLE001
+            # a combine raised: park the error so result() re-raises it
+            # on the caller's thread instead of hanging forever
+            self._error = e
 
     def _insert(self, level: int, idx: int, value: Any) -> None:
         """Place a completed node and bubble combines up the fixed tree."""
@@ -94,8 +104,13 @@ class StreamingReduceTree:
 
     # -- consumer side -------------------------------------------------------
     def result(self, timeout: Optional[float] = None) -> Any:
-        """Block until every offered leaf is combined; return the root."""
+        """Block until every offered leaf is combined; return the root.
+        A combine exception propagates here (the combiner thread parks
+        it); a missing leaf raises :class:`TimeoutError` after ``timeout``
+        rather than deadlocking the caller."""
         self._thread.join(timeout)
+        if self._error is not None:
+            raise self._error
         if self._thread.is_alive():
             raise TimeoutError(
                 f"reduce tree incomplete after {timeout}s "
@@ -104,8 +119,26 @@ class StreamingReduceTree:
         assert root is not None, "result() before all leaves were offered"
         return root
 
+    def snapshot(self) -> Optional[Any]:
+        """Early partial estimate: combine whatever nodes are resident
+        *right now*, without consuming them.  Deterministic for a given
+        set of arrived leaves (nodes combine in fixed (level, index)
+        order) but — unlike :meth:`result` — dependent on arrival timing;
+        service callers stream it as a progress estimate while the final
+        answer still comes from the fixed tree.  ``None`` until at least
+        one leaf has been combined in."""
+        with self._node_lock:
+            resident = [node for level in self._nodes for node in level
+                        if node is not None]
+            if not resident:
+                return None
+            acc = resident[0]
+            for node in resident[1:]:
+                acc = self._combine(acc, node)
+            return acc
+
     def close(self) -> None:
-        """Abort the combiner (error paths only)."""
+        """Abort the combiner (error/cancellation paths only)."""
         self._queue.put(None)
 
     def stats(self) -> Dict[str, float]:

@@ -1,0 +1,677 @@
+"""Persistent multi-tenant job service over the tiny-task platform
+(DESIGN.md §8).
+
+The thesis motivates subsampling as *interactive* analytics — "processed
+in real time, in interactive fashion" — but :meth:`Platform.run` is
+one-shot: every query re-measures the kneepoint, re-partitions, re-packs
+and re-uploads the block arena, and spins up (then tears down) a worker
+pool.  The wave engine amortized the platform tax *within* a job; this
+module amortizes it *between* jobs:
+
+* **Dataset registry** — :meth:`PlatformService.register_dataset` places
+  a dataset on the data plane once and returns a :class:`DatasetHandle`.
+  The kneepoint plan, task partition, and packed device-resident
+  :class:`~repro.platform.compute.BlockArena` are computed on the first
+  query of each *query class* (workload × engine × sizing) and cached on
+  the handle — repeat queries upload ~0 bytes (slot/seed vectors only).
+* **Resident pool** — jobs execute on a shared
+  :class:`~repro.platform.backend.ServicePool` whose
+  :class:`~repro.core.scheduler.MultiJobScheduler` drains a multi-job
+  ready queue with deficit-round-robin fairness, deadline-aware boosts,
+  and **cross-job wave fusion**: same-shape ready tasks from different
+  jobs on the same dataset execute in ONE device dispatch (per-job seeds
+  and slot vectors make this bit-exact — the wave partition never
+  affects per-task results).
+* **Streaming results** — each job owns a deterministic
+  :class:`~repro.platform.reduce.StreamingReduceTree`;
+  :meth:`JobTicket.partial` surfaces an early estimate while the job
+  runs, :meth:`JobTicket.result` the exact, bit-reproducible statistic.
+* **SLO-aware admission** — :class:`AdmissionPolicy` bounds in-flight
+  load; over-limit submissions queue (default) or are shed, and a job
+  whose deadline is provably unmeetable at the pool's measured task
+  throughput is rejected up front instead of burning capacity it cannot
+  use.
+
+For a fixed seed, ``submit(...).result()`` is bit-identical to a
+standalone ``Platform.run(...)`` with the same spec — the service reuses
+the exact plan/compute/reduce substrate, only the scheduling around it
+changes.  ``backend="simulated"`` specs run each submitted job inline
+through the one-shot driver in virtual time (a resident pool has no
+meaning there), still reusing the handle's cached kneepoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import scheduler as sch
+from repro.platform import compute as pc
+from repro.platform.backend import PoolJob, ServicePool
+from repro.platform.driver import (
+    JobPlan,
+    Platform,
+    PlatformSpec,
+    WaveContext,
+    build_wave_context,
+    plan_job,
+    resolve_platform_config,
+    wave_enabled,
+)
+from repro.platform.reduce import StreamingReduceTree, finalize_stats
+
+# ticket lifecycle
+QUEUED = "queued"          # admitted to the service, waiting for capacity
+RUNNING = "running"        # in the pool's multi-job ready queue / executing
+DONE = "done"
+FAILED = "failed"
+REJECTED = "rejected"      # shed by admission control
+CANCELLED = "cancelled"
+
+
+class AdmissionError(RuntimeError):
+    """Raised by :meth:`JobTicket.result` for shed/rejected jobs."""
+
+
+class CancelledError(RuntimeError):
+    """Raised by :meth:`JobTicket.result` for cancelled jobs."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Load-shedding policy for the resident pool (thesis SLO story,
+    §4.2.3, applied to admission instead of scaling)."""
+
+    max_active_jobs: int = 32          # running jobs before queueing/shedding
+    max_pending_tasks: int = 4096      # ready-queue depth bound
+    mode: str = "queue"                # "queue" | "shed" when over a bound
+    slo_aware: bool = True             # reject provably unmeetable deadlines
+
+
+def workload_key(workload) -> Tuple:
+    """Hashable identity of a workload for the query-class cache."""
+    if dataclasses.is_dataclass(workload):
+        return (type(workload).__name__,) + tuple(
+            sorted((k, v) for k, v in dataclasses.asdict(workload).items()
+                   if not callable(v)))
+    return (type(workload).__name__, repr(workload))
+
+
+_CLASS_UID = itertools.count()
+
+
+@dataclasses.dataclass
+class QueryClass:
+    """Everything cached per (dataset, workload, engine, sizing): the
+    plan and either the device-resident wave context or the host block
+    cache for the per-task fallback.  ``uid`` namespaces fuse keys so
+    waves can only fuse tasks that share this exact arena + kernel."""
+
+    uid: int
+    plan: JobPlan
+    workload: Any
+    engine: str
+    wave_ctx: Optional[WaveContext] = None
+    blocks: Dict[int, Tuple[np.ndarray, np.ndarray]] = dataclasses.field(
+        default_factory=dict)
+    arena_bytes: float = 0.0           # charged to the job that built it
+
+    def fuse_key(self, task: sch.Task) -> Tuple:
+        return (self.uid, self.plan.task_shape(task))
+
+    def cap(self, task: sch.Task) -> int:
+        return self.wave_ctx.cap(task) if self.wave_ctx is not None else 1
+
+    def block(self, task: sch.Task) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-cached padded block (per-task path): built once per task
+        across ALL jobs of the class, not once per job."""
+        cached = self.blocks.get(task.task_id)
+        if cached is None:
+            cached = self.blocks[task.task_id] = self.plan.build_block(task)
+        return cached
+
+
+class DatasetHandle:
+    """A registered dataset: distributed to the data plane once, planned
+    and arena-packed per query class, shared by every subsequent job."""
+
+    def __init__(self, dataset_id: int, name: str,
+                 samples: Dict[int, np.ndarray],
+                 months: Dict[int, np.ndarray],
+                 knee_bytes: Optional[float] = None):
+        self.dataset_id = dataset_id
+        self.name = name
+        self.samples = samples
+        self.months = months
+        self.ids = sorted(samples)
+        self.total_bytes = float(sum(samples[i].nbytes for i in self.ids))
+        self.knee_bytes = knee_bytes       # optional override for all classes
+        self._classes: Dict[Tuple, QueryClass] = {}
+        self._knee: Dict[Tuple, Tuple[Any, float]] = {}   # per-workload cache
+        self._lock = threading.Lock()
+
+    def __repr__(self) -> str:
+        return (f"DatasetHandle({self.name!r}, samples={len(self.ids)}, "
+                f"bytes={self.total_bytes:.0f})")
+
+    def cached_knee(self, workload, *, engine: str, sizing: str,
+                    kneepoint_sizes) -> Tuple[Optional[Any], Optional[float]]:
+        """The kneepoint plan for a workload — measured once per dataset
+        and reused by every query (and by simulated-backend submits)."""
+        if self.knee_bytes is not None or sizing != "kneepoint":
+            return None, self.knee_bytes
+        key = workload_key(workload)
+        with self._lock:
+            if key not in self._knee:
+                from repro.platform.driver import measure_kneepoint
+                self._knee[key] = measure_kneepoint(
+                    self.samples, self.months, workload,
+                    sizes=kneepoint_sizes, engine=engine)
+            return self._knee[key]
+
+    def query_class(self, workload, *, spec: PlatformSpec, engine: str,
+                    sizing: str, n_exec: int,
+                    wave_on: bool) -> Tuple[QueryClass, bool]:
+        """Plan + pack for one query class; ``(qc, built_now)`` where
+        ``built_now`` marks the submit that paid the one-time cost."""
+        key = (workload_key(workload), engine, sizing, n_exec, wave_on,
+               spec.max_wave)
+        with self._lock:
+            qc = self._classes.get(key)
+            if qc is not None:
+                return qc, False
+        knee_res, knee = self.cached_knee(
+            workload, engine=engine, sizing=sizing,
+            kneepoint_sizes=spec.kneepoint_sizes)
+        with self._lock:
+            qc = self._classes.get(key)
+            if qc is not None:                     # raced: peer built it
+                return qc, False
+            plan = plan_job(self.samples, self.months, workload,
+                            sizing=sizing, engine=engine, n_exec=n_exec,
+                            knee_bytes=knee,
+                            kneepoint_sizes=spec.kneepoint_sizes)
+            plan.knee_res = plan.knee_res or knee_res
+            qc = QueryClass(uid=next(_CLASS_UID), plan=plan,
+                            workload=workload, engine=engine)
+            if wave_on:
+                qc.wave_ctx = build_wave_context(
+                    plan, workload, n_exec=n_exec, max_wave=spec.max_wave,
+                    warm_seed=spec.seed)
+                qc.arena_bytes = qc.wave_ctx.arena.nbytes
+            elif engine in ("jnp", "pallas"):
+                # per-task warmup: compile one kernel per distinct shape
+                seen = set()
+                for task in plan.tasks:
+                    shape = plan.task_shape(task)
+                    if shape not in seen:
+                        seen.add(shape)
+                        block, mo = qc.block(task)
+                        pc.run_map_task(block, mo, spec.seed + task.task_id,
+                                        workload, engine)
+            self._classes[key] = qc
+            return qc, True
+
+
+class JobTicket:
+    """Handle on one submitted job: poll (:meth:`status`/:meth:`progress`),
+    stream (:meth:`partial`), or block (:meth:`result`)."""
+
+    def __init__(self, job_id: int, handle: DatasetHandle, workload,
+                 n_tasks: int, statistic: str, seed: int):
+        self.job_id = job_id
+        self.dataset = handle.name
+        self.workload_name = getattr(workload, "name", str(workload))
+        self.n_tasks = n_tasks
+        self.statistic = statistic
+        self.seed = seed
+        self.status = QUEUED
+        self.reason: Optional[str] = None       # rejection/failure detail
+        self.error: Optional[BaseException] = None
+        self.submitted_at = time.monotonic()
+        self.admitted_at: Optional[float] = None
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.bytes_uploaded = 0.0
+        self.device_dispatches = 0               # waves this job rode in
+        self.tree: Optional[StreamingReduceTree] = None
+        self._result: Optional[dict] = None
+        self._done = threading.Event()
+
+    # -- poll ---------------------------------------------------------------
+    def progress(self) -> Tuple[int, int]:
+        done = self.tree.leaves_seen if self.tree is not None else 0
+        return (self.n_tasks if self.status == DONE else done, self.n_tasks)
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit→finish seconds (None while in flight)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.started_at is None:
+            return None
+        return self.started_at - self.submitted_at
+
+    # -- stream -------------------------------------------------------------
+    def partial(self) -> Optional[dict]:
+        """Early estimate from the partials combined *so far* (finalized
+        like the real statistic); ``None`` before the first leaf.  The
+        final :meth:`result` remains bit-deterministic — this view is
+        only as stable as arrival order."""
+        if self._result is not None:
+            return self._result
+        if self.tree is None:
+            return None
+        root = self.tree.snapshot()
+        if root is None:
+            return None
+        return finalize_stats(root, self.statistic)
+
+    # -- block --------------------------------------------------------------
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> dict:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"job {self.job_id} not finished after {timeout}s "
+                f"(status={self.status}, progress={self.progress()})")
+        if self.status == DONE:
+            return self._result
+        if self.status == REJECTED:
+            raise AdmissionError(
+                f"job {self.job_id} rejected: {self.reason}")
+        if self.status == CANCELLED:
+            raise CancelledError(f"job {self.job_id} was cancelled")
+        raise self.error if self.error is not None else RuntimeError(
+            f"job {self.job_id} failed: {self.reason}")
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "job_id": self.job_id, "dataset": self.dataset,
+            "workload": self.workload_name, "status": self.status,
+            "n_tasks": self.n_tasks, "latency_s": self.latency,
+            "queue_wait_s": self.queue_wait,
+            "bytes_uploaded": self.bytes_uploaded,
+            "device_dispatches": self.device_dispatches,
+        }
+
+
+class PlatformService:
+    """The persistent, multi-tenant front door: register datasets once,
+    submit many concurrent subsample queries against them.
+
+    One :class:`~repro.platform.driver.PlatformSpec` fixes the overhead
+    profile, worker count, engine, and wave policy for every job the
+    service runs (jobs choose workload/seed/priority/deadline per
+    submit).  Use as a context manager or call :meth:`close`."""
+
+    def __init__(self, spec: PlatformSpec = PlatformSpec(), *,
+                 admission: AdmissionPolicy = AdmissionPolicy(),
+                 datastore=None):
+        if spec.backend not in ("threaded", "simulated"):
+            raise ValueError(
+                f"service backend must be threaded|simulated, "
+                f"got {spec.backend!r}")
+        if admission.mode not in ("queue", "shed"):
+            raise ValueError(f"unknown admission mode {admission.mode!r}")
+        self.spec = spec
+        self.admission = admission
+        self.datastore = datastore
+        self.plat = resolve_platform_config(spec)
+        self.dispatch = pc.DispatchStats()     # service-wide counters
+        self.jobs_completed = 0
+        self.jobs_rejected = 0
+        self._pool: Optional[ServicePool] = None
+        self._lock = threading.Lock()
+        # serializes admission decisions with slot reservation, so two
+        # concurrent submits cannot both pass the same capacity check
+        self._admission_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._tickets: Dict[int, JobTicket] = {}
+        self._active: Dict[int, JobTicket] = {}
+        self._waiting: deque = deque()         # (ticket, submit closure args)
+        self._job_seq = itertools.count()
+        self._ds_seq = itertools.count()
+        self._closed = False
+
+    # -- lifecycle -----------------------------------------------------------
+    def __enter__(self) -> "PlatformService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Stop the pool.  Queued tickets are rejected and any still-
+        running jobs are failed with a "service closed" error — their
+        ``result()`` callers unblock immediately instead of hanging on a
+        pool that no longer exists."""
+        with self._lock:
+            self._closed = True
+            waiting = list(self._waiting)
+            self._waiting.clear()
+        for ticket, _args in waiting:
+            self._finish(ticket, REJECTED, reason="service closed")
+        if self._pool is not None:
+            self._pool.close()
+        with self._lock:
+            orphans = list(self._active.values())
+        for ticket in orphans:
+            self._on_job_error(ticket,
+                               RuntimeError("service closed mid-job"))
+
+    def _pool_for(self) -> ServicePool:
+        if self._pool is None:
+            self._pool = ServicePool(
+                self.spec.n_workers, self.plat,
+                cfg=sch.MultiJobConfig())
+            self._pool.start()
+        return self._pool
+
+    # -- registry ------------------------------------------------------------
+    def register_dataset(self, samples: Dict[int, np.ndarray],
+                         months: Optional[Dict[int, np.ndarray]] = None,
+                         *, name: Optional[str] = None,
+                         knee_bytes: Optional[float] = None) -> DatasetHandle:
+        """Place a dataset on the data plane ONCE; every subsequent query
+        against the returned handle reuses the placement, the kneepoint
+        plan, and (per query class) the device-resident arena."""
+        if months is None:
+            months = {i: np.zeros(a.shape[0], np.int32)
+                      for i, a in samples.items()}
+        handle = DatasetHandle(next(self._ds_seq),
+                               name or f"dataset-{len(samples)}",
+                               samples, months,
+                               knee_bytes=(knee_bytes
+                                           if knee_bytes is not None
+                                           else self.spec.knee_bytes))
+        if self.datastore is not None:
+            self.datastore.put_all({i: samples[i] for i in handle.ids})
+        return handle
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, handle: DatasetHandle, workload, *,
+               seed: Optional[int] = None, priority: int = 0,
+               deadline: Optional[float] = None,
+               weight: float = 1.0) -> JobTicket:
+        """Enqueue one subsample query; returns immediately with a
+        :class:`JobTicket`.  ``deadline`` is seconds from now (drives the
+        scheduler's deadline boost and SLO-aware admission);
+        ``priority`` tiers are strict (higher first), fairness is
+        deficit-round-robin within a tier, ``weight`` scales a job's DRR
+        share."""
+        if self._closed:
+            raise RuntimeError("service is closed")
+        seed = self.spec.seed if seed is None else seed
+        engine = pc.resolve_engine(workload.statistic, self.spec.engine)
+
+        if self.spec.backend == "simulated":
+            return self._submit_simulated(handle, workload, seed)
+
+        wave_on = wave_enabled(self.spec, engine, workload)
+        qc, built_now = handle.query_class(
+            workload, spec=self.spec, engine=engine,
+            sizing=self.plat.task_sizing, n_exec=self.spec.n_workers,
+            wave_on=wave_on)
+        ticket = JobTicket(next(self._job_seq), handle, workload,
+                           len(qc.plan.tasks), workload.statistic, seed)
+        if built_now:
+            with self._stats_lock:
+                self.dispatch.bytes_uploaded += qc.arena_bytes
+            ticket.bytes_uploaded += qc.arena_bytes
+        self._tickets[ticket.job_id] = ticket
+
+        abs_deadline = (None if deadline is None
+                        else time.monotonic() + deadline)
+        with self._admission_lock:
+            verdict = self._admission_verdict(ticket, deadline)
+            if verdict is None:
+                with self._lock:               # reserve the slot atomically
+                    self._active[ticket.job_id] = ticket
+            elif not (self.admission.mode == "shed"
+                      or verdict.startswith("slo")):
+                with self._lock:
+                    self._waiting.append(
+                        (ticket,
+                         (handle, qc, priority, abs_deadline, weight)))
+        if verdict is None:
+            self._admit(ticket, handle, qc, priority, abs_deadline, weight)
+        elif self.admission.mode == "shed" or verdict.startswith("slo"):
+            self.jobs_rejected += 1
+            self._finish(ticket, REJECTED, reason=verdict)
+        return ticket
+
+    def _admission_verdict(self, ticket: JobTicket,
+                           deadline: Optional[float], *,
+                           waiting_adjust: int = 0) -> Optional[str]:
+        """None ⇒ admit now; else the reason to queue/shed.
+        ``waiting_adjust`` lets the drain path exclude the candidate
+        itself from the waiting count."""
+        pool = self._pool
+        adm = self.admission
+        with self._lock:
+            active = len(self._active) + len(self._waiting) + waiting_adjust
+        pending = pool.pending_tasks() if pool is not None else 0
+        if active >= adm.max_active_jobs:
+            return (f"active jobs {active} ≥ max_active_jobs "
+                    f"{adm.max_active_jobs}")
+        if pending + ticket.n_tasks > adm.max_pending_tasks:
+            return (f"ready queue {pending}+{ticket.n_tasks} > "
+                    f"max_pending_tasks {adm.max_pending_tasks}")
+        if (adm.slo_aware and deadline is not None and pool is not None
+                and pool.sched.avg_task_seconds is not None):
+            est = ((pending + ticket.n_tasks)
+                   * pool.sched.avg_task_seconds
+                   / max(self.spec.n_workers, 1))
+            if est > deadline:
+                return (f"slo unmeetable: est completion {est:.3f}s > "
+                        f"deadline {deadline:.3f}s at current load")
+        return None
+
+    def _admit(self, ticket: JobTicket, handle: DatasetHandle,
+               qc: QueryClass, priority: int,
+               abs_deadline: Optional[float], weight: float) -> None:
+        """Hand an already-reserved ticket (present in ``_active``) to
+        the pool."""
+        if ticket.status == CANCELLED:     # cancelled between reserve/admit
+            with self._lock:
+                self._active.pop(ticket.job_id, None)
+            return
+        pool = self._pool_for()
+        ticket.status = RUNNING
+        ticket.admitted_at = time.monotonic()
+        ticket.tree = StreamingReduceTree(len(qc.plan.tasks))
+
+        fetch = None
+        if self.datastore is not None:
+            store, ids = self.datastore, qc.plan.ids
+
+            def fetch(task: sch.Task):
+                store.fetch_many([ids[sid] for sid in task.sample_ids])
+
+        job = PoolJob(
+            job_id=ticket.job_id, tasks=qc.plan.tasks, seed=ticket.seed,
+            run_batch=self._class_run_batch(qc),
+            emit=ticket.tree.offer,
+            on_done=lambda: self._on_job_done(ticket),
+            on_error=lambda e: self._on_job_error(ticket, e),
+            fetch=fetch, fuse_key=qc.fuse_key, cap=qc.cap,
+            priority=priority, deadline=abs_deadline, weight=weight,
+            on_start=lambda at: setattr(ticket, "started_at", at))
+        pool.submit(job)
+
+    # -- execution closures (shared per query class) -------------------------
+    def _class_run_batch(self, qc: QueryClass):
+        if qc.wave_ctx is not None:
+            def run_batch(items: List[Tuple[PoolJob, sch.Task]]):
+                tasks = [t for _, t in items]
+                seeds = np.asarray([pj.seed + t.task_id
+                                    for pj, t in items], np.int32)
+                values = qc.wave_ctx.run(tasks, seeds)
+                nbytes = qc.wave_ctx.wave_bytes(len(items))
+                with self._stats_lock:
+                    self.dispatch.device_dispatches += 1
+                    self.dispatch.wave_sizes.append(len(items))
+                    self.dispatch.bytes_uploaded += nbytes
+                for jid in dict.fromkeys(pj.job_id for pj, _ in items):
+                    t = self._tickets.get(jid)
+                    if t is not None:
+                        t.device_dispatches += 1
+                        t.bytes_uploaded += nbytes
+                return values
+            return run_batch
+
+        def run_batch(items: List[Tuple[PoolJob, sch.Task]]):
+            out = []
+            for pj, task in items:
+                block, mo = qc.block(task)
+                if qc.engine in ("jnp", "pallas"):
+                    nbytes = float(block.nbytes) + (
+                        float(mo.nbytes) if qc.engine == "jnp" else 0.0)
+                    with self._stats_lock:
+                        self.dispatch.device_dispatches += 1
+                        self.dispatch.bytes_uploaded += nbytes
+                    t = self._tickets.get(pj.job_id)
+                    if t is not None:
+                        t.device_dispatches += 1
+                        t.bytes_uploaded += nbytes
+                out.append(pc.run_map_task(block, mo, pj.seed + task.task_id,
+                                           qc.workload, qc.engine))
+            return out
+        return run_batch
+
+    # -- completion fan-in ---------------------------------------------------
+    def _on_job_done(self, ticket: JobTicket) -> None:
+        if ticket.status != RUNNING:       # cancelled while in flight
+            return
+        try:
+            root = ticket.tree.result(timeout=600.0)
+            ticket._result = finalize_stats(root, ticket.statistic)
+        except BaseException as e:         # noqa: BLE001
+            self._on_job_error(ticket, e)
+            return
+        self.jobs_completed += 1
+        self._finish(ticket, DONE)
+
+    def _on_job_error(self, ticket: JobTicket, error: BaseException) -> None:
+        if ticket.status not in (RUNNING, QUEUED):
+            return
+        ticket.error = error
+        if ticket.tree is not None:
+            ticket.tree.close()
+        self._finish(ticket, FAILED, reason=repr(error))
+
+    def _finish(self, ticket: JobTicket, status: str,
+                reason: Optional[str] = None) -> None:
+        ticket.status = status
+        ticket.reason = reason if reason is not None else ticket.reason
+        ticket.finished_at = time.monotonic()
+        if status == DONE:
+            ticket.tree = None             # free the node arrays
+        with self._lock:
+            self._active.pop(ticket.job_id, None)
+            # drop the service's reference: a long-lived service must not
+            # retain every ticket (and its reduce tree) ever submitted —
+            # the caller's JobTicket stays fully usable
+            self._tickets.pop(ticket.job_id, None)
+        ticket._done.set()
+        self._drain_waiting()
+
+    def _drain_waiting(self) -> None:
+        while True:
+            with self._admission_lock:
+                with self._lock:
+                    if not self._waiting:
+                        return
+                    ticket, args = self._waiting[0]
+                if self._admission_verdict(ticket, None,
+                                           waiting_adjust=-1) is not None:
+                    return
+                with self._lock:
+                    self._waiting.popleft()
+                    self._active[ticket.job_id] = ticket   # reserve
+            handle, qc, priority, abs_deadline, weight = args
+            self._admit(ticket, handle, qc, priority, abs_deadline, weight)
+
+    # -- cancellation --------------------------------------------------------
+    def cancel(self, ticket: JobTicket) -> bool:
+        """Cancel a queued or running job: queued tasks are dropped,
+        in-flight tasks finish but their partials are discarded."""
+        with self._lock:
+            for i, (t, _args) in enumerate(self._waiting):
+                if t is ticket:
+                    del self._waiting[i]
+                    break
+        if ticket.status not in (QUEUED, RUNNING):
+            return False
+        if self._pool is not None:
+            self._pool.cancel(ticket.job_id)
+        if ticket.tree is not None:
+            ticket.tree.close()
+        self._finish(ticket, CANCELLED)
+        return True
+
+    # -- simulated-backend path ----------------------------------------------
+    def _submit_simulated(self, handle: DatasetHandle, workload,
+                          seed: int) -> JobTicket:
+        """Virtual-time spec: run the job inline through the one-shot
+        driver (a resident pool has no meaning in virtual time), reusing
+        the handle's cached kneepoint so repeat queries still skip the
+        offline phase."""
+        engine = pc.resolve_engine(workload.statistic, self.spec.engine)
+        _res, knee = handle.cached_knee(
+            workload, engine=engine, sizing=self.plat.task_sizing,
+            kneepoint_sizes=self.spec.kneepoint_sizes)
+        spec = dataclasses.replace(self.spec, seed=seed, knee_bytes=knee)
+        ticket = JobTicket(next(self._job_seq), handle, workload,
+                           n_tasks=0, statistic=workload.statistic,
+                           seed=seed)
+        self._tickets[ticket.job_id] = ticket
+        ticket.status = RUNNING
+        ticket.admitted_at = ticket.started_at = time.monotonic()
+        try:
+            report = Platform(spec).run(handle.samples, handle.months,
+                                        workload)
+        except BaseException as e:         # noqa: BLE001
+            ticket.error = e
+            self._finish(ticket, FAILED, reason=repr(e))
+            return ticket
+        ticket.n_tasks = report.n_tasks
+        ticket._result = report.result
+        ticket.device_dispatches = report.device_dispatches
+        ticket.bytes_uploaded = report.bytes_uploaded
+        self.jobs_completed += 1
+        self._finish(ticket, DONE)
+        return ticket
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        pool = self._pool
+        with self._lock:
+            active, waiting = len(self._active), len(self._waiting)
+        with self._stats_lock:
+            waves = list(self.dispatch.wave_sizes)
+            out = {
+                "jobs_completed": self.jobs_completed,
+                "jobs_rejected": self.jobs_rejected,
+                "jobs_active": active,
+                "jobs_waiting": waiting,
+                "device_dispatches": self.dispatch.device_dispatches,
+                "bytes_uploaded": self.dispatch.bytes_uploaded,
+                "wave_sizes": waves,
+            }
+        if pool is not None:
+            out["fused_dispatches"] = pool.sched.fused_dispatches
+            out["pending_tasks"] = pool.pending_tasks()
+        return out
