@@ -117,13 +117,6 @@ class ReplicatedDataStore:
         parallel on a small shared pool."""
         if len(sample_ids) <= 1:
             return [self.fetch(s) for s in sample_ids]
-        with self._lock:
-            ranked = sorted(self.nodes, key=lambda n: n.inflight)
-            claims = []
-            for k, sid in enumerate(sample_ids):
-                node = ranked[k % len(ranked)]
-                node.inflight += 1
-                claims.append((sid, node, node.inflight))
 
         def one(claim):
             sid, node, snap = claim
@@ -133,18 +126,49 @@ class ReplicatedDataStore:
                 with self._lock:
                     node.inflight -= 1
 
+        # claims AND submissions happen under the one lock acquisition:
+        # close() also swaps the executor under the lock, so it can never
+        # shut the pool down between a claim (inflight incremented) and
+        # its submit — already-submitted fetches survive shutdown(wait=
+        # False) and their finally blocks settle the inflight accounting
+        with self._lock:
+            ranked = sorted(self.nodes, key=lambda n: n.inflight)
+            pool = self._fetch_pool_locked()
+            futures = []
+            for k, sid in enumerate(sample_ids):
+                node = ranked[k % len(ranked)]
+                node.inflight += 1
+                futures.append(pool.submit(one, (sid, node, node.inflight)))
+
         out: List[np.ndarray] = []
-        for data, took in self._fetch_pool().map(one, claims):
+        for future in futures:
+            data, took = future.result()
             self._observe(took)
             out.append(data)
         return out
 
-    def _fetch_pool(self):
+    def _fetch_pool_locked(self):
+        """Shared fetch executor, lazily created; caller holds ``_lock``
+        (so two concurrent first fetch_many() calls share one pool)."""
         if self._executor is None:
             from concurrent.futures import ThreadPoolExecutor
             self._executor = ThreadPoolExecutor(
                 max_workers=8, thread_name_prefix="datastore-fetch")
         return self._executor
+
+    def close(self) -> None:
+        """Shut down the shared fetch pool (idempotent; the store stays
+        usable — a later ``fetch_many`` lazily recreates it)."""
+        with self._lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown(wait=False)
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:       # interpreter teardown: best effort
+            pass
 
     # -- feedback from the scheduler ------------------------------------------
     def report_exec_time(self, exec_time: float) -> None:

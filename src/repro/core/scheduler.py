@@ -361,6 +361,7 @@ class MultiJobScheduler:
         dropped = list(job.pending)
         job.pending.clear()
         job.n_tasks -= len(dropped)
+        self._drop_from_rotation(job_id)
         if job.inflight == 0:
             self.jobs.pop(job_id, None)
         return dropped
@@ -373,6 +374,17 @@ class MultiJobScheduler:
         job = self.jobs.pop(job_id, None)
         if job is not None:
             job.pending.clear()
+        self._drop_from_rotation(job_id)
+
+    def _drop_from_rotation(self, job_id: int) -> None:
+        """A job leaving ``self.jobs`` (or losing all pending tasks) must
+        leave ``_rr`` too: :meth:`_pick` only prunes stale ids at the
+        *front* of the rotation, so a mid-rotation leftover would index a
+        popped job."""
+        try:
+            self._rr.remove(job_id)
+        except ValueError:
+            pass
 
     def pending_tasks(self) -> int:
         return sum(len(j.pending) for j in self.jobs.values())
@@ -407,8 +419,10 @@ class MultiJobScheduler:
         boosted = self._urgent(now)
         if boosted is not None:
             return boosted
-        ready = [self.jobs[jid] for jid in self._rr
-                 if self.jobs[jid].pending]
+        # ``.get``: defensive against rotation entries whose job was
+        # removed out-of-band — never KeyError inside a pool worker
+        ready = [j for jid in self._rr
+                 if (j := self.jobs.get(jid)) is not None and j.pending]
         if not ready:
             return None
         top = max(j.priority for j in ready)
@@ -441,10 +455,7 @@ class MultiJobScheduler:
         # quantum so an idle-ish job cannot hoard turns
         job.deficit = min(job.deficit - len(batch), self.cfg.quantum)
         # rotate the served job to the back of the round-robin order
-        try:
-            self._rr.remove(job.job_id)
-        except ValueError:
-            pass
+        self._drop_from_rotation(job.job_id)
         if job.pending:
             self._rr.append(job.job_id)
         # cross-job fusion fill: same fuse key, FIFO from each peer
@@ -467,13 +478,18 @@ class MultiJobScheduler:
         return batch
 
     def on_task_complete(self, job_id: int,
-                         exec_seconds: float) -> bool:
+                         exec_seconds: Optional[float]) -> bool:
         """Record one finished task; True when its job just completed.
-        Feeds the per-task-seconds EMA the deadline model uses."""
-        a = 0.3
-        self.avg_task_seconds = (
-            exec_seconds if self.avg_task_seconds is None
-            else (1 - a) * self.avg_task_seconds + a * exec_seconds)
+        ``exec_seconds`` feeds the per-task-seconds EMA the deadline
+        model uses; pass ``None`` to settle in-flight accounting without
+        a timing sample (tasks claimed from an already-cancelled job
+        never execute, and a 0.0 sample would drag the deadline-boost
+        and admission estimates toward zero)."""
+        if exec_seconds is not None:
+            a = 0.3
+            self.avg_task_seconds = (
+                exec_seconds if self.avg_task_seconds is None
+                else (1 - a) * self.avg_task_seconds + a * exec_seconds)
         job = self.jobs.get(job_id)
         if job is None:
             return False

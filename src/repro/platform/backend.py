@@ -195,17 +195,25 @@ class ServicePool:
         """Spin up the resident workers; job startup cost is paid here,
         ONCE, instead of per job (the between-jobs platform tax the
         service exists to remove)."""
-        if self.started:
-            return
-        self.started = True
+        with self._cond:
+            # atomic check-and-set: two concurrent first submits must not
+            # both spawn worker threads; a closed pool stays down (a
+            # submit racing close() must not pay the startup sleep and
+            # spawn workers that would only see _stop and exit)
+            if self.started or self._stop:
+                return
+            self.started = True
         if self.plat.startup_time:
             time.sleep(self.plat.startup_time)
-        self._threads = [
-            threading.Thread(target=self._worker_loop, args=(w,),
-                             name=f"service-worker-{w}", daemon=True)
-            for w in range(self.n_workers)]
-        for th in self._threads:
-            th.start()
+        with self._cond:
+            if self._stop:     # close() ran during the startup sleep
+                return
+            self._threads = [
+                threading.Thread(target=self._worker_loop, args=(w,),
+                                 name=f"service-worker-{w}", daemon=True)
+                for w in range(self.n_workers)]
+            for th in self._threads:
+                th.start()
 
     def close(self) -> None:
         with self._cond:
@@ -219,12 +227,20 @@ class ServicePool:
     def submit(self, job: PoolJob) -> None:
         self.start()
         with self._cond:
-            self._jobs[job.job_id] = job
-            self.sched.add_job(
-                job.job_id, job.tasks, fuse_key=job.fuse_key, cap=job.cap,
-                priority=job.priority, deadline=job.deadline,
-                weight=job.weight)
-            self._cond.notify_all()
+            if self._stop:
+                # close() won the race: no worker will ever drain this
+                # job — refuse instead of parking it in a dead scheduler
+                stopped = True
+            else:
+                self._jobs[job.job_id] = job
+                self.sched.add_job(
+                    job.job_id, job.tasks, fuse_key=job.fuse_key,
+                    cap=job.cap, priority=job.priority,
+                    deadline=job.deadline, weight=job.weight)
+                self._cond.notify_all()
+                stopped = False
+        if stopped:
+            job.on_error(RuntimeError("pool is closed"))
 
     def cancel(self, job_id: int) -> int:
         """Drop a job's queued tasks; in-flight tasks finish and their
@@ -245,26 +261,42 @@ class ServicePool:
         del wid
         plat = self.plat
         while True:
+            claim_err: Optional[BaseException] = None
+            failed_ids: List[int] = []
             with self._cond:
                 while not self._stop and not self.sched.has_ready():
                     self._cond.wait(0.02)
                 if self._stop:
                     return
-                batch = self.sched.claim(time.monotonic())
+                try:
+                    batch = self.sched.claim(time.monotonic())
+                except Exception as e:      # noqa: BLE001
+                    # a scheduler-policy bug must fail jobs, not kill the
+                    # worker thread (a dead worker hangs every outstanding
+                    # ticket until timeout); the policy state is no longer
+                    # trustworthy, so fail everything it was managing
+                    claim_err, batch = e, []
+                    failed_ids = list(self._jobs)
                 pool_batch = [(self._jobs[j.job_id], t) for j, t in batch
                               if j.job_id in self._jobs]
                 now = time.monotonic()
                 fresh = [pj for pj, _ in pool_batch
                          if pj.job_id not in self._started_jobs]
                 self._started_jobs.update(pj.job_id for pj in fresh)
+            if claim_err is not None:
+                self._fail_jobs(failed_ids, claim_err)
+                continue
             if not batch:
                 continue
             if not pool_batch:
-                # every job in the claim was cancelled after claiming:
-                # settle the in-flight accounting and move on
+                # defensive: should be unreachable while cancel() keeps
+                # claimed jobs resident (sched.jobs ⊆ _jobs under _cond),
+                # but if that invariant ever breaks, settle the in-flight
+                # accounting and move on (no timing sample — nothing
+                # executed, and a 0.0 would skew the EMA)
                 with self._cond:
                     for job, _task in batch:
-                        self.sched.on_task_complete(job.job_id, 0.0)
+                        self.sched.on_task_complete(job.job_id, None)
                     self._cond.notify_all()
                 continue
             for pj in {pj.job_id: pj for pj in fresh}.values():
@@ -288,11 +320,17 @@ class ServicePool:
                 time.sleep(0.20 * took)
             for (pj, task), value in zip(pool_batch, values):
                 pj.emit(task.task_id, value)
-            exec_each = took / max(len(batch), 1)
+            # average over the tasks that actually ran; a job missing from
+            # pool_batch (defensive — see the not-pool_batch branch above)
+            # settles without a sample (its tasks never executed, and
+            # charging them would dilute the EMA toward zero)
+            exec_each = took / max(len(pool_batch), 1)
+            executed = {pj.job_id for pj, _ in pool_batch}
             finished: List[PoolJob] = []
             with self._cond:
                 for job, _task in batch:
-                    if self.sched.on_task_complete(job.job_id, exec_each):
+                    sample = (exec_each if job.job_id in executed else None)
+                    if self.sched.on_task_complete(job.job_id, sample):
                         pj = self._jobs.pop(job.job_id, None)
                         self._started_jobs.discard(job.job_id)
                         if pj is not None:
@@ -304,9 +342,16 @@ class ServicePool:
     def _fail_batch(self, batch, error: BaseException) -> None:
         """A batch died: fail every job with a task in it (their values
         are lost); job-level recovery is per job — other jobs proceed."""
+        self._fail_jobs(dict.fromkeys(j.job_id for j, _ in batch), error)
+
+    def _fail_jobs(self, job_ids, error: BaseException) -> None:
+        """Fail each given job: drop it from the scheduler and the job
+        table under the lock, then fan the error out to each job's
+        ``on_error`` outside it (callbacks may block).  Already-removed
+        ids are skipped, so concurrent failers never double-report."""
         failed: List[PoolJob] = []
         with self._cond:
-            for job_id in dict.fromkeys(j.job_id for j, _ in batch):
+            for job_id in job_ids:
                 self.sched.fail_job(job_id)
                 pj = self._jobs.pop(job_id, None)
                 self._started_jobs.discard(job_id)

@@ -33,7 +33,9 @@ fixed seed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import (Any, Callable, Dict, List, MutableSequence, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -71,7 +73,16 @@ class DispatchStats:
 
     device_dispatches: int = 0
     bytes_uploaded: float = 0.0
-    wave_sizes: List[int] = dataclasses.field(default_factory=list)
+    # a list for one-shot jobs; :meth:`bounded` swaps in a capped deque
+    wave_sizes: MutableSequence[int] = dataclasses.field(
+        default_factory=list)
+
+    @classmethod
+    def bounded(cls, max_wave_history: int) -> "DispatchStats":
+        """Counters for a long-lived holder (the persistent service):
+        dispatches never stop, so only the most recent
+        ``max_wave_history`` wave sizes are retained."""
+        return cls(wave_sizes=deque(maxlen=max_wave_history))
 
 
 def wave_supported(engine: str) -> bool:

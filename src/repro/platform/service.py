@@ -241,12 +241,14 @@ class JobTicket:
         self.bytes_uploaded = 0.0
         self.device_dispatches = 0               # waves this job rode in
         self.tree: Optional[StreamingReduceTree] = None
+        self.cancel_requested = False      # set before pool.cancel fires
         self._result: Optional[dict] = None
         self._done = threading.Event()
 
     # -- poll ---------------------------------------------------------------
     def progress(self) -> Tuple[int, int]:
-        done = self.tree.leaves_seen if self.tree is not None else 0
+        tree = self.tree       # alias: _finish(DONE) nulls it concurrently
+        done = tree.leaves_seen if tree is not None else 0
         return (self.n_tasks if self.status == DONE else done, self.n_tasks)
 
     @property
@@ -268,14 +270,26 @@ class JobTicket:
         like the real statistic); ``None`` before the first leaf.  The
         final :meth:`result` remains bit-deterministic — this view is
         only as stable as arrival order."""
-        if self._result is not None:
+        # the DONE guard matters: a job failed by close() mid-run may
+        # still have had _result assigned by the racing completion path —
+        # a non-DONE ticket must keep reporting a snapshot, not a final
+        if self.status == DONE and self._result is not None:
             return self._result
-        if self.tree is None:
+        tree = self.tree       # alias: _finish(DONE) nulls it concurrently
+        if tree is None:
             return None
-        root = self.tree.snapshot()
+        root = tree.snapshot()
         if root is None:
             return None
         return finalize_stats(root, self.statistic)
+
+    def _close_tree(self) -> None:
+        """Abort the reduce tree if still attached.  The aliased read is
+        load-bearing: ``_finish(DONE)`` nulls ``self.tree`` concurrently,
+        so a naive check-then-call races an AttributeError."""
+        tree = self.tree
+        if tree is not None:
+            tree.close()
 
     # -- block --------------------------------------------------------------
     def wait(self, timeout: Optional[float] = None) -> bool:
@@ -329,7 +343,10 @@ class PlatformService:
         self.admission = admission
         self.datastore = datastore
         self.plat = resolve_platform_config(spec)
-        self.dispatch = pc.DispatchStats()     # service-wide counters
+        # service-wide counters; a persistent service dispatches forever,
+        # so only a bounded window of wave sizes is kept (one-shot
+        # JobReports keep the full list)
+        self.dispatch = pc.DispatchStats.bounded(4096)
         self.jobs_completed = 0
         self.jobs_rejected = 0
         self._pool: Optional[ServicePool] = None
@@ -357,27 +374,25 @@ class PlatformService:
         running jobs are failed with a "service closed" error — their
         ``result()`` callers unblock immediately instead of hanging on a
         pool that no longer exists."""
-        with self._lock:
-            self._closed = True
-            waiting = list(self._waiting)
-            self._waiting.clear()
+        # serialized with submit()'s admission section: once the flag
+        # flips, no racing submit can reserve a slot — so the orphan
+        # snapshot below cannot miss a ticket that would then wait on a
+        # pool that no longer drains it
+        with self._admission_lock:
+            with self._lock:
+                self._closed = True
+                waiting = list(self._waiting)
+                self._waiting.clear()
+                pool = self._pool
         for ticket, _args in waiting:
             self._finish(ticket, REJECTED, reason="service closed")
-        if self._pool is not None:
-            self._pool.close()
+        if pool is not None:
+            pool.close()
         with self._lock:
             orphans = list(self._active.values())
         for ticket in orphans:
             self._on_job_error(ticket,
                                RuntimeError("service closed mid-job"))
-
-    def _pool_for(self) -> ServicePool:
-        if self._pool is None:
-            self._pool = ServicePool(
-                self.spec.n_workers, self.plat,
-                cfg=sch.MultiJobConfig())
-            self._pool.start()
-        return self._pool
 
     # -- registry ------------------------------------------------------------
     def register_dataset(self, samples: Dict[int, np.ndarray],
@@ -435,27 +450,36 @@ class PlatformService:
         abs_deadline = (None if deadline is None
                         else time.monotonic() + deadline)
         with self._admission_lock:
+            if self._closed:       # close() raced the entry check above
+                self._tickets.pop(ticket.job_id, None)
+                raise RuntimeError("service is closed")
             verdict = self._admission_verdict(ticket, deadline)
+            # an slo verdict is final (waiting longer cannot meet the
+            # deadline); capacity verdicts queue unless the mode sheds
+            reject_now = (verdict is not None
+                          and (self.admission.mode == "shed"
+                               or verdict[0] == "slo"))
             if verdict is None:
                 with self._lock:               # reserve the slot atomically
                     self._active[ticket.job_id] = ticket
-            elif not (self.admission.mode == "shed"
-                      or verdict.startswith("slo")):
+            elif not reject_now:
                 with self._lock:
                     self._waiting.append(
                         (ticket,
                          (handle, qc, priority, abs_deadline, weight)))
         if verdict is None:
             self._admit(ticket, handle, qc, priority, abs_deadline, weight)
-        elif self.admission.mode == "shed" or verdict.startswith("slo"):
-            self.jobs_rejected += 1
-            self._finish(ticket, REJECTED, reason=verdict)
+        elif reject_now:
+            self._finish(ticket, REJECTED, reason=verdict[1])
         return ticket
 
     def _admission_verdict(self, ticket: JobTicket,
                            deadline: Optional[float], *,
-                           waiting_adjust: int = 0) -> Optional[str]:
-        """None ⇒ admit now; else the reason to queue/shed.
+                           waiting_adjust: int = 0
+                           ) -> Optional[Tuple[str, str]]:
+        """None ⇒ admit now; else ``(kind, reason)`` where kind is
+        ``"capacity"`` (queueable — load will drain) or ``"slo"``
+        (final — the deadline is unmeetable regardless of queueing).
         ``waiting_adjust`` lets the drain path exclude the candidate
         itself from the waiting count."""
         pool = self._pool
@@ -464,10 +488,10 @@ class PlatformService:
             active = len(self._active) + len(self._waiting) + waiting_adjust
         pending = pool.pending_tasks() if pool is not None else 0
         if active >= adm.max_active_jobs:
-            return (f"active jobs {active} ≥ max_active_jobs "
+            return ("capacity", f"active jobs {active} ≥ max_active_jobs "
                     f"{adm.max_active_jobs}")
         if pending + ticket.n_tasks > adm.max_pending_tasks:
-            return (f"ready queue {pending}+{ticket.n_tasks} > "
+            return ("capacity", f"ready queue {pending}+{ticket.n_tasks} > "
                     f"max_pending_tasks {adm.max_pending_tasks}")
         if (adm.slo_aware and deadline is not None and pool is not None
                 and pool.sched.avg_task_seconds is not None):
@@ -475,8 +499,8 @@ class PlatformService:
                    * pool.sched.avg_task_seconds
                    / max(self.spec.n_workers, 1))
             if est > deadline:
-                return (f"slo unmeetable: est completion {est:.3f}s > "
-                        f"deadline {deadline:.3f}s at current load")
+                return ("slo", f"slo unmeetable: est completion {est:.3f}s "
+                        f"> deadline {deadline:.3f}s at current load")
         return None
 
     def _admit(self, ticket: JobTicket, handle: DatasetHandle,
@@ -484,12 +508,25 @@ class PlatformService:
                abs_deadline: Optional[float], weight: float) -> None:
         """Hand an already-reserved ticket (present in ``_active``) to
         the pool."""
-        if ticket.status == CANCELLED:     # cancelled between reserve/admit
-            with self._lock:
+        with self._lock:
+            # one atomic decision: never build/feed a pool once closed,
+            # and never resurrect a ticket cancel()/close() already
+            # finished; concurrent first admits share ONE pool
+            if self._closed or ticket.status != QUEUED:
                 self._active.pop(ticket.job_id, None)
+                admit = False
+            else:
+                if self._pool is None:
+                    self._pool = ServicePool(
+                        self.spec.n_workers, self.plat,
+                        cfg=sch.MultiJobConfig())
+                pool = self._pool
+                ticket.status = RUNNING
+                admit = True
+        if not admit:
+            if ticket.status == QUEUED:    # closed before any terminal
+                self._finish(ticket, REJECTED, reason="service closed")
             return
-        pool = self._pool_for()
-        ticket.status = RUNNING
         ticket.admitted_at = time.monotonic()
         ticket.tree = StreamingReduceTree(len(qc.plan.tasks))
 
@@ -510,6 +547,14 @@ class PlatformService:
             priority=priority, deadline=abs_deadline, weight=weight,
             on_start=lambda at: setattr(ticket, "started_at", at))
         pool.submit(job)
+        if ticket.cancel_requested:
+            # cancel() raced the hand-off: it saw RUNNING but the job was
+            # not yet in the pool, so its pool.cancel was a no-op — drop
+            # the tasks now and close the tree it may have missed (the
+            # flag, not the status, is checked: cancel() raises it before
+            # its pool.cancel, so one of the two cancels sees the job)
+            pool.cancel(ticket.job_id)
+            ticket._close_tree()
 
     # -- execution closures (shared per query class) -------------------------
     def _class_run_batch(self, qc: QueryClass):
@@ -561,32 +606,47 @@ class PlatformService:
         except BaseException as e:         # noqa: BLE001
             self._on_job_error(ticket, e)
             return
-        self.jobs_completed += 1
         self._finish(ticket, DONE)
 
     def _on_job_error(self, ticket: JobTicket, error: BaseException) -> None:
         if ticket.status not in (RUNNING, QUEUED):
             return
         ticket.error = error
-        if ticket.tree is not None:
-            ticket.tree.close()
+        ticket._close_tree()
         self._finish(ticket, FAILED, reason=repr(error))
 
     def _finish(self, ticket: JobTicket, status: str,
-                reason: Optional[str] = None) -> None:
-        ticket.status = status
-        ticket.reason = reason if reason is not None else ticket.reason
-        ticket.finished_at = time.monotonic()
-        if status == DONE:
-            ticket.tree = None             # free the node arrays
+                reason: Optional[str] = None) -> bool:
+        # every path to a terminal status funnels through here; the
+        # first terminal state wins (callers' check-then-act guards can
+        # race — e.g. cancel() vs close()'s waiting-queue rejection —
+        # so the arbitration lives here, under _lock).  Returns whether
+        # THIS transition won, so e.g. cancel() can report truthfully.
         with self._lock:
+            if ticket.status in (DONE, FAILED, REJECTED, CANCELLED):
+                return False
+            ticket.status = status
+            ticket.reason = (reason if reason is not None
+                             else ticket.reason)
+            ticket.finished_at = time.monotonic()
             self._active.pop(ticket.job_id, None)
             # drop the service's reference: a long-lived service must not
             # retain every ticket (and its reduce tree) ever submitted —
             # the caller's JobTicket stays fully usable
             self._tickets.pop(ticket.job_id, None)
+        # service-wide outcome counters (under _stats_lock — pool workers
+        # and submitters finish tickets concurrently)
+        if status in (DONE, REJECTED):
+            with self._stats_lock:
+                if status == DONE:
+                    self.jobs_completed += 1
+                else:
+                    self.jobs_rejected += 1
+        if status == DONE:
+            ticket.tree = None             # free the node arrays
         ticket._done.set()
         self._drain_waiting()
+        return True
 
     def _drain_waiting(self) -> None:
         while True:
@@ -608,19 +668,29 @@ class PlatformService:
     def cancel(self, ticket: JobTicket) -> bool:
         """Cancel a queued or running job: queued tasks are dropped,
         in-flight tasks finish but their partials are discarded."""
-        with self._lock:
-            for i, (t, _args) in enumerate(self._waiting):
-                if t is ticket:
-                    del self._waiting[i]
-                    break
+        # _admission_lock serializes this removal with _drain_waiting's
+        # read-then-popleft (and with close()'s snapshot): mutating the
+        # deque under _lock alone could make the drain pop a *different*
+        # ticket than the one it verdict-checked, silently dropping it
+        with self._admission_lock:
+            with self._lock:
+                for i, (t, _args) in enumerate(self._waiting):
+                    if t is ticket:
+                        del self._waiting[i]
+                        break
         if ticket.status not in (QUEUED, RUNNING):
             return False
+        # the flag is raised BEFORE pool.cancel so _admit's post-submit
+        # re-check pairs with it: either this pool.cancel sees the
+        # submitted job, or _admit's re-check sees the flag — the
+        # store-load ordering leaves no window where both miss
+        ticket.cancel_requested = True
         if self._pool is not None:
             self._pool.cancel(ticket.job_id)
-        if ticket.tree is not None:
-            ticket.tree.close()
-        self._finish(ticket, CANCELLED)
-        return True
+        ticket._close_tree()
+        # the arbitrated outcome: False when the job's own completion
+        # (or a close()-rejection) beat this cancellation to _finish
+        return self._finish(ticket, CANCELLED)
 
     # -- simulated-backend path ----------------------------------------------
     def _submit_simulated(self, handle: DatasetHandle, workload,
@@ -637,8 +707,21 @@ class PlatformService:
         ticket = JobTicket(next(self._job_seq), handle, workload,
                            n_tasks=0, statistic=workload.statistic,
                            seed=seed)
-        self._tickets[ticket.job_id] = ticket
-        ticket.status = RUNNING
+        with self._admission_lock:
+            # same closed re-check + slot reservation as the threaded
+            # path: a submit racing close() raises instead of running
+            # inline on a closed service, and close()'s orphan pass
+            # covers a reserved ticket mid-run (_finish arbitrates the
+            # terminal state either way)
+            if self._closed:
+                raise RuntimeError("service is closed")
+            with self._lock:
+                self._active[ticket.job_id] = ticket
+                self._tickets[ticket.job_id] = ticket
+                # transition inside the locked section: after release,
+                # close()'s orphan pass may fail the ticket, and an
+                # unguarded later write would resurrect a terminal state
+                ticket.status = RUNNING
         ticket.admitted_at = ticket.started_at = time.monotonic()
         try:
             report = Platform(spec).run(handle.samples, handle.months,
@@ -651,7 +734,6 @@ class PlatformService:
         ticket._result = report.result
         ticket.device_dispatches = report.device_dispatches
         ticket.bytes_uploaded = report.bytes_uploaded
-        self.jobs_completed += 1
         self._finish(ticket, DONE)
         return ticket
 

@@ -249,6 +249,55 @@ def test_priority_tier_served_first():
     assert {j.job_id for j, _ in batch} == {2}
 
 
+def test_cancel_mid_rotation_job_does_not_break_claim():
+    # cancelling a queued non-front job used to leave its id in the
+    # round-robin rotation, so the next claim raised KeyError and killed
+    # the pool worker thread
+    msched = sch.MultiJobScheduler(1, sch.MultiJobConfig(quantum=2.0))
+    for jid in (1, 2, 3):
+        msched.add_job(jid, [sch.Task(100 * jid + i, (i,), 1.0)
+                             for i in range(4)],
+                       fuse_key=lambda t, _j=jid: (_j,), cap=2)
+    assert msched.cancel_job(2)            # queued, never claimed
+    served = set()
+    while True:
+        batch = msched.claim(now=0.0)      # must not raise
+        if not batch:
+            break
+        for job, _t in batch:
+            served.add(job.job_id)
+            msched.on_task_complete(job.job_id, 1e-3)
+    assert served == {1, 3}
+
+
+def test_fail_job_with_pending_tasks_does_not_break_claim():
+    # a batch failure in a job that still has pending tasks removes the
+    # job; the rotation must forget it too
+    msched = sch.MultiJobScheduler(1, sch.MultiJobConfig(quantum=2.0))
+    msched.add_job(1, [sch.Task(i, (i,), 1.0) for i in range(8)],
+                   fuse_key=lambda t: ("j1",), cap=2)
+    msched.add_job(2, [sch.Task(100 + i, (i,), 1.0) for i in range(8)],
+                   fuse_key=lambda t: ("j2",), cap=2)
+    batch = msched.claim(now=0.0)
+    assert {j.job_id for j, _ in batch} == {1} and msched.jobs[1].pending
+    msched.fail_job(1)
+    batch = msched.claim(now=0.0)          # must not raise
+    assert {j.job_id for j, _ in batch} == {2}
+
+
+def test_cancelled_settlement_does_not_skew_task_ema():
+    msched = sch.MultiJobScheduler(1)
+    msched.add_job(1, [sch.Task(i, (i,), 1.0) for i in range(2)],
+                   fuse_key=lambda t: ("j1",), cap=2)
+    msched.claim(now=0.0)
+    msched.avg_task_seconds = 0.5
+    # tasks claimed from a since-cancelled job settle without a sample
+    assert not msched.on_task_complete(1, None)
+    assert msched.on_task_complete(1, None)
+    assert msched.avg_task_seconds == 0.5
+    assert 1 not in msched.jobs
+
+
 # -- admission control --------------------------------------------------------
 
 
@@ -263,6 +312,63 @@ def test_admission_shed_rejects_over_capacity():
     assert shed.status == "rejected"
     with pytest.raises(AdmissionError):
         shed.result(timeout=5)
+
+
+def test_concurrent_first_submits_share_one_pool():
+    # unsynchronized lazy pool creation used to let two racing first
+    # submits each build + start a resident pool (orphaning one)
+    samples, months = _dataset(48)
+    with PlatformService(_spec()) as svc:
+        handle = svc.register_dataset(samples, months)
+        tickets, errs = [], []
+
+        def go(s):
+            try:
+                tickets.append(svc.submit(handle, WL, seed=s))
+            except BaseException as e:      # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=go, args=(s,)) for s in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errs
+        for t in tickets:
+            t.result(timeout=120)
+        assert len(svc._pool._threads) == svc.spec.n_workers
+
+
+def test_submit_racing_close_never_strands_a_ticket():
+    # a submit that passed the _closed check while close() ran used to
+    # hand its job to a stopped pool, hanging result() forever
+    samples, months = _dataset(48)
+    for _trial in range(3):
+        svc = PlatformService(_spec())
+        handle = svc.register_dataset(samples, months)
+        got = []
+
+        def racer(s):
+            try:
+                got.append(svc.submit(handle, WL, seed=s))
+            except RuntimeError:
+                pass                        # "service is closed"
+
+        threads = [threading.Thread(target=racer, args=(s,))
+                   for s in range(6)]
+        for th in threads:
+            th.start()
+        svc.close()
+        for th in threads:
+            th.join()
+        for ticket in got:
+            try:
+                ticket.result(timeout=30)   # must resolve, not hang
+            except TimeoutError:
+                pytest.fail(f"ticket {ticket.job_id} stranded "
+                            f"(status={ticket.status})")
+            except BaseException:           # noqa: BLE001
+                pass                        # rejected/failed/closed: fine
 
 
 def test_admission_queue_admits_when_capacity_frees():
@@ -449,7 +555,9 @@ def test_fetch_many_concurrent_observations_recorded():
 
 
 def test_datanode_latency_uses_inflight_snapshot():
-    node = DataNode(0, latency=lambda nbytes: 1e-3)
+    # base latency well above scheduler jitter so the modelled-contention
+    # ratio cannot be flipped by wall-clock noise on a busy runner
+    node = DataNode(0, latency=lambda nbytes: 1e-2)
     node.store[0] = np.zeros(1024, np.float32)
     node.inflight = 40                         # racing counter, ignored
     _, calm = node.fetch(0, inflight=1)
