@@ -10,7 +10,7 @@ container-scaled versions of the thesis' workloads.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 

@@ -23,6 +23,7 @@ from __future__ import annotations
 import argparse
 import inspect
 import json
+import os
 import sys
 import time
 
@@ -37,7 +38,20 @@ MAX_REPEAT_BYTES_FRACTION = 0.01
 # factor (measured headroom is ~69x); svc >= seq but under the factor
 # warns.  The deterministic dispatch-count gate is the primary criterion.
 SERVICE_P95_TOLERANCE = 1.2
-SMOKE_MODULES = ("platform_overhead", "kernels", "service")
+# with one data node degraded to 5x latency, the balanced scheduler must
+# beat FIFO placement by at least this makespan factor, bit-identically
+# (ISSUE 4 acceptance criterion; measured headroom ~3x)
+MIN_BALANCE_RATIO = 2.0
+# --compare: metrics may regress by at most this fraction vs the
+# committed baseline, else exit 2.  Byte metrics additionally get a
+# small absolute slack (near-zero baselines like the ~128 B repeat
+# upload would otherwise fail on any jitter); dispatch counts get +1
+# (wave draining is timing-dependent at the margin — BTT lands on 4 or
+# 5 dispatches run to run — while a real fusion loss jumps to dozens)
+COMPARE_TOLERANCE = 0.10
+COMPARE_BYTES_ABS_SLACK = 512.0
+COMPARE_COUNT_ABS_SLACK = 1.0
+SMOKE_MODULES = ("platform_overhead", "kernels", "service", "balance")
 
 
 def _check_wave_regression(structured: dict) -> list:
@@ -97,6 +111,107 @@ def _check_service_regression(structured: dict) -> list:
     return failures
 
 
+def _check_balance_regression(structured: dict) -> list:
+    """ISSUE 4 gates over bench_balance's structured results."""
+    failures = []
+    deg = structured.get("degraded")
+    if deg:
+        if deg["ratio"] < MIN_BALANCE_RATIO:
+            failures.append(
+                f"balanced scheduling under a 5x-degraded data node only "
+                f"{deg['ratio']:.2f}x better than FIFO placement "
+                f"(need >= {MIN_BALANCE_RATIO}x)")
+        if not deg["bit_identical"]:
+            failures.append(
+                "degraded-node run result diverged from the undegraded "
+                "run — the data path leaked into the statistic")
+    fo = structured.get("failover")
+    if fo and not (fo["result_ok"] and fo["node0_down"]):
+        failures.append(
+            f"data-node failover broken: result_ok={fo['result_ok']} "
+            f"node0_down={fo['node0_down']}")
+    return failures
+
+
+# metric extraction for the --compare regression gate: metric name ->
+# (value, direction); "lower" metrics fail when they grow past the
+# tolerance, "higher" metrics when they shrink past it.  Only
+# deterministic counters (dispatch counts, bytes) and policy ratios are
+# compared — wall-clock seconds are never gated here.
+def _comparable_metrics(report: dict) -> dict:
+    out = {}
+    mods = report.get("modules", {})
+    wave = (mods.get("platform_overhead", {})
+            .get("structured", {}).get("wave", {}))
+    for plat, res in wave.items():
+        out[f"wave.{plat}.dispatches"] = (
+            float(res["wave"]["device_dispatches"]), "lower")
+        out[f"wave.{plat}.bytes_uploaded"] = (
+            float(res["wave"]["bytes_uploaded"]), "lower")
+        # dispatch_ratio is NOT compared: it is the same 4-vs-5 wave
+        # jitter as the count, and the absolute MIN_DISPATCH_RATIO gate
+        # already bounds it
+    svc = mods.get("service", {}).get("structured", {})
+    if svc.get("repeat"):
+        out["service.repeat_bytes_max"] = (
+            float(svc["repeat"]["repeat_bytes_max"]), "lower")
+    if svc.get("concurrent"):
+        out["service.burst_dispatches"] = (
+            float(svc["concurrent"]["service"]["dispatches"]), "lower")
+    # bench_balance's makespan ratio is wall-clock-derived, so it is
+    # gated by its own MIN_BALANCE_RATIO check, not compared here
+    return out
+
+
+def _compare_to_baseline(report: dict, baseline_path: str) -> list:
+    """Exit-2 regression gate vs the committed BENCH_platform.json:
+    compare shared deterministic metrics within COMPARE_TOLERANCE and
+    write a markdown table to $GITHUB_STEP_SUMMARY (when set) and
+    stdout."""
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    cur = _comparable_metrics(report)
+    base = _comparable_metrics(baseline)
+    failures = []
+    lines = ["## Benchmark comparison vs baseline", "",
+             "| metric | baseline | current | Δ | status |",
+             "|---|---:|---:|---:|---|"]
+    for key in sorted(set(cur) & set(base)):
+        c, direction = cur[key]
+        b, _ = base[key]
+        delta = (c - b) / b if b else 0.0
+        if direction == "lower":
+            slack = (COMPARE_BYTES_ABS_SLACK if "bytes" in key
+                     else COMPARE_COUNT_ABS_SLACK)
+            bad = c > max(b * (1.0 + COMPARE_TOLERANCE), b + slack)
+        else:
+            bad = c < b * (1.0 - COMPARE_TOLERANCE)
+        status = "❌ regressed" if bad else "✅ ok"
+        if bad:
+            failures.append(
+                f"{key} regressed vs baseline: {c:.2f} vs {b:.2f} "
+                f"({direction} is better, tolerance "
+                f"{COMPARE_TOLERANCE:.0%})")
+        lines.append(f"| {key} | {b:.2f} | {c:.2f} | {delta:+.1%} "
+                     f"| {status} |")
+    for key in sorted(set(base) - set(cur)):
+        lines.append(f"| {key} | {base[key][0]:.2f} | — | — | skipped |")
+    table = "\n".join(lines) + "\n"
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(table)
+    return failures
+
+
+_STRUCTURED_CHECKS = {
+    "service": _check_service_regression,
+    "balance": _check_balance_regression,
+    "platform_overhead": _check_wave_regression,
+}
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("only", nargs="?", default=None,
@@ -110,15 +225,28 @@ def main(argv=None) -> int:
                         "cross-PR record and the CI artifact — and off "
                         "for single-module runs so a partial report "
                         "never clobbers it)")
+    parser.add_argument("--compare", default=None, metavar="BASELINE",
+                        help="exit 2 when deterministic metrics (dispatch "
+                        "counts, bytes uploaded, policy ratios) regress "
+                        "beyond tolerance vs this committed "
+                        "BENCH_platform.json; writes a markdown table to "
+                        "$GITHUB_STEP_SUMMARY when set")
+    parser.add_argument("--chaos", action="store_true",
+                        help="add bench_balance's fault-injection pass "
+                        "(random data-node slowdowns/kills; nightly CI)")
     args = parser.parse_args(argv)
     if args.json is None:
         args.json = "" if args.only else "BENCH_platform.json"
 
-    from benchmarks import (bench_elasticity, bench_hetero, bench_jobsize,
-                            bench_kernels, bench_kneepoint,
+    from benchmarks import (bench_balance, bench_elasticity, bench_hetero,
+                            bench_jobsize, bench_kernels, bench_kneepoint,
                             bench_platform_overhead, bench_reduce_sim,
                             bench_service, bench_task_sizing)
     modules = [
+        # balance first: its FIFO-vs-balanced wall-clock ratio is the
+        # noise-sensitive gate, and the JAX modules leave threadpools
+        # behind that load the process
+        ("balance", bench_balance),
         ("kneepoint", bench_kneepoint),
         ("task_sizing", bench_task_sizing),
         ("platform_overhead", bench_platform_overhead),
@@ -138,10 +266,14 @@ def main(argv=None) -> int:
             continue
         if args.smoke and name not in SMOKE_MODULES:
             continue
-        takes_smoke = "smoke" in inspect.signature(mod.run).parameters
+        params = inspect.signature(mod.run).parameters
+        kwargs = {}
+        if args.smoke and "smoke" in params:
+            kwargs["smoke"] = True
+        if args.chaos and "chaos" in params:
+            kwargs["chaos"] = True
         t0 = time.perf_counter()
-        rows = (mod.run(smoke=True) if args.smoke and takes_smoke
-                else mod.run())
+        rows = mod.run(**kwargs)
         took = time.perf_counter() - t0
         for row_name, us, derived in rows:
             print(f"{row_name},{us:.3f},{derived}")
@@ -152,16 +284,17 @@ def main(argv=None) -> int:
         structured = getattr(mod, "STRUCTURED", None)
         if structured:
             entry["structured"] = structured
-            if name == "service":
-                failures.extend(_check_service_regression(structured))
-            else:
-                failures.extend(_check_wave_regression(structured))
+            check = _STRUCTURED_CHECKS.get(name, _check_wave_regression)
+            failures.extend(check(structured))
         report["modules"][name] = entry
 
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(report, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
+
+    if args.compare:
+        failures.extend(_compare_to_baseline(report, args.compare))
 
     for msg in failures:
         print(f"# FAIL: {msg}", file=sys.stderr)

@@ -4,13 +4,12 @@
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, ShapeConfig
+from repro.config import ModelConfig
 from repro.models import build_model
 from repro.serving import ServingEngine
 

@@ -7,10 +7,8 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 
 import argparse
-import dataclasses
 import logging
 
-import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.config import ModelConfig, RunConfig, ShapeConfig, TrainConfig

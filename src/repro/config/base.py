@@ -14,7 +14,7 @@ kneepoint tuner (``repro.core.kneepoint``) rather than hard-coded.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Layer kinds used by ``layer_pattern`` (cycled over the depth of the model).

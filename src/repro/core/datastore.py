@@ -1,16 +1,36 @@
-"""Replicated in-memory data plane with adaptive replication (thesis §3.5).
+"""Replicated in-memory data plane with adaptive replication and
+response-time-aware node selection (thesis §3.5, §3.4).
 
 The thesis builds its scalable file system on Cassandra: a few *data nodes*
-hold full replicas; worker nodes fetch sample blocks from them.  A data
+hold replicas; worker nodes fetch sample blocks from them.  A data
 modelling engine collects per-node fetch times plus task execution times
 from the scheduler's feedback loop, estimates the *cache interference*
 between task execution and data fetch cycles, and varies the replication
-factor to meet the tiny-task SLO.
+factor to meet the tiny-task SLO.  The dynamic scheduler then "schedules
+the tasks to worker nodes based on the availability and response times of
+the data nodes" — this module is the availability/response-time side of
+that loop:
+
+* every node carries a **response-time EMA** and an availability state
+  (``healthy`` / ``degraded`` / ``down``), maintained from fetch outcomes:
+  consecutive failures take a node down, a latency-outlier EMA (vs the
+  replica-set median) marks it degraded;
+* :meth:`ReplicatedDataStore.node_scores` exposes the predicted
+  next-fetch seconds per node (EMA × queueing term, ∞ when down) — the
+  signal the scheduler ranks ready tasks by;
+* replica **selection** is score-based (``select="response_time"``): the
+  cheapest available holder serves each fetch, so a degraded node sheds
+  traffic automatically; ``select="least_inflight"`` restores the old
+  FIFO-ish policy (the benchmark's unbalanced baseline);
+* a raising :meth:`DataNode.fetch` triggers **bounded retries with
+  replica failover** — the failed node's state is updated and the fetch
+  moves to the next-best holder instead of hammering one replica.
 
 Hardware adaptation (DESIGN.md §2): data nodes here are in-process shard
-holders behind an abstract transport, so per-node latency can be injected
-(benchmarks) or real (examples).  The adaptive-replication control law is
-the paper's: response-time feedback against the SLO.
+holders behind an abstract transport, so per-node latency and failures can
+be injected (benchmarks/chaos) or real (examples).  The adaptive
+replication control law is the paper's: response-time feedback against
+the SLO.
 """
 
 from __future__ import annotations
@@ -22,6 +42,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+DOWN = "down"
+
+
+class DataNodeError(RuntimeError):
+    """A data-node fetch failed (after replica failover, if any)."""
+
 
 @dataclasses.dataclass
 class DataNode:
@@ -30,6 +58,19 @@ class DataNode:
     # injected latency model: seconds per fetch of n bytes
     latency: Callable[[int], float] = lambda nbytes: 0.0
     inflight: int = 0
+    # queueing model: up to this many concurrent fetches are served at
+    # full speed; beyond it, service time scales linearly with the queue
+    # (bounded-capacity node, not per-request interference — keeps the
+    # contention feedback stable under prefetch/wave bursts)
+    parallelism: int = 4
+    # fault injection (benchmarks/chaos/tests): every fetch raises
+    failing: bool = False
+    # availability bookkeeping, maintained by the owning store
+    state: str = HEALTHY
+    resp_ema: Optional[float] = None
+    fetches: int = 0                    # successful fetches served
+    failures: int = 0                   # total failed fetches
+    consecutive_failures: int = 0
 
     def fetch(self, sample_id: int,
               inflight: Optional[int] = None) -> Tuple[np.ndarray, float]:
@@ -38,12 +79,15 @@ class DataNode:
         model is race-free under concurrent fetches (reading
         ``self.inflight`` here could see a peer's increment that landed
         after this fetch was already claimed)."""
+        if self.failing:
+            raise DataNodeError(f"data node {self.node_id} is failing")
         t0 = time.perf_counter()
         data = self.store[sample_id]
         lat = self.latency(data.nbytes)
         n_inflight = self.inflight if inflight is None else inflight
-        # queueing interference: concurrent fetches contend on the node
-        lat *= (1.0 + 0.5 * max(0, n_inflight - 1))
+        # queueing interference: beyond the node's service parallelism,
+        # concurrent fetches queue (linear slowdown)
+        lat *= max(1.0, n_inflight / max(self.parallelism, 1))
         if lat:
             time.sleep(min(lat, 0.05))       # bounded real sleep
         return data, (time.perf_counter() - t0) + lat
@@ -56,75 +100,354 @@ class ReplicationPolicy:
     max_replicas: int = 8
     window: int = 64                   # observations per control decision
     shrink_margin: float = 0.4         # shrink if p95 < margin·SLO
+    # availability detection (balanced scheduling, DESIGN.md §9)
+    max_consecutive_failures: int = 3  # failures before a node goes DOWN
+    degraded_factor: float = 3.0       # EMA > factor·median(peers) ⇒ DEGRADED
+    max_fetch_attempts: int = 3        # bounded retries across replicas
+    resp_alpha: float = 0.3            # response-time EMA smoothing
 
 
 class ReplicatedDataStore:
-    """Full replication across a *small, adaptive* set of data nodes.
+    """Replication across a *small, adaptive* set of data nodes.
 
-    ``put_all`` replicates every sample onto the current replica set (the
-    paper's initial full replication across a few chosen nodes).  ``fetch``
-    picks the least-loaded replica; response times feed the controller,
-    which grows the replica set when p95 fetch time violates the SLO
-    (interference detected) and shrinks it when comfortably under.
+    ``put_all`` replicates samples onto the replica set — fully (every
+    node holds everything, the default) or sharded (``replication=k``
+    places each sample on k nodes, the paper's Cassandra-style partial
+    placement that makes per-task locality scores meaningful).  ``fetch``
+    picks the cheapest available holder by predicted response time;
+    response times feed both the availability detector and the adaptive
+    replication controller, which grows the replica set when p95 fetch
+    time violates the SLO (interference detected) and shrinks it when
+    comfortably under.
     """
 
     def __init__(self, n_initial: int = 2,
                  policy: ReplicationPolicy = ReplicationPolicy(),
-                 latency: Optional[Callable[[int], float]] = None):
+                 latency: Optional[Callable[[int], float]] = None,
+                 select: str = "response_time"):
+        # "response_time": predicted-latency scores (the balanced
+        # subsystem); "least_inflight": queue counts only, blind to
+        # latency magnitude; "static": always the sample's primary
+        # holder — classic static placement with no feedback, the
+        # paper's FIFO baseline
+        if select not in ("response_time", "least_inflight", "static"):
+            raise ValueError(f"unknown select policy {select!r}; choose "
+                             "'response_time', 'least_inflight' or "
+                             "'static'")
         self.policy = policy
+        self.select = select
         self._latency = latency or (lambda nbytes: 0.0)
         self.nodes: List[DataNode] = [
             DataNode(i, latency=self._latency)
             for i in range(max(n_initial, policy.min_replicas))]
         self._samples: Dict[int, np.ndarray] = {}
+        # sample -> node ids holding it; None ⇒ full replication (every
+        # node, including ones the controller adds later, holds all)
+        self._placement: Optional[Dict[int, List[int]]] = None
         self._obs: List[float] = []
         self._lock = threading.Lock()
         self._executor = None            # lazy shared pool for fetch_many
         self.resize_events: List[Tuple[int, int]] = []   # (n_obs, replicas)
         self._exec_ema: Optional[float] = None
+        # fired (outside the lock) on HEALTHY/DEGRADED/DOWN transitions so
+        # the scheduler can re-rank ready tasks the moment a node turns
+        self.on_state_change: Optional[Callable[[DataNode], None]] = None
 
     # -- data placement ------------------------------------------------------
-    def put_all(self, samples: Dict[int, np.ndarray]) -> None:
+    def put_all(self, samples: Dict[int, np.ndarray],
+                replication: Optional[int] = None) -> None:
+        """Place ``samples`` on the data plane.  ``replication=None``
+        replicates fully (every node holds every sample);
+        ``replication=k`` shards round-robin so each sample lives on k of
+        the current nodes — adaptive *shrinking* is disabled in that mode
+        (removing a node could orphan its shards).
+
+        Re-putting an already-placed sample without an explicit
+        ``replication`` refreshes its bytes on its EXISTING holders and
+        never widens the placement — the platform driver re-puts the
+        dataset on every run, and that must not silently turn a
+        caller's replication-k sharding into full replication.  An
+        explicit ``replication`` re-places (old holders are dropped)."""
         self._samples.update(samples)
-        for node in self.nodes:
-            node.store.update(samples)
+        if replication is None and self._placement is None:
+            for node in self.nodes:
+                node.store.update(samples)
+            return
+        with self._lock:
+            if self._placement is None:
+                self._placement = {
+                    sid: [n.node_id for n in self.nodes]
+                    for sid in self._samples if sid not in samples}
+            k = (len(self.nodes) if replication is None
+                 else max(1, min(replication, len(self.nodes))))
+            by_id = {n.node_id: n for n in self.nodes}
+            for j, (sid, arr) in enumerate(sorted(samples.items())):
+                if replication is None and sid in self._placement:
+                    for nid in self._placement[sid]:
+                        if nid in by_id:
+                            by_id[nid].store[sid] = arr
+                    continue
+                holders = [self.nodes[(j + r) % len(self.nodes)].node_id
+                           for r in range(k)]
+                for nid in set(self._placement.get(sid, ())) - set(holders):
+                    if nid in by_id:           # dropped holder: free it
+                        by_id[nid].store.pop(sid, None)
+                self._placement[sid] = holders
+                for nid in holders:
+                    by_id[nid].store[sid] = arr
 
     @property
     def replication_factor(self) -> int:
         return len(self.nodes)
 
-    # -- fetch path ----------------------------------------------------------
-    def fetch(self, sample_id: int) -> np.ndarray:
+    def replicas_of(self, sample_id: int) -> List[int]:
+        """Node ids holding ``sample_id`` (all nodes under full
+        replication)."""
+        if self._placement is None:
+            return [n.node_id for n in self.nodes]
+        return list(self._placement.get(sample_id, ()))
+
+    # -- response-time / availability model ----------------------------------
+    def _score_locked(self, node: DataNode, extra_inflight: int = 0) -> float:
+        """Predicted next-fetch seconds on ``node``: response-time EMA
+        (SLO prior before any observation) scaled by the same queueing
+        term the latency model charges; ∞ when the node is down."""
+        if node.state == DOWN:
+            return float("inf")
+        inflight = node.inflight + extra_inflight
+        if self.select == "least_inflight":
+            # legacy policy: contention only, blind to response times
+            return float(inflight)
+        if node.resp_ema is not None:
+            base = node.resp_ema
+        else:
+            # optimistic prior for an unmeasured node: the best peer EMA
+            # (or the SLO).  Pessimism would starve it of the probe
+            # traffic that either measures it or takes it DOWN — a
+            # failing node would dodge the consecutive-failure detector
+            # forever.
+            peers = [n.resp_ema for n in self.nodes
+                     if n.resp_ema is not None and n.state != DOWN]
+            base = min(peers + [self.policy.fetch_slo])
+        # predicted service time if one more fetch is claimed now
+        return base * max(1.0, (inflight + 1) / max(node.parallelism, 1))
+
+    def node_scores(self) -> Dict[int, float]:
+        """Predicted next-fetch seconds per node id — the availability ×
+        response-time signal the dynamic scheduler ranks tasks by."""
         with self._lock:
-            node = min(self.nodes, key=lambda n: n.inflight)
-            node.inflight += 1
-            snap = node.inflight          # claim-time contention snapshot
-        try:
-            data, took = node.fetch(sample_id, inflight=snap)
-        finally:
+            return {n.node_id: self._score_locked(n) for n in self.nodes}
+
+    def node_states(self) -> Dict[int, str]:
+        with self._lock:
+            return {n.node_id: n.state for n in self.nodes}
+
+    def predicted_task_fetch(self, sample_ids: Sequence[int]) -> float:
+        """Predicted fetch seconds for a task over ``sample_ids``:
+        ``fetch_many`` parallelizes the batch, so the task is bound by
+        its slowest sample's *best available* replica.  Samples whose
+        every holder is down score ∞ (the scheduler drains them last,
+        giving failover/recovery time to act)."""
+        with self._lock:
+            by_id = {n.node_id: n for n in self.nodes}
+            worst = 0.0
+            for sid in sample_ids:
+                holders = ([n.node_id for n in self.nodes]
+                           if self._placement is None
+                           else self._placement.get(sid, ()))
+                best = min((self._score_locked(by_id[h]) for h in holders
+                            if h in by_id), default=float("inf"))
+                worst = max(worst, best)
+            return worst
+
+    def probe(self) -> Dict[int, float]:
+        """Seed every node's response-time EMA with one direct fetch
+        (the data modelling engine's initial measurement — the data-plane
+        analogue of the scheduler's phase-1 probe tasks): without it the
+        first wave of claims is blind and pays the degraded node's
+        latency before the feedback loop can steer around it."""
+        out: Dict[int, float] = {}
+        for node in list(self.nodes):
+            if node.state == DOWN or not node.store:
+                continue
+            sid = next(iter(node.store))
+            with self._lock:
+                node.inflight += 1
+                snap = node.inflight
+            try:
+                _, took = node.fetch(sid, inflight=snap)
+            except BaseException:          # noqa: BLE001
+                with self._lock:
+                    node.inflight -= 1
+                self._record_outcome(node, None)
+                continue
             with self._lock:
                 node.inflight -= 1
-        self._observe(took)
-        return data
+            self._record_outcome(node, took)
+            out[node.node_id] = took
+        return out
+
+    def mark_down(self, node_id: int) -> None:
+        """Administratively take a node out of the replica set (chaos
+        injection / external health checks)."""
+        self._set_state(self._node(node_id), DOWN)
+
+    def revive(self, node_id: int) -> None:
+        """Return a down node to service (its EMA restarts fresh)."""
+        node = self._node(node_id)
+        with self._lock:
+            node.consecutive_failures = 0
+            node.resp_ema = None
+        self._set_state(node, HEALTHY)
+
+    def _node(self, node_id: int) -> DataNode:
+        for n in self.nodes:
+            if n.node_id == node_id:
+                return n
+        raise KeyError(f"no data node {node_id}")
+
+    def _set_state(self, node: DataNode, state: str) -> None:
+        with self._lock:
+            changed = node.state != state
+            node.state = state
+        if changed and self.on_state_change is not None:
+            self.on_state_change(node)
+
+    def _refresh_state_locked(self, node: DataNode) -> Optional[DataNode]:
+        """Recompute a node's availability from its counters/EMA; returns
+        the node when its state changed (caller fires the callback
+        outside the lock).  DOWN is sticky until :meth:`revive`."""
+        if node.state == DOWN:
+            return None
+        if node.consecutive_failures >= self.policy.max_consecutive_failures:
+            new = DOWN
+        else:
+            peers = [n.resp_ema for n in self.nodes
+                     if n is not node and n.state != DOWN
+                     and n.resp_ema is not None]
+            if peers and node.resp_ema is not None:
+                threshold = (self.policy.degraded_factor
+                             * float(np.median(peers)))
+                # hysteresis: enter DEGRADED above the threshold, leave
+                # only below 0.8x of it — an EMA hovering at the edge
+                # must not flap states (each flap re-ranks every ready
+                # queue via on_state_change)
+                if node.resp_ema > threshold:
+                    new = DEGRADED
+                elif node.resp_ema < 0.8 * threshold:
+                    new = HEALTHY
+                else:
+                    new = node.state
+            else:
+                new = HEALTHY
+        if new != node.state:
+            node.state = new
+            return node
+        return None
+
+    def _record_outcome(self, node: DataNode, took: Optional[float]) -> None:
+        """Fold one fetch outcome (``took=None`` ⇒ failure) into the
+        node's EMA/counters, then refresh EVERY node's availability: an
+        outlier is relative to its peers, so a node that shed all its
+        traffic after a slow probe must still be re-judged as the peer
+        EMAs evolve."""
+        with self._lock:
+            if took is None:
+                node.failures += 1
+                node.consecutive_failures += 1
+            else:
+                node.fetches += 1
+                node.consecutive_failures = 0
+                a = self.policy.resp_alpha
+                node.resp_ema = (took if node.resp_ema is None
+                                 else (1 - a) * node.resp_ema + a * took)
+            changed = [n for n in self.nodes
+                       if self._refresh_state_locked(n) is not None]
+        if self.on_state_change is not None:
+            for n in changed:
+                self.on_state_change(n)
+
+    # -- fetch path ----------------------------------------------------------
+    def _claim_locked(self, sample_id: int,
+                      exclude: Sequence[int] = ()) -> Optional[DataNode]:
+        """Cheapest available holder of ``sample_id`` (excluding already-
+        tried nodes), with its inflight count claimed.  ``static``
+        selection takes the first available holder in placement order
+        (the primary replica) — failover still moves past it when it
+        raises."""
+        by_id = {n.node_id: n for n in self.nodes}
+        cands = [by_id[h] for h in self.replicas_of(sample_id)
+                 if h not in exclude and h in by_id
+                 and by_id[h].state != DOWN]
+        if not cands:
+            return None
+        if self.select == "static":
+            node = cands[0]
+        else:
+            node = min(cands,
+                       key=lambda n: (self._score_locked(n), n.node_id))
+        node.inflight += 1
+        return node
+
+    def fetch(self, sample_id: int) -> np.ndarray:
+        """Fetch one sample from the cheapest available replica, with
+        bounded retries + failover: a raising node records a failure
+        (taking it DOWN after ``max_consecutive_failures``) and the fetch
+        moves to the next-best holder — never an unbounded retry loop on
+        one replica."""
+        tried: List[int] = []
+        last_err: Optional[BaseException] = None
+        for _ in range(max(1, self.policy.max_fetch_attempts)):
+            with self._lock:
+                node = self._claim_locked(sample_id, exclude=tried)
+                snap = node.inflight if node is not None else 0
+            if node is None:
+                break
+            try:
+                data, took = node.fetch(sample_id, inflight=snap)
+            except BaseException as e:     # noqa: BLE001
+                last_err = e
+                tried.append(node.node_id)
+                with self._lock:
+                    node.inflight -= 1
+                self._record_outcome(node, None)
+                continue
+            with self._lock:
+                node.inflight -= 1
+            self._record_outcome(node, took)
+            self._observe(took)
+            return data
+        raise DataNodeError(
+            f"sample {sample_id}: no replica served the fetch "
+            f"(tried nodes {tried})") from last_err
 
     def fetch_many(self, sample_ids: Sequence[int]) -> List[np.ndarray]:
         """Batch fetch, spread across the replica set concurrently.
 
-        ONE lock acquisition assigns every sample of the batch a replica
-        (round-robin from the least-loaded node, so a multi-sample task
-        never serializes on one node) and snapshots each node's inflight
-        count for the latency model; the fetches themselves then run in
-        parallel on a small shared pool."""
+        ONE lock acquisition assigns every sample of the batch its
+        cheapest available holder (scores recomputed as the batch claims
+        inflight slots, so a multi-sample task never serializes on one
+        node) and snapshots each node's inflight count for the latency
+        model; the fetches themselves then run in parallel on a small
+        shared pool.  A failed fetch fails over to the sample's next-best
+        holder (bounded by ``max_fetch_attempts``)."""
         if len(sample_ids) <= 1:
             return [self.fetch(s) for s in sample_ids]
 
         def one(claim):
             sid, node, snap = claim
             try:
-                return node.fetch(sid, inflight=snap)
-            finally:
+                data, took = node.fetch(sid, inflight=snap)
+            except BaseException:          # noqa: BLE001
                 with self._lock:
                     node.inflight -= 1
+                self._record_outcome(node, None)
+                # failover path re-claims under the lock (different node)
+                return sid, None, None
+            with self._lock:
+                node.inflight -= 1
+            self._record_outcome(node, took)
+            return sid, data, took
 
         # claims AND submissions happen under the one lock acquisition:
         # close() also swaps the executor under the lock, so it can never
@@ -132,20 +455,28 @@ class ReplicatedDataStore:
         # its submit — already-submitted fetches survive shutdown(wait=
         # False) and their finally blocks settle the inflight accounting
         with self._lock:
-            ranked = sorted(self.nodes, key=lambda n: n.inflight)
             pool = self._fetch_pool_locked()
             futures = []
-            for k, sid in enumerate(sample_ids):
-                node = ranked[k % len(ranked)]
-                node.inflight += 1
+            for sid in sample_ids:
+                node = self._claim_locked(sid)
+                if node is None:
+                    raise DataNodeError(
+                        f"sample {sid}: every replica is down")
                 futures.append(pool.submit(one, (sid, node, node.inflight)))
 
-        out: List[np.ndarray] = []
+        out: Dict[int, np.ndarray] = {}
+        order: List[int] = list(sample_ids)
+        failed: List[int] = []
         for future in futures:
-            data, took = future.result()
+            sid, data, took = future.result()
+            if data is None:
+                failed.append(sid)
+                continue
             self._observe(took)
-            out.append(data)
-        return out
+            out[sid] = data
+        for sid in failed:                 # bounded failover, serial tail
+            out[sid] = self.fetch(sid)
+        return [out[sid] for sid in order]
 
     def _fetch_pool_locked(self):
         """Shared fetch executor, lazily created; caller holds ``_lock``
@@ -196,20 +527,41 @@ class ReplicatedDataStore:
             p95 = float(np.percentile(self._obs[-self.policy.window:], 95))
             if (p95 > self.policy.fetch_slo
                     and len(self.nodes) < self.policy.max_replicas):
-                node = DataNode(len(self.nodes), latency=self._latency)
+                nid = 1 + max(n.node_id for n in self.nodes)
+                node = DataNode(nid, latency=self._latency)
                 node.store.update(self._samples)
                 self.nodes.append(node)
+                if self._placement is not None:
+                    for holders in self._placement.values():
+                        holders.append(nid)
                 self.resize_events.append((len(self._obs), len(self.nodes)))
             elif (p95 < self.policy.shrink_margin * self.policy.fetch_slo
-                    and len(self.nodes) > self.policy.min_replicas):
+                    and len(self.nodes) > self.policy.min_replicas
+                    and self._placement is None):
+                # sharded placement never shrinks (orphaned shards)
                 self.nodes.pop()
                 self.resize_events.append((len(self._obs), len(self.nodes)))
 
     def stats(self) -> Dict[str, float]:
         obs = np.asarray(self._obs[-self.policy.window:] or [0.0])
+        with self._lock:
+            states = [n.state for n in self.nodes]
+            fetches = {n.node_id: n.fetches for n in self.nodes}
+        served = sum(fetches.values())
+        top = max(fetches.values()) if fetches else 0
         return {
-            "replicas": float(len(self.nodes)),
+            "replicas": float(len(states)),
             "fetch_p50": float(np.percentile(obs, 50)),
             "fetch_p95": float(np.percentile(obs, 95)),
             "interference": self.interference_estimate(),
+            "nodes_degraded": float(states.count(DEGRADED)),
+            "nodes_down": float(states.count(DOWN)),
+            # traffic skew: share of fetches served by the hottest node
+            # (1/replicas ⇒ perfectly balanced)
+            "fetch_skew": (top / served) if served else 0.0,
         }
+
+    def fetch_counts(self) -> Dict[int, int]:
+        """Per-node successful-fetch counters (replica traffic skew)."""
+        with self._lock:
+            return {n.node_id: n.fetches for n in self.nodes}

@@ -68,6 +68,41 @@ def min_cluster_for_task_level(*, cost_tl: float, slo_seconds: float,
     return int(cost_tl * mttf_seconds / (beta * slo_seconds)) + 1
 
 
+# ---------------------------------------------------------------------------
+# Straggler speculation cost model (the §3.3 rule applied per clone)
+# ---------------------------------------------------------------------------
+
+# A speculative clone re-executes one task, so its standing tax is ≈ one
+# exec-EMA of worker capacity (the analogue of cost_tl for task-level
+# monitoring, but paid per *clone*, not per task).
+SPECULATION_CLONE_TAX = 1.0
+
+
+def speculation_gain(age_seconds: float, exec_ema: float) -> float:
+    """Expected makespan saving from cloning a straggler *now*.  Under a
+    heavy-tail straggler model the expected remaining time of a task that
+    has already run ``age_seconds`` is at least its age so far; the clone
+    finishes in ≈ one exec-EMA, so the gain is their difference."""
+    return age_seconds - exec_ema
+
+
+def should_speculate(age_seconds: float, exec_ema: Optional[float], *,
+                     straggler_factor: float = 2.0,
+                     clone_tax: float = SPECULATION_CLONE_TAX) -> bool:
+    """Clone a straggler iff (a) it qualifies — its age exceeds
+    ``straggler_factor ×`` the pool exec-EMA — and (b) the §3.3 economics
+    hold per clone: the expected saving (:func:`speculation_gain`) must
+    exceed the clone's standing tax (``clone_tax ×`` exec-EMA of wasted
+    capacity if the original wins the race).  This is the job-vs-task
+    trade-off of :func:`decide_policy` applied at clone granularity:
+    redundancy must beat what it costs."""
+    if not exec_ema or exec_ema <= 0.0:
+        return False
+    if age_seconds <= straggler_factor * exec_ema:
+        return False
+    return speculation_gain(age_seconds, exec_ema) > clone_tax * exec_ema
+
+
 @dataclasses.dataclass
 class JobOutcome:
     value: Any

@@ -31,13 +31,14 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-import queue as queue_mod
 import threading
 import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core import recovery as rec
 
 
 @dataclasses.dataclass
@@ -58,6 +59,28 @@ class TaskResult:
     value: Any = None
 
 
+def rank_by_bucket(tasks: Sequence[Task],
+                   key_fn: Callable[[Task], Any],
+                   score_fn: Callable[[Task], float]) -> "deque[Task]":
+    """Stable-sort tasks by each bucket's best locality score: whole
+    buckets move together (same-shape waves / cross-job fusion keys
+    stay contiguous), intra-bucket order stays FIFO, and ties keep
+    arrival order.  Shared by both schedulers' claim ranking."""
+    tasks = list(tasks)
+    if len(tasks) <= 1:
+        return deque(tasks)
+    score: Dict[Any, float] = {}
+    first_seen: Dict[Any, int] = {}
+    for i, t in enumerate(tasks):
+        b = key_fn(t)
+        s = float(score_fn(t))
+        if b not in score or s < score[b]:
+            score[b] = s
+        first_seen.setdefault(b, i)
+    tasks.sort(key=lambda t: (score[key_fn(t)], first_seen[key_fn(t)]))
+    return deque(tasks)
+
+
 class JobFailure(RuntimeError):
     """Raised when a worker dies under job-level recovery; the driver
     restarts the entire job (thesis §3.3)."""
@@ -76,22 +99,42 @@ class SchedulerConfig:
     work_stealing: bool = True
     recovery: str = "job"             # "job" | "task"
     cost_tl: float = 0.20             # task-level monitoring slowdown (Fig 6)
-    # speculative execution (the Hadoop feature the thesis disables for
-    # tiny tasks — provided as an option so the trade-off is measurable):
-    # when the backlog is empty, idle workers re-run in-flight tasks that
-    # have exceeded speculative_factor × the average execution time
-    speculative: bool = False
-    speculative_factor: float = 2.0
+    # speculative re-execution of stragglers: when the backlog is empty,
+    # idle workers clone in-flight tasks whose age exceeds
+    # ``straggler_factor ×`` the execution-time EMA.  ``False`` off,
+    # ``True`` the bare age rule, ``"auto"`` additionally requires the
+    # clone to be worth its standing tax per the §3.3 cost model
+    # (:func:`repro.core.recovery.should_speculate`).  First completion
+    # wins; per-task seeds keep clone results bit-identical.
+    speculative: Any = False               # False | True | "auto"
+    speculative_factor: float = 2.0        # legacy name for the age factor
+    straggler_factor: Optional[float] = None   # overrides when set
     seed: int = 0
+
+    def effective_straggler_factor(self) -> float:
+        return (self.straggler_factor if self.straggler_factor is not None
+                else self.speculative_factor)
 
 
 class TwoPhaseScheduler:
     """Pure scheduling policy — no clock, no threads.  Drivers call
     :meth:`on_worker_idle` / :meth:`on_task_complete` and execute whatever
-    assignments come back."""
+    assignments come back.
+
+    ``locality_score(task)`` — when provided — is the predicted fetch
+    latency of the task's best available data-node replica (the
+    datastore's :meth:`~repro.core.datastore.ReplicatedDataStore.
+    predicted_task_fetch`); ready tasks are ranked so workers drain
+    cheap-data tasks first, at whole ``bucket_key`` granularity so
+    same-shape wave fusion survives the reordering.  The ranking is
+    recomputed lazily after :meth:`request_rerank` (wired to the
+    datastore's node state-change callback), under whatever lock the
+    driver already holds for scheduler calls."""
 
     def __init__(self, n_workers: int, tasks: Sequence[Task],
-                 cfg: SchedulerConfig = SchedulerConfig()):
+                 cfg: SchedulerConfig = SchedulerConfig(), *,
+                 locality_score: Optional[Callable[[Task], float]] = None,
+                 bucket_key: Optional[Callable[[Task], Any]] = None):
         self.cfg = cfg
         self.n_workers = n_workers
         self.backlog: deque[Task] = deque(tasks)
@@ -99,9 +142,11 @@ class TwoPhaseScheduler:
         self.inflight: Dict[int, Task] = {}
         self.inflight_by_worker: Dict[int, Task] = {}
         self._started_at: Dict[int, float] = {}
+        self._first_worker: Dict[int, int] = {}
         self._speculated: set = set()
         self._completed: set = set()
         self.speculative_launches = 0
+        self.speculation_wins = 0          # clone finished before original
         self.results: List[TaskResult] = []
         self.depth_trace: List[int] = []   # dynamic-k after each completion
         self.avg_exec = None
@@ -109,6 +154,31 @@ class TwoPhaseScheduler:
         self._rng = np.random.default_rng(cfg.seed)
         self._phase2 = False
         self._alive = [True] * n_workers
+        self.locality_score = locality_score
+        self.bucket_key = bucket_key or (lambda t: len(t.sample_ids))
+        self._rank_dirty = False
+        self.reranks = 0
+        if locality_score is not None:
+            self._rank_backlog()
+
+    # -- response-time-aware claim ordering ----------------------------------
+    def request_rerank(self) -> None:
+        """Mark the ready ranking stale (safe from any thread — the
+        re-sort itself happens inside the next scheduler call, under the
+        driver's lock)."""
+        self._rank_dirty = True
+
+    def _maybe_rerank(self) -> None:
+        if self._rank_dirty:
+            self._rank_dirty = False
+            self._rank_backlog()
+
+    def _rank_backlog(self) -> None:
+        if self.locality_score is None or len(self.backlog) <= 1:
+            return
+        self.backlog = rank_by_bucket(self.backlog, self.bucket_key,
+                                      self.locality_score)
+        self.reranks += 1
 
     # -- feedback loop -------------------------------------------------------
     def _observe(self, result: TaskResult) -> None:
@@ -153,21 +223,30 @@ class TwoPhaseScheduler:
                       now: Optional[float] = None) -> None:
         self.inflight[task.task_id] = task
         self.inflight_by_worker[worker] = task
-        self._started_at[task.task_id] = (time.perf_counter()
-                                          if now is None else now)
+        self._first_worker.setdefault(task.task_id, worker)
+        # a speculative clone's start must not reset the straggler clock
+        if task.task_id not in self._started_at:
+            self._started_at[task.task_id] = (time.perf_counter()
+                                              if now is None else now)
 
     def on_task_complete(self, result: TaskResult) -> List[Tuple[int, Task]]:
         """Record a result; return new (worker, task) queue assignments.
-        A speculative duplicate's second completion is ignored."""
+        First completion wins — a speculative duplicate's second
+        completion is ignored (per-task seeds make both bit-identical)."""
         self.inflight_by_worker.pop(result.worker_id, None)
         if result.task_id in self._completed:
             return []
         self._completed.add(result.task_id)
+        if (result.task_id in self._speculated
+                and self._first_worker.get(result.task_id)
+                != result.worker_id):
+            self.speculation_wins += 1     # the clone beat the original
         self.inflight.pop(result.task_id, None)
         self._started_at.pop(result.task_id, None)
         self.results.append(result)
         self._observe(result)
         self._phase2 = True
+        self._maybe_rerank()
         w = result.worker_id
         out: List[Tuple[int, Task]] = []
         depth = self.queue_depth()
@@ -188,6 +267,7 @@ class TwoPhaseScheduler:
         speculative re-execution of the longest-running straggler."""
         if not self._alive[worker]:
             return None
+        self._maybe_rerank()
         q = self.queues[worker]
         if q:
             return q.popleft()
@@ -200,7 +280,8 @@ class TwoPhaseScheduler:
                 return self.queues[victim].pop()   # steal from the tail
         if self.cfg.speculative and self.avg_exec and self._started_at:
             t_now = time.perf_counter() if now is None else now
-            threshold = self.cfg.speculative_factor * self.avg_exec
+            factor = self.cfg.effective_straggler_factor()
+            threshold = factor * self.avg_exec
             candidates = [(t_now - started, tid) for tid, started
                           in self._started_at.items()
                           if tid not in self._speculated
@@ -208,12 +289,38 @@ class TwoPhaseScheduler:
                           is not self.inflight.get(tid)]
             candidates = [(age, tid) for age, tid in candidates
                           if age > threshold]
+            if self.cfg.speculative == "auto":
+                # §3.3 economics per clone: worth it only when the
+                # expected saving beats the clone's standing tax
+                candidates = [
+                    (age, tid) for age, tid in candidates
+                    if rec.should_speculate(age, self.avg_exec,
+                                            straggler_factor=factor)]
             if candidates:
                 _, tid = max(candidates)
                 self._speculated.add(tid)
                 self.speculative_launches += 1
                 return self.inflight[tid]
         return None
+
+    def next_speculation_time(self) -> Optional[float]:
+        """Earliest clock time at which some in-flight task becomes
+        speculation-eligible (None when speculation is off or nothing
+        qualifies) — the virtual-time driver re-polls idle workers at
+        exactly this moment instead of on a coarse exec-EMA grid, so a
+        clone launches the instant the cost model allows it."""
+        if not (self.cfg.speculative and self.avg_exec):
+            return None
+        factor = self.cfg.effective_straggler_factor()
+        if self.cfg.speculative == "auto":
+            # should_speculate additionally needs gain > clone tax
+            factor = max(factor, 1.0 + rec.SPECULATION_CLONE_TAX)
+        times = [started + factor * self.avg_exec
+                 for tid, started in self._started_at.items()
+                 if tid not in self._speculated]
+        if not times:
+            return None
+        return min(times) + 1e-9       # strict-inequality epsilon
 
     def claim_batch(self, worker: int, first: Task, max_n: int,
                     key_fn: Callable[[Task], Any]) -> List[Task]:
@@ -256,6 +363,12 @@ class TwoPhaseScheduler:
         if own is not None:
             self.inflight.pop(own.task_id, None)
             reclaimed.append(own)
+        for t in reclaimed:
+            # reset the straggler clock: the re-execution must not
+            # inherit the dead worker's elapsed time (it would be
+            # instantly speculation-eligible)
+            self._started_at.pop(t.task_id, None)
+            self._first_worker.pop(t.task_id, None)
         self.backlog.extend(reclaimed)
         return reclaimed
 
@@ -274,6 +387,11 @@ class MultiJobConfig:
     quantum: float = 8.0          # DRR credit added per visit (tasks)
     deadline_headroom: float = 1.5   # boost when slack < headroom·remaining
     default_task_seconds: float = 1e-3   # est. before any completion
+    # straggler speculation (False | True | "auto" — as SchedulerConfig):
+    # idle pool workers clone in-flight tasks older than
+    # straggler_factor × the pool-wide exec EMA; first completion wins
+    speculative: Any = False
+    straggler_factor: float = 2.0
 
 
 @dataclasses.dataclass
@@ -292,6 +410,13 @@ class ServiceJob:
     deficit: float = 0.0
     inflight: int = 0
     completed: int = 0
+    # response-time locality (predicted best-replica fetch seconds)
+    locality_score: Optional[Callable[[Task], float]] = None
+    # straggler-speculation bookkeeping (first completion wins)
+    inflight_tasks: Dict[int, Task] = dataclasses.field(default_factory=dict)
+    started_at: Dict[int, float] = dataclasses.field(default_factory=dict)
+    speculated: set = dataclasses.field(default_factory=set)
+    completed_ids: set = dataclasses.field(default_factory=set)
 
     @property
     def done(self) -> bool:
@@ -333,13 +458,19 @@ class MultiJobScheduler:
         self.avg_task_seconds: Optional[float] = None
         self.fused_dispatches = 0           # batches spanning >1 job
         self.claims = 0
+        self.speculative_launches = 0
+        self.speculation_wins = 0
+        self._rank_dirty = False
+        self.reranks = 0
 
     # -- job lifecycle -------------------------------------------------------
     def add_job(self, job_id: int, tasks: Sequence[Task], *,
                 fuse_key: Optional[Callable[[Task], Any]] = None,
                 cap: Any = 1, priority: int = 0,
                 deadline: Optional[float] = None,
-                weight: float = 1.0) -> ServiceJob:
+                weight: float = 1.0,
+                locality_score: Optional[Callable[[Task], float]] = None,
+                ) -> ServiceJob:
         if job_id in self.jobs:
             raise ValueError(f"job {job_id} already scheduled")
         cap_fn = cap if callable(cap) else (lambda t, _c=int(cap): _c)
@@ -347,10 +478,34 @@ class MultiJobScheduler:
             job_id=job_id, pending=deque(tasks), n_tasks=len(tasks),
             fuse_key=fuse_key or (lambda t: (job_id, t.task_id)),
             cap=cap_fn, priority=priority, deadline=deadline,
-            weight=weight)
+            weight=weight, locality_score=locality_score)
+        if locality_score is not None:
+            self._rank_job(job)
         self.jobs[job_id] = job
         self._rr.append(job_id)
         return job
+
+    # -- response-time-aware claim ordering ----------------------------------
+    def request_rerank(self) -> None:
+        """Mark every job's ready ranking stale (safe from any thread —
+        re-sorting happens inside the next :meth:`claim`, under the
+        pool's lock)."""
+        self._rank_dirty = True
+
+    def _maybe_rerank(self) -> None:
+        if not self._rank_dirty:
+            return
+        self._rank_dirty = False
+        for job in self.jobs.values():
+            if job.locality_score is not None:
+                self._rank_job(job)
+
+    def _rank_job(self, job: ServiceJob) -> None:
+        if len(job.pending) <= 1:
+            return
+        job.pending = rank_by_bucket(job.pending, job.fuse_key,
+                                     job.locality_score)
+        self.reranks += 1
 
     def cancel_job(self, job_id: int) -> List[Task]:
         """Drop a job's queued tasks (in-flight ones finish and are
@@ -391,6 +546,30 @@ class MultiJobScheduler:
 
     def has_ready(self) -> bool:
         return any(j.pending for j in self.jobs.values())
+
+    def peek(self, n: int, now: float = 0.0) -> List[Tuple[ServiceJob,
+                                                           Task]]:
+        """Up to ``n`` upcoming (job, task) pairs, without claiming —
+        the prefetcher's look-ahead window.  Ordered like :meth:`claim`
+        would serve them (deadline-urgent job first, then priority tier
+        and deficit, rotation breaking ties): a rotation-order peek
+        would warm the WRONG job's fetches whenever a boost or a
+        priority tier redirects the next claim."""
+        rot = {jid: i for i, jid in enumerate(self._rr)}
+        ready = [j for jid in self._rr
+                 if (j := self.jobs.get(jid)) is not None and j.pending]
+        ready.sort(key=lambda j: (-j.priority, -j.deficit,
+                                  rot.get(j.job_id, 0)))
+        urgent = self._urgent(now)
+        if urgent is not None:
+            ready = [urgent] + [j for j in ready if j is not urgent]
+        out: List[Tuple[ServiceJob, Task]] = []
+        for job in ready:
+            for t in job.pending:
+                out.append((job, t))
+                if len(out) >= n:
+                    return out
+        return out
 
     # -- deadline model ------------------------------------------------------
     def _task_seconds(self) -> float:
@@ -437,6 +616,7 @@ class MultiJobScheduler:
         """Claim the next batch for an idle worker: ``[]`` when nothing
         is ready.  Every claimed task is marked in-flight; the caller
         reports each back through :meth:`on_task_complete`."""
+        self._maybe_rerank()
         job = self._pick(now)
         if job is None:
             return []
@@ -473,18 +653,76 @@ class MultiJobScheduler:
                     peer.deficit -= took    # fused service still counts
         if len({j.job_id for j, _ in batch}) > 1:
             self.fused_dispatches += 1
-        for j, _ in batch:
+        for j, t in batch:
             j.inflight += 1
+            j.inflight_tasks[t.task_id] = t
+            j.started_at.setdefault(t.task_id, now)
         return batch
 
+    def claim_speculative(self, now: float,
+                          cfg_speculative: Any = None,
+                          ) -> List[Tuple[ServiceJob, Task]]:
+        """Straggler speculation for an idle pool worker when nothing is
+        ready: clone the oldest in-flight task whose age exceeds
+        ``straggler_factor ×`` the pool-wide exec EMA (``"auto"`` mode
+        additionally requires the clone to beat its standing tax per the
+        §3.3 cost model).  The clone re-executes with the task's own
+        seed, so first-completion-wins is bit-exact; each task is cloned
+        at most once."""
+        speculative = (self.cfg.speculative if cfg_speculative is None
+                       else cfg_speculative)
+        ema = self.avg_task_seconds
+        if not speculative or not ema:
+            return []
+        factor = self.cfg.straggler_factor
+        best: Optional[Tuple[float, ServiceJob, Task]] = None
+        for job in self.jobs.values():
+            for tid, started in job.started_at.items():
+                if tid in job.speculated or tid in job.completed_ids:
+                    continue
+                task = job.inflight_tasks.get(tid)
+                if task is None:
+                    continue
+                age = now - started
+                if age <= factor * ema:
+                    continue
+                if speculative == "auto" and not rec.should_speculate(
+                        age, ema, straggler_factor=factor):
+                    continue
+                if best is None or age > best[0]:
+                    best = (age, job, task)
+        if best is None:
+            return []
+        _, job, task = best
+        job.speculated.add(task.task_id)
+        job.inflight += 1
+        self.speculative_launches += 1
+        return [(job, task)]
+
+    def on_task_abandoned(self, job_id: int, task_id: int) -> None:
+        """Settle a claimed task that will never complete — a
+        speculative clone whose execution failed.  In-flight accounting
+        only: the original still owns completion, and a lost redundant
+        bet must never fail or finish the job."""
+        job = self.jobs.get(job_id)
+        if job is not None:
+            job.inflight -= 1
+
     def on_task_complete(self, job_id: int,
-                         exec_seconds: Optional[float]) -> bool:
+                         exec_seconds: Optional[float],
+                         task_id: Optional[int] = None,
+                         speculative: bool = False) -> bool:
         """Record one finished task; True when its job just completed.
         ``exec_seconds`` feeds the per-task-seconds EMA the deadline
         model uses; pass ``None`` to settle in-flight accounting without
         a timing sample (tasks claimed from an already-cancelled job
         never execute, and a 0.0 sample would drag the deadline-boost
-        and admission estimates toward zero)."""
+        and admission estimates toward zero).  ``task_id`` enables
+        first-completion-wins accounting for speculative clones: the
+        duplicate completion settles the in-flight count without
+        double-counting progress.  ``speculative`` marks a completion
+        delivered by a :meth:`claim_speculative` batch — a clone only
+        counts as a *win* when it, not the original, completed first."""
         if exec_seconds is not None:
             a = 0.3
             self.avg_task_seconds = (
@@ -494,8 +732,24 @@ class MultiJobScheduler:
         if job is None:
             return False
         job.inflight -= 1
-        job.completed += 1
-        if job.done and not job.pending and job.inflight == 0:
+        duplicate = (task_id is not None and task_id in job.completed_ids)
+        if not duplicate:
+            job.completed += 1
+            if task_id is not None:
+                job.completed_ids.add(task_id)
+                if speculative and task_id in job.speculated:
+                    self.speculation_wins += 1
+                job.inflight_tasks.pop(task_id, None)
+                job.started_at.pop(task_id, None)
+        # with task ids, genuine outstanding work is inflight_tasks —
+        # the job completes at its FIRST full completion even while a
+        # speculative clone still races (the duplicate settles against a
+        # job that has already left the table); legacy callers without
+        # task ids fall back to the raw in-flight count
+        finished = (job.done and not job.pending
+                    and ((not job.inflight_tasks) if task_id is not None
+                         else job.inflight == 0))
+        if finished:
             self.jobs.pop(job_id, None)
             return True
         return False
@@ -530,6 +784,7 @@ class SimOutcome:
     restarts: int = 0
     queue_depths: List[int] = dataclasses.field(default_factory=list)
     speculative_launches: int = 0
+    speculation_wins: int = 0
 
 
 def simulate_job(
@@ -539,6 +794,8 @@ def simulate_job(
     cfg: SchedulerConfig = SchedulerConfig(),
     *,
     max_restarts: int = 3,
+    locality_score: Optional[Callable[[Task], float]] = None,
+    bucket_key: Optional[Callable[[Task], Any]] = None,
 ) -> SimOutcome:
     """Run the two-phase scheduler under virtual time.  Prefetch overlap:
     a task's data fetch for queued work proceeds while the previous task
@@ -548,7 +805,9 @@ def simulate_job(
     alive = list(workers)
     while True:
         try:
-            return _simulate_once(tasks, alive, params, cfg, restarts)
+            return _simulate_once(tasks, alive, params, cfg, restarts,
+                                  locality_score=locality_score,
+                                  bucket_key=bucket_key)
         except JobFailure as e:
             restarts += 1
             if restarts > max_restarts:
@@ -560,11 +819,14 @@ def simulate_job(
                 alive = survivors
 
 
-def _simulate_once(tasks, workers, params, cfg, restarts) -> SimOutcome:
+def _simulate_once(tasks, workers, params, cfg, restarts, *,
+                   locality_score=None, bucket_key=None) -> SimOutcome:
     """Worker identity inside the scheduler is positional (0..n-1); the
     SimWorker.worker_id is only used for reporting (survivor restarts
     renumber positions but keep ids)."""
-    sched = TwoPhaseScheduler(len(workers), tasks, cfg)
+    sched = TwoPhaseScheduler(len(workers), tasks, cfg,
+                              locality_score=locality_score,
+                              bucket_key=bucket_key)
     now = params.startup_time
     busy: Dict[int, float] = {w.worker_id: 0.0 for w in workers}
     # event heap: (time, seq, kind, worker_index, task)
@@ -604,9 +866,12 @@ def _simulate_once(tasks, workers, params, cfg, restarts) -> SimOutcome:
             busy[workers[widx].worker_id] += total
             has_event[widx] = True
         elif cfg.speculative and not sched.done() and sched.avg_exec:
-            # re-poll later: a straggler may become speculation-eligible
-            heapq.heappush(heap, (at + sched.avg_exec, next(seq), "poll",
-                                  widx, None))
+            # re-poll exactly when a straggler first becomes
+            # speculation-eligible (fall back to an exec-EMA tick)
+            eligible_at = sched.next_speculation_time()
+            when = (max(eligible_at, at + 1e-9) if eligible_at is not None
+                    else at + sched.avg_exec)
+            heapq.heappush(heap, (when, next(seq), "poll", widx, None))
             has_event[widx] = True
 
     while heap:
@@ -649,7 +914,8 @@ def _simulate_once(tasks, workers, params, cfg, restarts) -> SimOutcome:
     return SimOutcome(makespan=makespan, results=sched.results,
                       per_worker_busy=busy, restarts=restarts,
                       queue_depths=list(sched.depth_trace),
-                      speculative_launches=sched.speculative_launches)
+                      speculative_launches=sched.speculative_launches,
+                      speculation_wins=sched.speculation_wins)
 
 
 # ---------------------------------------------------------------------------
@@ -677,7 +943,9 @@ class ThreadedRunner:
                                               List[Any]]] = None,
                  batch_key: Optional[Callable[[Task], Any]] = None,
                  max_batch: int = 1,
-                 batch_cap: Optional[Callable[[Task], int]] = None):
+                 batch_cap: Optional[Callable[[Task], int]] = None,
+                 locality_score: Optional[Callable[[Task], float]] = None,
+                 prefetcher=None):
         self.n_workers = n_workers
         self.run_task = run_task
         self.fetch = fetch
@@ -688,19 +956,34 @@ class ThreadedRunner:
         # per-shape wave-size cap (the driver pins one padded wave width
         # per shape bucket; claims must not exceed it)
         self.batch_cap = batch_cap
+        # response-time-aware ranking + dynamic-k ahead-fetch (the
+        # balanced scheduling loop, DESIGN.md §9)
+        self.locality_score = locality_score
+        self.prefetcher = prefetcher       # core.prefetch.TaskPrefetcher
+        # called with the live scheduler before workers start (drivers
+        # wire data-plane state changes to request_rerank here)
+        self.on_scheduler: Optional[Callable[[TwoPhaseScheduler],
+                                             None]] = None
         self.last_scheduler: Optional[TwoPhaseScheduler] = None
 
     def run_job(self, tasks: Sequence[Task]) -> List[TaskResult]:
-        sched = TwoPhaseScheduler(self.n_workers, tasks, self.cfg)
+        sched = TwoPhaseScheduler(self.n_workers, tasks, self.cfg,
+                                  locality_score=self.locality_score,
+                                  bucket_key=self.batch_key)
         self.last_scheduler = sched
+        if self.on_scheduler is not None:
+            self.on_scheduler(sched)
         lock = threading.Lock()
         results: List[TaskResult] = []
         errors: List[BaseException] = []
         use_waves = self.run_batch is not None and self.max_batch > 1
 
+        prefetcher = self.prefetcher if self.fetch is not None else None
+
         def worker_loop(wid: int):
             while True:
                 batch = None
+                upcoming: List[Task] = []
                 with lock:
                     if errors:                 # a peer died: job-level
                         return                 # abort (thesis §3.3)
@@ -715,6 +998,14 @@ class ThreadedRunner:
                                 sched.on_task_start(wid, x)
                         else:
                             sched.on_task_start(wid, t)
+                        if prefetcher is not None:
+                            # snapshot the next wave's tasks under the
+                            # lock; their fetches go in flight while THIS
+                            # wave executes (thesis §3.5 pipeline)
+                            upcoming = list(itertools.islice(
+                                itertools.chain(sched.queues[wid],
+                                                sched.backlog),
+                                prefetcher.lookahead()))
                 if t is None:
                     with lock:
                         if sched.done():
@@ -724,7 +1015,14 @@ class ThreadedRunner:
                 claimed = batch if batch is not None else [t]
                 try:
                     t0 = time.perf_counter()
-                    if self.fetch is not None:
+                    if prefetcher is not None:
+                        prefetcher.prefetch(
+                            [(x.task_id, lambda _x=x: self.fetch(_x))
+                             for x in upcoming])
+                        for x in claimed:
+                            prefetcher.ensure(
+                                x.task_id, lambda _x=x: self.fetch(_x))
+                    elif self.fetch is not None:
                         for x in claimed:
                             self.fetch(x)
                     t1 = time.perf_counter()
@@ -739,6 +1037,8 @@ class ThreadedRunner:
                     return
                 fetch_each = (t1 - t0) / len(claimed)
                 exec_each = (t2 - t1) / len(claimed)
+                if prefetcher is not None:
+                    prefetcher.observe_exec(exec_each)
                 with lock:
                     for x, value in zip(claimed, values):
                         res = TaskResult(x.task_id, wid, t0, fetch_each,

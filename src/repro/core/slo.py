@@ -10,7 +10,7 @@ startup costs dominate.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +44,37 @@ def choose_cores(
         reason=(f"{cores} cores maximize data within {slo_seconds}s SLO "
                 f"(startup-adjusted); larger configs gave "
                 f"<{diminishing_threshold:.0%} improvement"))
+
+
+def pow2_ladder(max_value: int) -> List[int]:
+    """1, 2, 4, … up to (and always including) ``max_value``."""
+    out = [1 << i for i in range((max(max_value, 1)).bit_length())
+           if (1 << i) <= max_value]
+    if max_value not in out:
+        out.append(max_value)
+    return out
+
+
+def choose_workers(
+    max_workers: int,
+    *,
+    bytes_per_second_per_worker: float,
+    startup_seconds: float,
+    slo_seconds: float,
+    diminishing_threshold: float = 0.10,
+) -> ScaleDecision:
+    """Pool-sizing hint for the platform driver/service: apply
+    :func:`choose_cores` over a power-of-two worker ladder with a
+    linear-scaling throughput model calibrated from the kneepoint
+    measurement (seconds/sample at the knee → bytes/s per worker).
+    Small jobs under tight SLOs land on *fewer* workers because the
+    startup tax dominates (thesis Fig 12/13)."""
+    return choose_cores(
+        pow2_ladder(max_workers),
+        lambda c: c * bytes_per_second_per_worker,
+        lambda c: startup_seconds,
+        slo_seconds,
+        diminishing_threshold=diminishing_threshold)
 
 
 def elastic_schedule(

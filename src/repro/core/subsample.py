@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp

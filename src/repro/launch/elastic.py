@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Sequence
 
 from repro.core.scheduler import SimParams, SimWorker, simulate_job
 from repro.core.slo import ScaleDecision, choose_cores

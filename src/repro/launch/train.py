@@ -102,7 +102,6 @@ def main():
         corpus, PipelineConfig(batch_size=args.batch, seq_len=args.seq))
 
     def batches():
-        import jax.numpy as jnp
         import jax
         import numpy as np
         for b in pipe.batches(None):

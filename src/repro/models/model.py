@@ -18,7 +18,7 @@ from repro.config.base import ModelConfig, ShapeConfig
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.parallel.sharding import (
-    BATCH, SEQ, ParamDef, init_params, is_param_def, tree_shape_structs,
+    BATCH, SEQ, init_params, tree_shape_structs,
 )
 
 _DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
-from repro.parallel.sharding import BATCH, EMBED, HEADS, REPL, ParamDef
+from repro.parallel.sharding import BATCH, EMBED, HEADS, ParamDef
 
 _C = 8.0  # Griffin's fixed exponent scale
 

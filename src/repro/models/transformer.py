@@ -14,7 +14,7 @@ Modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -252,7 +252,6 @@ def layer_apply(
 
 
 def _zero_state(cfg: ModelConfig, kind: str, batch: int):
-    from repro.parallel.sharding import init_params
     if kind == RGLRU:
         defs = RG.rglru_state_defs(cfg, batch)
     else:

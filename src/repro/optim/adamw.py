@@ -14,9 +14,7 @@ bookkeeping, courtesy of GSPMD).  ``moment_dtype``:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,8 +14,6 @@ Both match ``lax.psum`` numerically (tests assert allclose / bounded error).
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -43,6 +43,7 @@ class BackendOutcome:
     results: List[sch.TaskResult]
     queue_depths: List[int]              # dynamic-k trace (thesis §3.5)
     speculative_launches: int = 0
+    speculation_wins: int = 0            # clone completed first
     restarts: int = 0
     per_worker_busy: Dict[int, float] = dataclasses.field(
         default_factory=dict)
@@ -58,6 +59,9 @@ class PlatformBackend(Protocol):
             compute_wave: Optional[ComputeWave] = None,
             max_wave: int = 1,
             wave_cap: Optional[Callable[[sch.Task], int]] = None,
+            locality_score: Optional[Callable[[sch.Task], float]] = None,
+            prefetcher=None,
+            on_scheduler: Optional[Callable[[Any], None]] = None,
             ) -> BackendOutcome:
         """Execute ``tasks``; stream each task's partial through ``emit``.
         ``shape_key(task)`` identifies the task's compiled block shape
@@ -66,7 +70,13 @@ class PlatformBackend(Protocol):
         a backend supports it — executes up to ``max_wave`` same-shape
         tasks in one device dispatch, returning per-task partials;
         ``wave_cap(task)`` further bounds the wave size for that task's
-        shape bucket (the driver's fixed padded wave width)."""
+        shape bucket (the driver's fixed padded wave width).
+        ``locality_score(task)`` ranks ready tasks by predicted
+        best-replica fetch latency (balanced scheduling, DESIGN.md §9);
+        ``prefetcher`` is a :class:`~repro.core.prefetch.TaskPrefetcher`
+        overlapping upcoming fetches with execution; ``on_scheduler`` is
+        called with the live scheduler so the driver can wire data-plane
+        state changes to :meth:`request_rerank`."""
         ...
 
 
@@ -82,7 +92,8 @@ class ThreadedBackend:
         self.n_workers = n_workers
 
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
-            shape_key=None, compute_wave=None, max_wave=1, wave_cap=None):
+            shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
+            locality_score=None, prefetcher=None, on_scheduler=None):
         assert compute is not None, "threaded backend needs real compute"
 
         def run_task(task: sch.Task):
@@ -120,7 +131,10 @@ class ThreadedBackend:
                                     cfg=cfg, run_batch=run_wave,
                                     batch_key=shape_key,
                                     max_batch=max_wave,
-                                    batch_cap=wave_cap)
+                                    batch_cap=wave_cap,
+                                    locality_score=locality_score,
+                                    prefetcher=prefetcher)
+        runner.on_scheduler = on_scheduler
         t0 = time.perf_counter()
         time.sleep(plat.startup_time)
         results = runner.run_job(tasks)
@@ -129,7 +143,8 @@ class ThreadedBackend:
         return BackendOutcome(
             makespan=makespan, results=results,
             queue_depths=list(sched.depth_trace) if sched else [],
-            speculative_launches=sched.speculative_launches if sched else 0)
+            speculative_launches=sched.speculative_launches if sched else 0,
+            speculation_wins=sched.speculation_wins if sched else 0)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +174,8 @@ class PoolJob:
     deadline: Optional[float] = None     # absolute time.monotonic() value
     weight: float = 1.0
     on_start: Optional[Callable[[float], None]] = None
+    # predicted best-replica fetch seconds (balanced scheduling §9)
+    locality_score: Optional[Callable[[sch.Task], float]] = None
 
 
 class ServicePool:
@@ -178,11 +195,15 @@ class ServicePool:
     name = "service-pool"
 
     def __init__(self, n_workers: int, plat,
-                 cfg: Optional[sch.MultiJobConfig] = None):
+                 cfg: Optional[sch.MultiJobConfig] = None,
+                 prefetcher=None):
         self.n_workers = max(n_workers, 1)
         self.plat = plat
         self.sched = sch.MultiJobScheduler(self.n_workers,
                                            cfg or sch.MultiJobConfig())
+        # core.prefetch.TaskPrefetcher: next waves' data-node fetches go
+        # in flight while the current wave executes
+        self.prefetcher = prefetcher
         self._jobs: Dict[int, PoolJob] = {}
         self._started_jobs: set = set()
         self._cond = threading.Condition()
@@ -222,6 +243,8 @@ class ServicePool:
         for th in self._threads:
             th.join(timeout=30.0)
         self._threads = []
+        if self.prefetcher is not None:
+            self.prefetcher.close()
 
     # -- job intake ----------------------------------------------------------
     def submit(self, job: PoolJob) -> None:
@@ -236,7 +259,8 @@ class ServicePool:
                 self.sched.add_job(
                     job.job_id, job.tasks, fuse_key=job.fuse_key,
                     cap=job.cap, priority=job.priority,
-                    deadline=job.deadline, weight=job.weight)
+                    deadline=job.deadline, weight=job.weight,
+                    locality_score=job.locality_score)
                 self._cond.notify_all()
                 stopped = False
         if stopped:
@@ -250,7 +274,10 @@ class ServicePool:
             if job_id not in self.sched.jobs:
                 self._jobs.pop(job_id, None)
                 self._started_jobs.discard(job_id)
-            return len(dropped)
+        if self.prefetcher is not None:
+            # evict the job's prefetched-but-never-claimed fetches
+            self.prefetcher.discard(lambda k: k[0] == job_id)
+        return len(dropped)
 
     def pending_tasks(self) -> int:
         with self._cond:
@@ -260,16 +287,28 @@ class ServicePool:
     def _worker_loop(self, wid: int) -> None:
         del wid
         plat = self.plat
+        speculative = self.sched.cfg.speculative
         while True:
             claim_err: Optional[BaseException] = None
             failed_ids: List[int] = []
+            upcoming: List[Tuple[PoolJob, sch.Task]] = []
+            is_spec = False                 # batch came from speculation
             with self._cond:
-                while not self._stop and not self.sched.has_ready():
-                    self._cond.wait(0.02)
-                if self._stop:
-                    return
                 try:
-                    batch = self.sched.claim(time.monotonic())
+                    batch = []
+                    while not self._stop:
+                        batch = self.sched.claim(time.monotonic())
+                        if batch:
+                            break
+                        if speculative:
+                            # idle + nothing ready: clone a straggler
+                            # (first completion wins; same per-task seed)
+                            batch = self.sched.claim_speculative(
+                                time.monotonic())
+                            if batch:
+                                is_spec = True
+                                break
+                        self._cond.wait(0.02)
                 except Exception as e:      # noqa: BLE001
                     # a scheduler-policy bug must fail jobs, not kill the
                     # worker thread (a dead worker hangs every outstanding
@@ -277,12 +316,22 @@ class ServicePool:
                     # trustworthy, so fail everything it was managing
                     claim_err, batch = e, []
                     failed_ids = list(self._jobs)
+                if self._stop and not batch:
+                    return
                 pool_batch = [(self._jobs[j.job_id], t) for j, t in batch
                               if j.job_id in self._jobs]
                 now = time.monotonic()
                 fresh = [pj for pj, _ in pool_batch
                          if pj.job_id not in self._started_jobs]
                 self._started_jobs.update(pj.job_id for pj in fresh)
+                if self.prefetcher is not None:
+                    # snapshot the next waves' tasks under the lock; their
+                    # fetches overlap this wave's execution (§3.5)
+                    upcoming = [
+                        (self._jobs[j.job_id], t)
+                        for j, t in self.sched.peek(
+                            self.prefetcher.lookahead(), now)
+                        if j.job_id in self._jobs]
             if claim_err is not None:
                 self._fail_jobs(failed_ids, claim_err)
                 continue
@@ -296,7 +345,9 @@ class ServicePool:
                 # executed, and a 0.0 would skew the EMA)
                 with self._cond:
                     for job, _task in batch:
-                        self.sched.on_task_complete(job.job_id, None)
+                        self.sched.on_task_complete(job.job_id, None,
+                                                    _task.task_id,
+                                                    speculative=is_spec)
                     self._cond.notify_all()
                 continue
             for pj in {pj.job_id: pj for pj in fresh}.values():
@@ -305,14 +356,34 @@ class ServicePool:
             if plat.launch_overhead:
                 time.sleep(plat.launch_overhead)
             try:
+                if self.prefetcher is not None and upcoming:
+                    self.prefetcher.prefetch(
+                        [((pj.job_id, t.task_id),
+                          lambda _pj=pj, _t=t: _pj.fetch(_t))
+                         for pj, t in upcoming if pj.fetch is not None])
                 for pj, task in pool_batch:
                     if pj.fetch is not None:
-                        pj.fetch(task)
+                        if self.prefetcher is not None:
+                            self.prefetcher.ensure(
+                                (pj.job_id, task.task_id),
+                                lambda _pj=pj, _t=task: _pj.fetch(_t))
+                        else:
+                            pj.fetch(task)
                 t1 = time.perf_counter()
                 values = pool_batch[0][0].run_batch(pool_batch)
                 took = time.perf_counter() - t1
             except BaseException as e:      # noqa: BLE001
-                self._fail_batch(batch, e)
+                if is_spec:
+                    # a clone is a redundant bet: losing it (e.g. its
+                    # refetch hit a down replica) must not fail the job
+                    # — settle the accounting; the original still runs
+                    with self._cond:
+                        for job, _task in batch:
+                            self.sched.on_task_abandoned(job.job_id,
+                                                         _task.task_id)
+                        self._cond.notify_all()
+                else:
+                    self._fail_batch(batch, e)
                 continue
             if plat.dfs_tax:
                 time.sleep(plat.dfs_tax * took)
@@ -325,17 +396,28 @@ class ServicePool:
             # settles without a sample (its tasks never executed, and
             # charging them would dilute the EMA toward zero)
             exec_each = took / max(len(pool_batch), 1)
+            if self.prefetcher is not None:
+                self.prefetcher.observe_exec(exec_each)
             executed = {pj.job_id for pj, _ in pool_batch}
             finished: List[PoolJob] = []
             with self._cond:
                 for job, _task in batch:
                     sample = (exec_each if job.job_id in executed else None)
-                    if self.sched.on_task_complete(job.job_id, sample):
+                    if self.sched.on_task_complete(job.job_id, sample,
+                                                   _task.task_id,
+                                                   speculative=is_spec):
                         pj = self._jobs.pop(job.job_id, None)
                         self._started_jobs.discard(job.job_id)
                         if pj is not None:
                             finished.append(pj)
                 self._cond.notify_all()
+            if self.prefetcher is not None and finished:
+                # evict finished jobs' never-claimed prefetches (a peer
+                # can ensure() a task inline before our peeked prefetch
+                # lands — without this sweep those futures leak for the
+                # life of the service)
+                gone = {pj.job_id for pj in finished}
+                self.prefetcher.discard(lambda k: k[0] in gone)
             for pj in finished:
                 pj.on_done()
 
@@ -358,6 +440,9 @@ class ServicePool:
                 if pj is not None:
                     failed.append(pj)
             self._cond.notify_all()
+        if self.prefetcher is not None and failed:
+            gone = {pj.job_id for pj in failed}
+            self.prefetcher.discard(lambda k: k[0] in gone)
         for pj in failed:
             pj.on_error(error)
 
@@ -429,9 +514,14 @@ class SimulatedBackend:
         return exec_s, fetch_s, time.perf_counter() - t_cal
 
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
-            shape_key=None, compute_wave=None, max_wave=1, wave_cap=None):
-        # calibration measures per-task costs; waves don't apply
-        del compute_wave, max_wave, wave_cap
+            shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
+            locality_score=None, prefetcher=None, on_scheduler=None):
+        # calibration measures per-task costs; waves don't apply, and the
+        # §3.5 fetch/execute overlap is already modeled in virtual time
+        # (queue-warm cost = max(exec, fetch)), so the real prefetcher is
+        # unused; locality ranking applies — replica scores reorder the
+        # virtual-time backlog exactly as they do the threaded one
+        del compute_wave, max_wave, wave_cap, prefetcher, on_scheduler
         calibration = 0.0
         if self.exec_model is not None:
             exec_time = self.exec_model
@@ -459,10 +549,13 @@ class SimulatedBackend:
             launch_overhead=plat.launch_overhead,
             startup_time=plat.startup_time * self.startup_scale)
         out = sch.simulate_job(tasks, self.workers, params, cfg,
-                               max_restarts=self.max_restarts)
+                               max_restarts=self.max_restarts,
+                               locality_score=locality_score,
+                               bucket_key=shape_key)
         return BackendOutcome(
             makespan=out.makespan, results=out.results,
             queue_depths=list(out.queue_depths),
             speculative_launches=out.speculative_launches,
+            speculation_wins=out.speculation_wins,
             restarts=out.restarts, per_worker_busy=out.per_worker_busy,
             calibration_seconds=calibration)

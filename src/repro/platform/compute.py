@@ -76,6 +76,10 @@ class DispatchStats:
     # a list for one-shot jobs; :meth:`bounded` swaps in a capped deque
     wave_sizes: MutableSequence[int] = dataclasses.field(
         default_factory=list)
+    # data-plane prefetch pipeline (DESIGN.md §9): how many task fetches
+    # were already in flight when their wave executed vs fetched inline
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
 
     @classmethod
     def bounded(cls, max_wave_history: int) -> "DispatchStats":

@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.core import kneepoint as kp
 from repro.core import scheduler as sch
+from repro.core import slo as slo_mod
+from repro.core.prefetch import TaskPrefetcher
 from repro.platform import compute as pc
 from repro.platform.backend import (
     BackendOutcome,
@@ -95,6 +97,23 @@ class PlatformSpec:
     #   same-shape ready tasks into one device dispatch (threaded backend,
     #   pallas/jnp engines; per-task fallback for numpy & custom map_fn)
     max_wave: int = 32                     # wave size cap (task count)
+    # balanced dynamic scheduling (DESIGN.md §9): rank ready tasks by the
+    # predicted fetch latency of their best available data-node replica
+    # ("auto" engages whenever a datastore is attached; "on" requires one)
+    balanced: str = "auto"                 # "auto" | "on" | "off"
+    # straggler speculation: clone in-flight tasks older than
+    # straggler_factor × the exec EMA onto an idle worker ("auto" gates
+    # each clone through recovery.should_speculate's §3.3 cost model)
+    speculation: str = "off"               # "off" | "on" | "auto"
+    straggler_factor: float = 2.0
+    # dynamic-k data-plane prefetch: upcoming tasks' fetches go in flight
+    # while the current wave executes ("auto" engages with a datastore)
+    prefetch: str = "auto"                 # "auto" | "on" | "off"
+    # SLO-aware pool sizing: when set, worker count is chosen by
+    # slo.choose_cores over a pow2 ladder up to n_workers (needs a
+    # measured kneepoint for the throughput model; silently keeps
+    # n_workers otherwise)
+    slo_seconds: Optional[float] = None
     knee_bytes: Optional[float] = None     # skip the offline phase if set
     kneepoint_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
     seed: int = 0
@@ -136,6 +155,11 @@ class JobReport:
     device_dispatches: int = 0
     bytes_uploaded: float = 0.0
     wave_sizes: List[int] = dataclasses.field(default_factory=list)
+    # balanced-scheduling observability (DESIGN.md §9)
+    speculation_wins: int = 0
+    scale_decision: Optional[str] = None    # slo.choose_cores reasoning
+    n_workers_used: int = 0
+    prefetch_stats: Optional[Dict[str, float]] = None
 
 
 def make_tasks(sample_sizes: Sequence[int], sizing: str,
@@ -392,6 +416,79 @@ def wave_enabled(spec: PlatformSpec, engine: str, workload,
     return supported
 
 
+def balanced_enabled(spec: PlatformSpec, has_datastore: bool) -> bool:
+    """Response-time-aware claim ordering needs a data plane to score;
+    ``balanced="on"`` makes its absence an error instead of a silent
+    FIFO fallback."""
+    if spec.balanced not in ("auto", "on", "off"):
+        raise ValueError(f"unknown balanced mode {spec.balanced!r}; "
+                         "choose 'auto', 'on' or 'off'")
+    if spec.balanced == "off":
+        return False
+    if spec.balanced == "on" and not has_datastore:
+        raise ValueError("balanced='on' needs a datastore to score "
+                         "replicas against")
+    return has_datastore
+
+
+def prefetch_enabled(spec: PlatformSpec, has_fetch: bool) -> bool:
+    """Like :func:`balanced_enabled`: ``"on"`` makes a configuration
+    that cannot prefetch an error instead of a silent inline-fetch
+    fallback (no datastore to fetch from, or a virtual-time backend
+    that models the overlap itself)."""
+    if spec.prefetch not in ("auto", "on", "off"):
+        raise ValueError(f"unknown prefetch mode {spec.prefetch!r}; "
+                         "choose 'auto', 'on' or 'off'")
+    if spec.prefetch == "on":
+        if not has_fetch:
+            raise ValueError("prefetch='on' needs a datastore whose "
+                             "fetches can be pipelined")
+        if spec.backend == "simulated":
+            raise ValueError("prefetch='on' needs the threaded backend "
+                             "(the simulator models the §3.5 overlap "
+                             "in virtual time)")
+    return (spec.prefetch != "off" and has_fetch
+            and spec.backend == "threaded")
+
+
+def resolve_speculation(spec: PlatformSpec):
+    """Map the spec's speculation mode onto SchedulerConfig.speculative."""
+    if spec.speculation not in ("off", "on", "auto"):
+        raise ValueError(f"unknown speculation mode {spec.speculation!r}; "
+                         "choose 'off', 'on' or 'auto'")
+    return {"off": False, "on": True, "auto": "auto"}[spec.speculation]
+
+
+def build_prefetcher(n_workers: int) -> TaskPrefetcher:
+    """The platform's prefetch pipe: ~2 waves/worker of look-ahead and
+    one background fetch stream per worker.  Deeper pipes cannot raise
+    data-plane throughput past nodes × parallelism / latency — they
+    only add queueing (the contention term of §3.5)."""
+    return TaskPrefetcher(min_depth=max(2, n_workers),
+                          max_depth=max(4, 2 * n_workers),
+                          workers=max(2, min(2 * n_workers, 8)))
+
+
+def slo_worker_decision(spec: PlatformSpec, plat: PlatformConfig,
+                        plan: JobPlan) -> Optional[slo_mod.ScaleDecision]:
+    """SLO-aware pool sizing (thesis §4.2.3 / Fig 12-13): with a target
+    ``slo_seconds`` and a measured kneepoint, choose the worker count
+    that maximizes data within the SLO window — small jobs under tight
+    SLOs get *fewer* workers because startup dominates.  ``None`` when
+    no SLO is set or the knee was not measured (no throughput model)."""
+    if spec.slo_seconds is None or plan.knee_res is None:
+        return None
+    cost = plan.knee_res.curve[plan.knee_res.index].cost  # s per sample
+    if cost <= 0 or not plan.ids:
+        return None
+    sample_bytes = plan.total_bytes / len(plan.ids)
+    return slo_mod.choose_workers(
+        max(spec.n_workers, 1),
+        bytes_per_second_per_worker=sample_bytes / cost,
+        startup_seconds=plat.startup_time,
+        slo_seconds=spec.slo_seconds)
+
+
 class Platform:
     """The end-to-end driver.  ``datastore`` is an optional
     :class:`~repro.core.datastore.ReplicatedDataStore`; ``map_fn`` replaces
@@ -416,15 +513,18 @@ class Platform:
     def _scheduler_cfg(self, plat: PlatformConfig) -> sch.SchedulerConfig:
         if self.spec.scheduler is not None:
             return self.spec.scheduler
-        return sch.SchedulerConfig(recovery=plat.recovery,
-                                   seed=self.spec.seed)
+        return sch.SchedulerConfig(
+            recovery=plat.recovery, seed=self.spec.seed,
+            speculative=resolve_speculation(self.spec),
+            straggler_factor=self.spec.straggler_factor)
 
-    def _backend(self) -> PlatformBackend:
+    def _backend(self, n_workers: Optional[int] = None) -> PlatformBackend:
+        n = n_workers if n_workers is not None else self.spec.n_workers
         if self.spec.backend == "threaded":
-            return ThreadedBackend(self.spec.n_workers)
+            return ThreadedBackend(n)
         if self.spec.backend == "simulated":
             workers = (list(self.spec.sim_workers) if self.spec.sim_workers
-                       else self.spec.n_workers)
+                       else n)
             return SimulatedBackend(workers,
                                     compute_values=self.spec.compute_values,
                                     startup_scale=self.spec.startup_scale)
@@ -443,6 +543,9 @@ class Platform:
         engine = ("custom" if self.map_fn is not None
                   else pc.resolve_engine(workload.statistic, spec.engine))
         phases: Dict[str, float] = {}
+        # validated up front: balanced="on" without a datastore (and any
+        # bad mode string) must error, never silently run FIFO
+        balanced_on = balanced_enabled(spec, self.datastore is not None)
 
         # phases 1-2 — offline kneepoint (thesis §3.2: ≈3% of online
         # time; a custom map_fn is calibrated on itself, not the workload
@@ -457,9 +560,20 @@ class Platform:
         t0 = time.perf_counter()
         if self.datastore is not None:
             self.datastore.put_all({i: samples[i] for i in plan.ids})
+            if balanced_on:
+                # seed the per-node response-time EMAs (phase-1 probe of
+                # the data plane) so the first claims are not blind
+                self.datastore.probe()
         phases["distribute"] = (plan.partition_seconds
                                 + time.perf_counter() - t0)
         tasks, ids, task_shape = plan.tasks, plan.ids, plan.task_shape
+
+        # SLO-aware pool sizing (slo.choose_cores over the knee-derived
+        # throughput model); explicit sim worker lists are respected
+        decision = (None if spec.sim_workers
+                    else slo_worker_decision(spec, plat, plan))
+        n_eff = decision.cores if decision is not None \
+            else self._n_exec_workers()
 
         wave_on = self._wave_enabled(engine, workload)
         dispatch = pc.DispatchStats()
@@ -482,11 +596,26 @@ class Platform:
             return pc.run_map_task(block, mo, task_seed, workload, engine)
 
         fetch = None
+        locality_score = None
+        on_scheduler = None
         if self.datastore is not None:
             store = self.datastore
 
             def fetch(task: sch.Task):
                 store.fetch_many([ids[sid] for sid in task.sample_ids])
+
+            if balanced_on:
+                def locality_score(task: sch.Task) -> float:
+                    return store.predicted_task_fetch(
+                        [ids[sid] for sid in task.sample_ids])
+
+                def on_scheduler(live) -> None:
+                    # a node turning degraded/down re-ranks ready tasks
+                    store.on_state_change = \
+                        lambda node: live.request_rerank()
+        prefetcher = (build_prefetcher(n_eff)
+                      if prefetch_enabled(spec, fetch is not None)
+                      else None)
 
         # phase 3 — compile warmup: one kernel per distinct block shape
         # (precompiled task binaries are startup cost, Fig 5).  Wave mode
@@ -500,7 +629,7 @@ class Platform:
         compute_wave = None
         if wave_on:
             ctx = build_wave_context(plan, workload,
-                                     n_exec=self._n_exec_workers(),
+                                     n_exec=n_eff,
                                      max_wave=spec.max_wave,
                                      warm_seed=spec.seed)
             dispatch.bytes_uploaded += ctx.arena.nbytes
@@ -534,12 +663,15 @@ class Platform:
         emit = tree.offer if tree is not None else (lambda tid, v: None)
         t0 = time.perf_counter()
         try:
-            outcome = self._backend().run(
+            outcome = self._backend(n_eff).run(
                 tasks, compute=compute_task, fetch=fetch, plat=plat,
                 cfg=self._scheduler_cfg(plat), emit=emit,
                 shape_key=task_shape, compute_wave=compute_wave,
                 max_wave=spec.max_wave if wave_on else 1,
-                wave_cap=(ctx.cap if wave_on else None))
+                wave_cap=(ctx.cap if wave_on else None),
+                locality_score=locality_score,
+                prefetcher=prefetcher,
+                on_scheduler=on_scheduler)
             phases["execute"] = time.perf_counter() - t0
 
             # phase 5 — drain the reduce tree, finalize the statistic
@@ -555,6 +687,14 @@ class Platform:
             if tree is not None:
                 tree.close()           # unblock the combiner thread
             raise
+        finally:
+            if prefetcher is not None:
+                stats = prefetcher.stats()
+                dispatch.prefetch_hits += int(stats["prefetch_hits"])
+                dispatch.prefetch_misses += int(stats["prefetch_misses"])
+                prefetcher.close()
+            if self.datastore is not None:
+                self.datastore.on_state_change = None
 
         if self.datastore is not None:
             for r in outcome.results:
@@ -562,7 +702,10 @@ class Platform:
 
         return self._report(plat, outcome, tasks, plan.total_bytes,
                             plan.knee_bytes, plan.knee_res, engine, phases,
-                            result, reduce_info, dispatch=dispatch)
+                            result, reduce_info, dispatch=dispatch,
+                            scale_decision=decision, n_workers_used=n_eff,
+                            prefetch_stats=(stats if prefetcher is not None
+                                            else None))
 
     # -- virtual-time scale-out over a cost model ----------------------------
     def run_scaleout(self, sample_sizes: Sequence[int], *,
@@ -577,16 +720,28 @@ class Platform:
             "pass exactly one of per_sample_exec / exec_model"
         spec = self.spec
         plat = self._platform_config()
+        decision = None
+        if (spec.slo_seconds is not None and per_sample_exec is not None
+                and not spec.sim_workers and len(sample_sizes)):
+            # SLO-aware sizing from the calibrated cost model (Fig 12/13)
+            mean_bytes = float(np.mean(np.asarray(sample_sizes)))
+            decision = slo_mod.choose_workers(
+                max(spec.n_workers, 1),
+                bytes_per_second_per_worker=(mean_bytes
+                                             / float(per_sample_exec)),
+                startup_seconds=plat.startup_time * spec.startup_scale,
+                slo_seconds=spec.slo_seconds)
         if exec_model is None:
             rate = float(per_sample_exec)
             exec_model = lambda t: rate * len(t.sample_ids)   # noqa: E731
+        n_eff = decision.cores if decision is not None \
+            else self._n_exec_workers()
         t0 = time.perf_counter()
         tasks = make_tasks(list(sample_sizes), plat.task_sizing,
-                           spec.knee_bytes, self._n_exec_workers())
+                           spec.knee_bytes, n_eff)
         phases = {"plan": 0.0, "distribute": time.perf_counter() - t0,
                   "compile": 0.0}
-        workers = (list(spec.sim_workers) if spec.sim_workers
-                   else spec.n_workers)
+        workers = (list(spec.sim_workers) if spec.sim_workers else n_eff)
         backend = SimulatedBackend(workers, exec_model=exec_model,
                                    fetch_model=fetch_model,
                                    startup_scale=spec.startup_scale)
@@ -598,7 +753,8 @@ class Platform:
         phases["reduce"] = 0.0
         return self._report(plat, outcome, tasks, float(sum(sample_sizes)),
                             spec.knee_bytes, None, "cost-model", phases,
-                            None, None, backend_name="simulated")
+                            None, None, backend_name="simulated",
+                            scale_decision=decision, n_workers_used=n_eff)
 
     # -- report assembly -----------------------------------------------------
     def _report(self, plat: PlatformConfig, outcome: BackendOutcome,
@@ -607,7 +763,11 @@ class Platform:
                 knee_res: Optional[kp.KneepointResult], engine: str,
                 phases: Dict[str, float], result, reduce_info, *,
                 backend_name: Optional[str] = None,
-                dispatch: Optional[pc.DispatchStats] = None) -> JobReport:
+                dispatch: Optional[pc.DispatchStats] = None,
+                scale_decision: Optional[slo_mod.ScaleDecision] = None,
+                n_workers_used: Optional[int] = None,
+                prefetch_stats: Optional[Dict[str, float]] = None,
+                ) -> JobReport:
         backend_name = backend_name or self.spec.backend
         dispatch = dispatch or pc.DispatchStats()
         execs = sorted(r.exec_time for r in outcome.results)
@@ -640,4 +800,11 @@ class Platform:
             reduce_info=reduce_info,
             device_dispatches=dispatch.device_dispatches,
             bytes_uploaded=dispatch.bytes_uploaded,
-            wave_sizes=list(dispatch.wave_sizes))
+            wave_sizes=list(dispatch.wave_sizes),
+            speculation_wins=outcome.speculation_wins,
+            scale_decision=(f"{scale_decision.cores} cores: "
+                            f"{scale_decision.reason}"
+                            if scale_decision is not None else None),
+            n_workers_used=(n_workers_used if n_workers_used is not None
+                            else self._n_exec_workers()),
+            prefetch_stats=prefetch_stats)

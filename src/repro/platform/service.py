@@ -59,9 +59,14 @@ from repro.platform.driver import (
     Platform,
     PlatformSpec,
     WaveContext,
+    balanced_enabled,
+    build_prefetcher,
     build_wave_context,
     plan_job,
+    prefetch_enabled,
     resolve_platform_config,
+    resolve_speculation,
+    slo_worker_decision,
     wave_enabled,
 )
 from repro.platform.reduce import StreamingReduceTree, finalize_stats
@@ -343,12 +348,16 @@ class PlatformService:
         self.admission = admission
         self.datastore = datastore
         self.plat = resolve_platform_config(spec)
+        # validated up front: balanced="on" without a datastore (and any
+        # bad mode string) must error, never silently run FIFO
+        self.balanced = balanced_enabled(spec, datastore is not None)
         # service-wide counters; a persistent service dispatches forever,
         # so only a bounded window of wave sizes is kept (one-shot
         # JobReports keep the full list)
         self.dispatch = pc.DispatchStats.bounded(4096)
         self.jobs_completed = 0
         self.jobs_rejected = 0
+        self.scale_decision: Optional[str] = None   # slo.choose_cores hint
         self._pool: Optional[ServicePool] = None
         self._lock = threading.Lock()
         # serializes admission decisions with slot reservation, so two
@@ -386,6 +395,8 @@ class PlatformService:
                 pool = self._pool
         for ticket, _args in waiting:
             self._finish(ticket, REJECTED, reason="service closed")
+        if self.datastore is not None:
+            self.datastore.on_state_change = None
         if pool is not None:
             pool.close()
         with self._lock:
@@ -413,6 +424,9 @@ class PlatformService:
                                            else self.spec.knee_bytes))
         if self.datastore is not None:
             self.datastore.put_all({i: samples[i] for i in handle.ids})
+            if self.balanced:
+                # phase-1 probe of the data plane: seed response EMAs
+                self.datastore.probe()
         return handle
 
     # -- submission ----------------------------------------------------------
@@ -497,7 +511,7 @@ class PlatformService:
                 and pool.sched.avg_task_seconds is not None):
             est = ((pending + ticket.n_tasks)
                    * pool.sched.avg_task_seconds
-                   / max(self.spec.n_workers, 1))
+                   / max(pool.n_workers, 1))
             if est > deadline:
                 return ("slo", f"slo unmeetable: est completion {est:.3f}s "
                         f"> deadline {deadline:.3f}s at current load")
@@ -517,9 +531,7 @@ class PlatformService:
                 admit = False
             else:
                 if self._pool is None:
-                    self._pool = ServicePool(
-                        self.spec.n_workers, self.plat,
-                        cfg=sch.MultiJobConfig())
+                    self._pool = self._build_pool(qc)
                 pool = self._pool
                 ticket.status = RUNNING
                 admit = True
@@ -531,11 +543,17 @@ class PlatformService:
         ticket.tree = StreamingReduceTree(len(qc.plan.tasks))
 
         fetch = None
+        locality_score = None
         if self.datastore is not None:
             store, ids = self.datastore, qc.plan.ids
 
             def fetch(task: sch.Task):
                 store.fetch_many([ids[sid] for sid in task.sample_ids])
+
+            if self.balanced:
+                def locality_score(task: sch.Task) -> float:
+                    return store.predicted_task_fetch(
+                        [ids[sid] for sid in task.sample_ids])
 
         job = PoolJob(
             job_id=ticket.job_id, tasks=qc.plan.tasks, seed=ticket.seed,
@@ -545,7 +563,8 @@ class PlatformService:
             on_error=lambda e: self._on_job_error(ticket, e),
             fetch=fetch, fuse_key=qc.fuse_key, cap=qc.cap,
             priority=priority, deadline=abs_deadline, weight=weight,
-            on_start=lambda at: setattr(ticket, "started_at", at))
+            on_start=lambda at: setattr(ticket, "started_at", at),
+            locality_score=locality_score)
         pool.submit(job)
         if ticket.cancel_requested:
             # cancel() raced the hand-off: it saw RUNNING but the job was
@@ -555,6 +574,34 @@ class PlatformService:
             # its pool.cancel, so one of the two cancels sees the job)
             pool.cancel(ticket.job_id)
             ticket._close_tree()
+
+    def _build_pool(self, qc: QueryClass) -> ServicePool:
+        """The resident pool, built on first admit: sized by
+        slo.choose_cores when the spec carries an SLO (the first query
+        class's knee curve calibrates the throughput model), with the
+        balanced-scheduling pieces wired in — straggler speculation in
+        the multi-job scheduler and the dynamic-k prefetcher over the
+        data plane."""
+        n_workers = self.spec.n_workers
+        decision = slo_worker_decision(self.spec, self.plat, qc.plan)
+        if decision is not None:
+            n_workers = decision.cores
+            self.scale_decision = (f"{decision.cores} cores: "
+                                   f"{decision.reason}")
+        prefetcher = (build_prefetcher(n_workers)
+                      if prefetch_enabled(
+                          self.spec, self.datastore is not None) else None)
+        pool = ServicePool(
+            n_workers, self.plat,
+            cfg=sch.MultiJobConfig(
+                speculative=resolve_speculation(self.spec),
+                straggler_factor=self.spec.straggler_factor),
+            prefetcher=prefetcher)
+        if self.datastore is not None and self.balanced:
+            # a node turning degraded/down re-ranks every job's queue
+            self.datastore.on_state_change = \
+                lambda node: pool.sched.request_rerank()
+        return pool
 
     # -- execution closures (shared per query class) -------------------------
     def _class_run_batch(self, qc: QueryClass):
@@ -756,4 +803,11 @@ class PlatformService:
         if pool is not None:
             out["fused_dispatches"] = pool.sched.fused_dispatches
             out["pending_tasks"] = pool.pending_tasks()
+            out["speculative_launches"] = pool.sched.speculative_launches
+            out["speculation_wins"] = pool.sched.speculation_wins
+            out["reranks"] = pool.sched.reranks
+            if pool.prefetcher is not None:
+                out.update(pool.prefetcher.stats())
+        if self.scale_decision is not None:
+            out["scale_decision"] = self.scale_decision
         return out

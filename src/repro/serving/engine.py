@@ -10,13 +10,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import ModelConfig
 from repro.models.model import Model
 from repro.serving.kvcache import grow_caches
 

@@ -1,7 +1,6 @@
 """Kneepoint algorithm tests (thesis Fig 2/3 behaviour) + properties."""
 
 import numpy as np
-import pytest
 
 from tests._hypothesis_compat import given, settings, st
 

@@ -2,7 +2,6 @@
 stealing, straggler behaviour, job- vs task-level recovery."""
 
 import numpy as np
-import pytest
 
 from tests._hypothesis_compat import given, settings, st
 

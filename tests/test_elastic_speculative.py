@@ -1,7 +1,5 @@
 """Elastic worker-pool controller + speculative-execution option."""
 
-import numpy as np
-import pytest
 
 from repro.core.scheduler import (SchedulerConfig, SimParams, SimWorker,
                                   Task, simulate_job)

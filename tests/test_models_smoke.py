@@ -2,7 +2,6 @@
 forward/train step + prefill + decode on CPU; asserts output shapes and
 no NaNs.  (Full configs are exercised allocation-free by the dry-run.)"""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,7 @@ extrapolation, hardware terms, and the analytic traffic model."""
 
 import pytest
 
-from repro.config import SHAPES, SINGLE_POD_MESH, MULTI_POD_MESH, get_config
+from repro.config import SHAPES, SINGLE_POD_MESH, get_config
 from repro.config.base import TrainConfig
 from repro.roofline import (CellCost, collective_bytes, extrapolate,
                             hw, model_flops_per_step, roofline)

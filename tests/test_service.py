@@ -561,5 +561,6 @@ def test_datanode_latency_uses_inflight_snapshot():
     node.store[0] = np.zeros(1024, np.float32)
     node.inflight = 40                         # racing counter, ignored
     _, calm = node.fetch(0, inflight=1)
-    _, contended = node.fetch(0, inflight=11)
-    assert contended > calm * 3                # model saw the snapshot
+    _, contended = node.fetch(0, inflight=16)
+    # 16 inflight vs parallelism 4 ⇒ 4x modelled queueing vs calm
+    assert contended > calm * 2.5              # model saw the snapshot

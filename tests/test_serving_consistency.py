@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import ARCH_IDS, ShapeConfig
+from repro.config import ARCH_IDS
 from repro.models import build_model
 from repro.serving import grow_caches
 from tests.conftest import reduced

@@ -5,7 +5,6 @@ divisibility fallback, and collective equivalence under shard_map)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config import get_config

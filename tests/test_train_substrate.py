@@ -1,7 +1,6 @@
 """Optimizer, microbatching, compression, checkpoint, end-to-end training
 loss-goes-down, and serving-engine tests (reduced configs, CPU)."""
 
-import dataclasses
 import os
 
 import jax
@@ -10,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
-from repro.config import RunConfig, ShapeConfig, SINGLE_POD_MESH, TrainConfig
+from repro.config import RunConfig, ShapeConfig, TrainConfig
 from repro.config.base import MeshConfig
 from repro.data import PipelineConfig, SubsamplingBatchPipeline, lm_token_corpus
 from repro.models import build_model
@@ -18,7 +17,6 @@ from repro.optim import adamw
 from repro.parallel import compression
 from repro.serving import ServingEngine
 from repro.train import (
-    TrainState,
     accumulate_gradients,
     init_state,
     make_train_step,
