@@ -1,0 +1,209 @@
+"""Error-bounded approximate query benchmark (ISSUE 5, DESIGN.md §10).
+
+Two sections, both published via ``STRUCTURED`` for BENCH_platform.json
+and the run.py regression gates:
+
+* **frontier** — EAGLET + both Netflix workloads on the simulated
+  backend (virtual-time completion order, so the stop point is
+  reproducible): one pilot run with an unreachable epsilon measures the
+  full-data simultaneous-band half-width ``h_N`` and the exact full-run
+  answer, then epsilon targets at multiples of ``h_N`` trace the
+  accuracy-vs-tasks frontier.  The gate multiple (2.5×, i.e. a stop
+  around N/6 tasks by the 1/√k law) must cut executed tasks ≥2× while
+  the full-run answer lies inside the reported confidence band.
+* **capacity** — a threaded service burst: one error-bounded job among
+  full peers.  The early stop must cancel tasks, and the burst must
+  execute strictly fewer tasks and device dispatches than the same
+  burst run exact — the freed workers demonstrably serve the peers
+  (their results stay bit-identical to the all-exact burst).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import subsample as ss
+from repro.core.estimator import EstimateSnapshot
+from repro.data.synthetic import (EagletSpec, NetflixSpec, eaglet_dataset,
+                                  netflix_dataset)
+from repro.platform import (
+    MomentsSpec,
+    Platform,
+    PlatformService,
+    PlatformSpec,
+)
+
+STRUCTURED: Dict[str, dict] = {}
+
+# the gated epsilon multiple: eps = GATE_MULT × h_N stops around
+# N/GATE_MULT² tasks (half-width ∝ 1/√k), comfortably past the 2× gate
+EPS_MULTS = (1.5, 2.5, 4.0)
+GATE_MULT = 2.5
+# an epsilon no run can reach: the pilot never stops, so it returns the
+# exact full answer AND the full-data band half-width h_N
+PILOT_EPS = 1e-12
+
+
+def _coverage(full: np.ndarray, ci: Dict[str, np.ndarray]) -> bool:
+    """Componentwise band coverage — the estimator's own NaN-masked
+    rule, so the gate can never diverge from what the engine reports."""
+    return EstimateSnapshot(**ci).contains(full)
+
+
+_ANSWER_KEY = {"alod": "alod", "monthly_mean": "monthly_mean",
+               "moments": "mean"}
+
+
+def _answer_of(result: dict, statistic: str) -> np.ndarray:
+    return np.asarray(result[_ANSWER_KEY[statistic]])
+
+
+# -- section 1: accuracy-vs-tasks frontier (virtual time) --------------------
+
+
+def _frontier_workload(rows: List[Row], name: str, workload, samples,
+                       months, knee: float, *,
+                       smoke: bool) -> Optional[dict]:
+    spec = PlatformSpec(platform="BTS", n_workers=2, backend="simulated",
+                        knee_bytes=knee, seed=0, min_tasks=8)
+
+    def run(eps: float):
+        return Platform(dataclasses.replace(spec, epsilon=eps)).run(
+            samples, months, workload)
+
+    pilot = run(PILOT_EPS)                  # never stops: exact + h_N
+    full_answer = _answer_of(pilot.result, workload.statistic)
+    h_n = pilot.final_ci["half_width"]
+    n_tasks = pilot.n_tasks
+    out = {"n_tasks": n_tasks, "h_full": h_n, "points": []}
+    mults = (GATE_MULT,) if smoke else EPS_MULTS
+    for mult in mults:
+        eps = mult * h_n
+        rep = run(eps)
+        answer = _answer_of(rep.result, workload.statistic)
+        point = {
+            "eps_mult": mult, "epsilon": eps,
+            "tasks_executed": rep.tasks_executed,
+            "tasks_cancelled": rep.tasks_cancelled,
+            "task_ratio": n_tasks / max(rep.tasks_executed, 1),
+            "stopped": rep.stop_reason is not None,
+            "half_width": rep.final_ci["half_width"],
+            "covered": _coverage(full_answer, rep.final_ci),
+            "max_abs_err": float(np.nanmax(np.abs(
+                np.asarray(answer, np.float64)
+                - np.asarray(full_answer, np.float64)))),
+        }
+        out["points"].append(point)
+        if mult == GATE_MULT:
+            out["gate"] = point
+        rows.append((f"approx.frontier.{name}.eps{mult}x",
+                     point["task_ratio"],
+                     f"{rep.tasks_executed}of{n_tasks}_tasks_"
+                     f"covered={point['covered']}"))
+    return out
+
+
+def _frontier_section(rows: List[Row], smoke: bool) -> None:
+    n_fam = 64 if smoke else 96
+    n_mov = 64 if smoke else 96
+    eag_s, eag_m = eaglet_dataset(EagletSpec(n_families=n_fam,
+                                             mean_markers=256,
+                                             heavy_tail=False))
+    nfx_s, nfx_m = netflix_dataset(NetflixSpec(n_movies=n_mov,
+                                               mean_ratings=512))
+    mean_eag = np.mean([a.nbytes for a in eag_s.values()])
+    mean_nfx = np.mean([a.nbytes for a in nfx_s.values()])
+    frontier = {}
+    frontier["eaglet"] = _frontier_workload(
+        rows, "eaglet", ss.EAGLET, eag_s, eag_m, 2 * mean_eag, smoke=smoke)
+    frontier["netflix_low"] = _frontier_workload(
+        rows, "netflix_low", ss.NETFLIX_LOW, nfx_s, nfx_m, 2 * mean_nfx,
+        smoke=smoke)
+    if not smoke:
+        frontier["netflix_high"] = _frontier_workload(
+            rows, "netflix_high", ss.NETFLIX_HIGH, nfx_s, nfx_m,
+            2 * mean_nfx, smoke=smoke)
+    STRUCTURED["frontier"] = frontier
+
+
+# -- section 2: cancelled capacity serves peer jobs (threaded service) -------
+
+WL = MomentsSpec(draws=4, draw_size=16)
+SAMPLE_LEN = 64
+N_SAMPLES = 256
+KNEE = 2 * SAMPLE_LEN * 4                  # 2 samples/task → 128 tasks
+
+
+def _burst(epsilon: Optional[float]):
+    """One burst: job 0 error-bounded (or exact when epsilon=None),
+    3 exact peers, all submitted together on a 2-worker resident pool."""
+    rng = np.random.default_rng(0)
+    samples = {i: rng.standard_normal(SAMPLE_LEN).astype(np.float32)
+               for i in range(N_SAMPLES)}
+    months = {i: np.zeros(SAMPLE_LEN, np.int32) for i in range(N_SAMPLES)}
+    spec = PlatformSpec(platform="BTS", n_workers=2, knee_bytes=KNEE,
+                        seed=0, max_wave=8)
+    with PlatformService(spec) as svc:
+        handle = svc.register_dataset(samples, months, name="bench-approx")
+        svc.submit(handle, WL, seed=99).result(timeout=300)   # class build
+        base = svc.stats()["device_dispatches"]
+        t0 = time.perf_counter()
+        eps_ticket = svc.submit(handle, WL, seed=0, epsilon=epsilon,
+                                min_tasks=8)
+        peers = [svc.submit(handle, WL, seed=s) for s in (1, 2, 3)]
+        results = {t.seed: t.result(timeout=300)
+                   for t in [eps_ticket] + peers}
+        makespan = time.perf_counter() - t0
+        dispatches = svc.stats()["device_dispatches"] - base
+    return {
+        "eps_executed": eps_ticket.tasks_executed,
+        "eps_cancelled": eps_ticket.tasks_cancelled,
+        "stop_reason": eps_ticket.stop_reason,
+        "final_ci": eps_ticket.final_ci,
+        "tasks_executed_total": sum(
+            t.tasks_executed for t in [eps_ticket] + peers),
+        "dispatches": dispatches,
+        "makespan_s": makespan,
+        "results": results,
+    }
+
+
+def _capacity_section(rows: List[Row]) -> None:
+    exact = _burst(epsilon=None)
+    approx = _burst(epsilon=0.6)
+    peers_identical = all(
+        all(np.array_equal(approx["results"][s][k], exact["results"][s][k])
+            for k in ("mean", "var", "count"))
+        for s in (1, 2, 3))
+    STRUCTURED["capacity"] = {
+        "eps_executed": approx["eps_executed"],
+        "eps_cancelled": approx["eps_cancelled"],
+        "with_eps": {"tasks_executed_total": approx["tasks_executed_total"],
+                     "dispatches": approx["dispatches"],
+                     "makespan_s": approx["makespan_s"]},
+        "all_exact": {"tasks_executed_total": exact["tasks_executed_total"],
+                      "dispatches": exact["dispatches"],
+                      "makespan_s": exact["makespan_s"]},
+        "peers_bit_identical": peers_identical,
+    }
+    rows.append(("approx.capacity.eps_job",
+                 approx["eps_executed"],
+                 f"{approx['eps_cancelled']}_tasks_cancelled"))
+    rows.append(("approx.capacity.burst_dispatches",
+                 approx["dispatches"],
+                 f"vs_{exact['dispatches']}_all_exact"))
+    rows.append(("approx.capacity.burst_makespan",
+                 approx["makespan_s"] * 1e6,
+                 f"vs_{exact['makespan_s'] * 1e6:.0f}us_all_exact"))
+
+
+def run(smoke: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    _frontier_section(rows, smoke)
+    _capacity_section(rows)
+    return rows

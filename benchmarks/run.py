@@ -12,6 +12,7 @@ tracked across PRs.  Figure map:
   Fig 14/15  bench_hetero           heterogeneity + virtualization
   Fig 16     bench_reduce_sim       reduce-stage model
   (kernels)  bench_kernels          Pallas/oracle microbenchmarks
+  (§10)      bench_approx           error-bounded early-stop frontier
 
 ``--smoke`` runs the fast subset (platform_overhead + kernels, scaled
 down) for CI; the harness FAILS (exit 2) when the wave engine's
@@ -42,6 +43,11 @@ SERVICE_P95_TOLERANCE = 1.2
 # beat FIFO placement by at least this makespan factor, bit-identically
 # (ISSUE 4 acceptance criterion; measured headroom ~3x)
 MIN_BALANCE_RATIO = 2.0
+# an error-bounded query at the gated epsilon must execute at least this
+# many times fewer tasks than the full run, AND the full-run answer must
+# lie inside the reported confidence band (ISSUE 5 acceptance criterion;
+# measured headroom ~3-3.6x)
+MIN_APPROX_TASK_RATIO = 2.0
 # --compare: metrics may regress by at most this fraction vs the
 # committed baseline, else exit 2.  Byte metrics additionally get a
 # small absolute slack (near-zero baselines like the ~128 B repeat
@@ -51,7 +57,14 @@ MIN_BALANCE_RATIO = 2.0
 COMPARE_TOLERANCE = 0.10
 COMPARE_BYTES_ABS_SLACK = 512.0
 COMPARE_COUNT_ABS_SLACK = 1.0
-SMOKE_MODULES = ("platform_overhead", "kernels", "service", "balance")
+# approx stop points ride the CI trajectory, whose exact settlement index
+# moves a task or two with measured per-task costs — wider slack than
+# plain dispatch counts, still far below a real early-stop regression
+# (which jumps to the full task count)
+COMPARE_APPROX_TOLERANCE = 0.30
+COMPARE_APPROX_ABS_SLACK = 4.0
+SMOKE_MODULES = ("platform_overhead", "kernels", "service", "balance",
+                 "approx")
 
 
 def _check_wave_regression(structured: dict) -> list:
@@ -111,6 +124,53 @@ def _check_service_regression(structured: dict) -> list:
     return failures
 
 
+def _check_approx_regression(structured: dict) -> list:
+    """ISSUE 5 gates over bench_approx's structured results: at the
+    gated epsilon the early stop must cut executed tasks ≥2× with the
+    full-run answer inside the reported confidence band, and the burst's
+    cancelled capacity must observably serve the peer jobs (fewer total
+    tasks + dispatches, peers bit-identical)."""
+    failures = []
+    for wl, res in structured.get("frontier", {}).items():
+        gate = res.get("gate")
+        if not gate:
+            continue
+        if not gate["stopped"]:
+            failures.append(
+                f"approx {wl}: early stop never fired at the gated "
+                f"epsilon {gate['epsilon']:.4g}")
+        if gate["task_ratio"] < MIN_APPROX_TASK_RATIO:
+            failures.append(
+                f"approx {wl}: only {gate['task_ratio']:.2f}x fewer "
+                f"tasks at gated epsilon (need ≥ "
+                f"{MIN_APPROX_TASK_RATIO}x; "
+                f"{gate['tasks_executed']}/{res['n_tasks']} executed)")
+        if not gate["covered"]:
+            failures.append(
+                f"approx {wl}: full-run answer escaped the reported "
+                f"confidence band (half_width {gate['half_width']:.4g}, "
+                f"max_abs_err {gate['max_abs_err']:.4g})")
+    cap = structured.get("capacity")
+    if cap:
+        if cap["eps_cancelled"] <= 0:
+            failures.append("approx capacity: error-bounded burst job "
+                            "cancelled no tasks")
+        we, ae = cap["with_eps"], cap["all_exact"]
+        if we["tasks_executed_total"] >= ae["tasks_executed_total"]:
+            failures.append(
+                f"approx capacity: burst with early stop executed no "
+                f"fewer tasks ({we['tasks_executed_total']} >= "
+                f"{ae['tasks_executed_total']})")
+        if we["dispatches"] >= ae["dispatches"]:
+            failures.append(
+                f"approx capacity: burst with early stop used no fewer "
+                f"dispatches ({we['dispatches']} >= {ae['dispatches']})")
+        if not cap["peers_bit_identical"]:
+            failures.append("approx capacity: peer jobs' results "
+                            "diverged from the all-exact burst")
+    return failures
+
+
 def _check_balance_regression(structured: dict) -> list:
     """ISSUE 4 gates over bench_balance's structured results."""
     failures = []
@@ -158,6 +218,16 @@ def _comparable_metrics(report: dict) -> dict:
     if svc.get("concurrent"):
         out["service.burst_dispatches"] = (
             float(svc["concurrent"]["service"]["dispatches"]), "lower")
+    approx = mods.get("approx", {}).get("structured", {})
+    for wl, res in approx.get("frontier", {}).items():
+        gate = res.get("gate")
+        if gate:
+            out[f"approx.{wl}.tasks_executed"] = (
+                float(gate["tasks_executed"]), "lower")
+    if approx.get("capacity"):
+        out["approx.burst_tasks_executed"] = (
+            float(approx["capacity"]["with_eps"]["tasks_executed_total"]),
+            "lower")
     # bench_balance's makespan ratio is wall-clock-derived, so it is
     # gated by its own MIN_BALANCE_RATIO check, not compared here
     return out
@@ -181,9 +251,14 @@ def _compare_to_baseline(report: dict, baseline_path: str) -> list:
         b, _ = base[key]
         delta = (c - b) / b if b else 0.0
         if direction == "lower":
-            slack = (COMPARE_BYTES_ABS_SLACK if "bytes" in key
-                     else COMPARE_COUNT_ABS_SLACK)
-            bad = c > max(b * (1.0 + COMPARE_TOLERANCE), b + slack)
+            if key.startswith("approx."):
+                tol, slack = (COMPARE_APPROX_TOLERANCE,
+                              COMPARE_APPROX_ABS_SLACK)
+            elif "bytes" in key:
+                tol, slack = COMPARE_TOLERANCE, COMPARE_BYTES_ABS_SLACK
+            else:
+                tol, slack = COMPARE_TOLERANCE, COMPARE_COUNT_ABS_SLACK
+            bad = c > max(b * (1.0 + tol), b + slack)
         else:
             bad = c < b * (1.0 - COMPARE_TOLERANCE)
         status = "❌ regressed" if bad else "✅ ok"
@@ -209,6 +284,7 @@ _STRUCTURED_CHECKS = {
     "service": _check_service_regression,
     "balance": _check_balance_regression,
     "platform_overhead": _check_wave_regression,
+    "approx": _check_approx_regression,
 }
 
 
@@ -238,10 +314,11 @@ def main(argv=None) -> int:
     if args.json is None:
         args.json = "" if args.only else "BENCH_platform.json"
 
-    from benchmarks import (bench_balance, bench_elasticity, bench_hetero,
-                            bench_jobsize, bench_kernels, bench_kneepoint,
-                            bench_platform_overhead, bench_reduce_sim,
-                            bench_service, bench_task_sizing)
+    from benchmarks import (bench_approx, bench_balance, bench_elasticity,
+                            bench_hetero, bench_jobsize, bench_kernels,
+                            bench_kneepoint, bench_platform_overhead,
+                            bench_reduce_sim, bench_service,
+                            bench_task_sizing)
     modules = [
         # balance first: its FIFO-vs-balanced wall-clock ratio is the
         # noise-sensitive gate, and the JAX modules leave threadpools
@@ -256,6 +333,7 @@ def main(argv=None) -> int:
         ("reduce_sim", bench_reduce_sim),
         ("kernels", bench_kernels),
         ("service", bench_service),
+        ("approx", bench_approx),
     ]
 
     report = {"schema": 1, "smoke": args.smoke, "modules": {}}
@@ -288,13 +366,16 @@ def main(argv=None) -> int:
             failures.extend(check(structured))
         report["modules"][name] = entry
 
+    # compare BEFORE writing: when --compare and --json point at the
+    # same path (a local `--smoke --compare BENCH_platform.json`), the
+    # write must not clobber the baseline into a vacuous self-compare
+    if args.compare:
+        failures.extend(_compare_to_baseline(report, args.compare))
+
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(report, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
-
-    if args.compare:
-        failures.extend(_compare_to_baseline(report, args.compare))
 
     for msg in failures:
         print(f"# FAIL: {msg}", file=sys.stderr)

@@ -1,0 +1,81 @@
+"""Interactive error-bounded Netflix query (DESIGN.md §10).
+
+A confidence query is submitted through the persistent service with an
+``epsilon`` target instead of a fixed task count.  While the job runs,
+:meth:`JobTicket.partial` streams the online-aggregation snapshot —
+watch the confidence band narrow as tasks land — and the platform
+terminates the job early (cancelling its unexecuted tasks) the moment
+the band's half-width falls under the target.  The same query is then
+run exact for comparison: the early answer's band must cover it.
+
+Run:  python examples/approx_query.py   (or PYTHONPATH=src python ...)
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import subsample as ss
+from repro.core.estimator import EstimateSnapshot
+from repro.data.synthetic import NetflixSpec, netflix_dataset
+from repro.platform import PlatformService, PlatformSpec
+
+EPSILON = 0.5            # stars of rating: the caller's error tolerance
+CONFIDENCE = 0.95
+
+
+def main() -> None:
+    samples, months = netflix_dataset(NetflixSpec(n_movies=192,
+                                                  mean_ratings=512))
+    mean_bytes = float(np.mean([a.nbytes for a in samples.values()]))
+    spec = PlatformSpec(platform="BTS", n_workers=2,
+                        knee_bytes=2 * mean_bytes,   # ~2 movies/task
+                        seed=0)
+
+    with PlatformService(spec) as svc:
+        handle = svc.register_dataset(samples, months, name="netflix")
+
+        print(f"error-bounded query: monthly means to ±{EPSILON} stars "
+              f"at {CONFIDENCE:.0%} (simultaneous band)")
+        ticket = svc.submit(handle, ss.NETFLIX_LOW, epsilon=EPSILON,
+                            confidence=CONFIDENCE, min_tasks=8)
+
+        last = -1
+        while not ticket.wait(timeout=0.02):
+            p = ticket.partial()
+            if p is None or p["value"] is None or p["tasks_in"] == last:
+                continue
+            last = p["tasks_in"]
+            half = p["half_width"]
+            bar = "#" * min(60, int(2.0 / max(half, 1e-9)))
+            print(f"  tasks {p['tasks_in']:4d}/{p['n_tasks']}  "
+                  f"mean≈{float(np.nanmean(p['value'])):.3f}  "
+                  f"±{half:7.3f}  |{bar}")
+        approx = ticket.result(timeout=600)
+
+        print(f"\nstopped: {ticket.stop_reason}")
+        print(f"  executed {ticket.tasks_executed} tasks, cancelled "
+              f"{ticket.tasks_cancelled} "
+              f"({ticket.n_tasks} planned) in {ticket.latency:.2f}s")
+
+        exact_ticket = svc.submit(handle, ss.NETFLIX_LOW, epsilon=None)
+        exact = exact_ticket.result(timeout=600)
+        print(f"exact run: {exact_ticket.tasks_executed} tasks in "
+              f"{exact_ticket.latency:.2f}s")
+
+    ci = ticket.final_ci
+    band = EstimateSnapshot(**ci)
+    full = np.asarray(exact["monthly_mean"], np.float64)
+    err = float(np.nanmax(np.abs(
+        full - np.asarray(approx["monthly_mean"], np.float64))))
+    print(f"\nexact answer inside the reported band: {band.contains(full)} "
+          f"(max abs err {err:.3f} stars, band ±{ci['half_width']:.3f})")
+    print(f"task reduction: "
+          f"{exact_ticket.tasks_executed / max(ticket.tasks_executed, 1):.1f}×")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,14 @@ from repro.core.datastore import (  # noqa: F401
     ReplicatedDataStore,
     ReplicationPolicy,
 )
+from repro.core.estimator import (  # noqa: F401
+    EstimateSnapshot,
+    ReplayStopper,
+    StoppingController,
+    SubsampleEstimator,
+    normal_ppf,
+    z_for_confidence,
+)
 from repro.core.prefetch import PrefetchPipeline  # noqa: F401
 from repro.core.recovery import (  # noqa: F401
     JobRunner,

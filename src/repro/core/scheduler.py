@@ -147,6 +147,7 @@ class TwoPhaseScheduler:
         self._completed: set = set()
         self.speculative_launches = 0
         self.speculation_wins = 0          # clone finished before original
+        self.cancelled_tasks = 0           # dropped by cancel_pending()
         self.results: List[TaskResult] = []
         self.depth_trace: List[int] = []   # dynamic-k after each completion
         self.avg_exec = None
@@ -349,6 +350,21 @@ class TwoPhaseScheduler:
                and key_fn(self.backlog[0]) == key):
             out.append(self.backlog.popleft())
         return out
+
+    def cancel_pending(self) -> List[Task]:
+        """DRAINING (DESIGN.md §10): drop every not-yet-started task —
+        the backlog and all per-worker queues — leaving in-flight tasks
+        to settle normally, after which :meth:`done` turns true.  The
+        early-termination analogue of :meth:`MultiJobScheduler.
+        cancel_job`; idempotent, returns what was dropped so the driver
+        can account ``tasks_cancelled``."""
+        dropped: List[Task] = list(self.backlog)
+        self.backlog.clear()
+        for q in self.queues:
+            dropped.extend(q)
+            q.clear()
+        self.cancelled_tasks += len(dropped)
+        return dropped
 
     def on_worker_failure(self, worker: int) -> List[Task]:
         """Job-level: raise (driver restarts whole job).  Task-level:
@@ -796,22 +812,33 @@ def simulate_job(
     max_restarts: int = 3,
     locality_score: Optional[Callable[[Task], float]] = None,
     bucket_key: Optional[Callable[[Task], Any]] = None,
+    stopper=None,
 ) -> SimOutcome:
     """Run the two-phase scheduler under virtual time.  Prefetch overlap:
     a task's data fetch for queued work proceeds while the previous task
     executes, so effective per-task cost is max(exec, fetch) once the
-    queue is warm (exactly the paper's pipeline in §3.5)."""
+    queue is warm (exactly the paper's pipeline in §3.5).  ``stopper`` —
+    a :class:`~repro.core.estimator.StoppingController` — is fed each
+    completion and, once converged, the backlog is cancelled (DRAINING):
+    the early-termination decision lands at the same completed-task
+    count a real cluster would reach it at."""
     restarts = 0
     alive = list(workers)
     while True:
         try:
             return _simulate_once(tasks, alive, params, cfg, restarts,
                                   locality_score=locality_score,
-                                  bucket_key=bucket_key)
+                                  bucket_key=bucket_key, stopper=stopper)
         except JobFailure as e:
             restarts += 1
             if restarts > max_restarts:
                 raise
+            if stopper is not None:
+                # job-level restart discards and re-executes every
+                # completion; a latched (or partially fed) stopper would
+                # drain the retry at its first settlement with an answer
+                # far thinner than its recorded convergence claims
+                stopper.reset()
             # the dead node does not rejoin; the job restarts on survivors
             survivors = [w for w in alive
                          if w.worker_id != e.failed_worker]
@@ -820,7 +847,8 @@ def simulate_job(
 
 
 def _simulate_once(tasks, workers, params, cfg, restarts, *,
-                   locality_score=None, bucket_key=None) -> SimOutcome:
+                   locality_score=None, bucket_key=None,
+                   stopper=None) -> SimOutcome:
     """Worker identity inside the scheduler is positional (0..n-1); the
     SimWorker.worker_id is only used for reporting (survivor restarts
     renumber positions but keep ids)."""
@@ -910,6 +938,13 @@ def _simulate_once(tasks, workers, params, cfg, restarts, *,
         sched.on_task_complete(res)
         if not is_dup:
             makespan = max(makespan, now)
+            if stopper is not None:
+                # wave-settlement stopping check (DESIGN.md §10): on
+                # convergence the ready work is dropped; the in-flight
+                # "done" events already on the heap settle normally
+                stopper.on_complete(task.task_id)
+                if stopper.should_stop():
+                    sched.cancel_pending()
         dispatch(widx, now)
     return SimOutcome(makespan=makespan, results=sched.results,
                       per_worker_busy=busy, restarts=restarts,
@@ -945,7 +980,7 @@ class ThreadedRunner:
                  max_batch: int = 1,
                  batch_cap: Optional[Callable[[Task], int]] = None,
                  locality_score: Optional[Callable[[Task], float]] = None,
-                 prefetcher=None):
+                 prefetcher=None, stopper=None):
         self.n_workers = n_workers
         self.run_task = run_task
         self.fetch = fetch
@@ -960,6 +995,10 @@ class ThreadedRunner:
         # balanced scheduling loop, DESIGN.md §9)
         self.locality_score = locality_score
         self.prefetcher = prefetcher       # core.prefetch.TaskPrefetcher
+        # error-bounded early termination (DESIGN.md §10): a
+        # core.estimator.StoppingController consulted at every wave
+        # settlement; on convergence the scheduler drains
+        self.stopper = stopper
         # called with the live scheduler before workers start (drivers
         # wire data-plane state changes to request_rerank here)
         self.on_scheduler: Optional[Callable[[TwoPhaseScheduler],
@@ -1045,6 +1084,13 @@ class ThreadedRunner:
                                          exec_each, value)
                         results.append(res)
                         sched.on_task_complete(res)
+                    # wave-settlement stopping check (DESIGN.md §10):
+                    # once the estimate has converged, drop the ready
+                    # work; peers' in-flight waves settle and done()
+                    # flips when the last one lands
+                    if (self.stopper is not None
+                            and self.stopper.should_stop()):
+                        sched.cancel_pending()
 
         sched.initial_assignments()
         threads = [threading.Thread(target=worker_loop, args=(w,))

@@ -55,6 +55,7 @@ from repro.platform.service import (  # noqa: F401
     CancelledError,
     DatasetHandle,
     JobTicket,
+    PartialEstimate,
     PlatformService,
     QueryClass,
 )

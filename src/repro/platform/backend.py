@@ -62,6 +62,7 @@ class PlatformBackend(Protocol):
             locality_score: Optional[Callable[[sch.Task], float]] = None,
             prefetcher=None,
             on_scheduler: Optional[Callable[[Any], None]] = None,
+            stopper=None,
             ) -> BackendOutcome:
         """Execute ``tasks``; stream each task's partial through ``emit``.
         ``shape_key(task)`` identifies the task's compiled block shape
@@ -76,7 +77,10 @@ class PlatformBackend(Protocol):
         ``prefetcher`` is a :class:`~repro.core.prefetch.TaskPrefetcher`
         overlapping upcoming fetches with execution; ``on_scheduler`` is
         called with the live scheduler so the driver can wire data-plane
-        state changes to :meth:`request_rerank`."""
+        state changes to :meth:`request_rerank`; ``stopper`` is a
+        :class:`~repro.core.estimator.StoppingController` consulted at
+        wave settlement — on convergence the scheduler cancels its
+        pending tasks and the job drains (DESIGN.md §10)."""
         ...
 
 
@@ -93,7 +97,8 @@ class ThreadedBackend:
 
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
             shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
-            locality_score=None, prefetcher=None, on_scheduler=None):
+            locality_score=None, prefetcher=None, on_scheduler=None,
+            stopper=None):
         assert compute is not None, "threaded backend needs real compute"
 
         def run_task(task: sch.Task):
@@ -133,7 +138,8 @@ class ThreadedBackend:
                                     max_batch=max_wave,
                                     batch_cap=wave_cap,
                                     locality_score=locality_score,
-                                    prefetcher=prefetcher)
+                                    prefetcher=prefetcher,
+                                    stopper=stopper)
         runner.on_scheduler = on_scheduler
         t0 = time.perf_counter()
         time.sleep(plat.startup_time)
@@ -176,6 +182,12 @@ class PoolJob:
     on_start: Optional[Callable[[float], None]] = None
     # predicted best-replica fetch seconds (balanced scheduling §9)
     locality_score: Optional[Callable[[sch.Task], float]] = None
+    # error-bounded early termination (DESIGN.md §10): a
+    # core.estimator.StoppingController checked at wave settlement; on
+    # convergence the job's queued tasks are cancelled (DRAINING) and
+    # on_cancelled reports how many were dropped
+    stopper: Optional[Any] = None
+    on_cancelled: Optional[Callable[[int], None]] = None
 
 
 class ServicePool:
@@ -400,6 +412,7 @@ class ServicePool:
                 self.prefetcher.observe_exec(exec_each)
             executed = {pj.job_id for pj, _ in pool_batch}
             finished: List[PoolJob] = []
+            drained: set = set()
             with self._cond:
                 for job, _task in batch:
                     sample = (exec_each if job.job_id in executed else None)
@@ -410,7 +423,33 @@ class ServicePool:
                         self._started_jobs.discard(job.job_id)
                         if pj is not None:
                             finished.append(pj)
+                # wave-settlement stopping check (DESIGN.md §10): a job
+                # whose estimate converged DRAINs — its queued tasks are
+                # dropped through the multi-job cancel plumbing, and the
+                # freed capacity goes to peer jobs on the very next
+                # claim; its in-flight tasks (possibly fused into peers'
+                # waves on other workers) settle normally
+                for pj in {p.job_id: p for p, _ in pool_batch}.values():
+                    jid = pj.job_id
+                    if (pj.stopper is None or jid not in self.sched.jobs
+                            or not pj.stopper.should_stop()):
+                        continue
+                    dropped = self.sched.cancel_job(jid)
+                    if dropped:
+                        drained.add(jid)
+                        if pj.on_cancelled is not None:
+                            pj.on_cancelled(len(dropped))
+                    if jid not in self.sched.jobs and jid in self._jobs:
+                        # nothing left in flight anywhere: the drain
+                        # itself completed the job
+                        self._jobs.pop(jid, None)
+                        self._started_jobs.discard(jid)
+                        finished.append(pj)
                 self._cond.notify_all()
+            if self.prefetcher is not None and drained:
+                # evict the drained jobs' prefetched-but-never-claimed
+                # fetches (their tasks will never execute)
+                self.prefetcher.discard(lambda k: k[0] in drained)
             if self.prefetcher is not None and finished:
                 # evict finished jobs' never-claimed prefetches (a peer
                 # can ensure() a task inline before our peeked prefetch
@@ -515,7 +554,8 @@ class SimulatedBackend:
 
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
             shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
-            locality_score=None, prefetcher=None, on_scheduler=None):
+            locality_score=None, prefetcher=None, on_scheduler=None,
+            stopper=None):
         # calibration measures per-task costs; waves don't apply, and the
         # §3.5 fetch/execute overlap is already modeled in virtual time
         # (queue-warm cost = max(exec, fetch)), so the real prefetcher is
@@ -551,7 +591,7 @@ class SimulatedBackend:
         out = sch.simulate_job(tasks, self.workers, params, cfg,
                                max_restarts=self.max_restarts,
                                locality_score=locality_score,
-                               bucket_key=shape_key)
+                               bucket_key=shape_key, stopper=stopper)
         return BackendOutcome(
             makespan=out.makespan, results=out.results,
             queue_depths=list(out.queue_depths),

@@ -41,6 +41,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import estimator as est_mod
 from repro.core import kneepoint as kp
 from repro.core import scheduler as sch
 from repro.core import slo as slo_mod
@@ -114,6 +115,14 @@ class PlatformSpec:
     # measured kneepoint for the throughput model; silently keeps
     # n_workers otherwise)
     slo_seconds: Optional[float] = None
+    # error-bounded approximate queries (DESIGN.md §10): with an epsilon
+    # target the job streams a running estimate + CI and DRAINs (cancels
+    # its unexecuted tasks) once the CI half-width at `confidence` falls
+    # under epsilon, after at least `min_tasks` tasks.  epsilon=None
+    # keeps every path bit-identical to a full run.
+    epsilon: Optional[float] = None
+    confidence: float = 0.95
+    min_tasks: int = 8
     knee_bytes: Optional[float] = None     # skip the offline phase if set
     kneepoint_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
     seed: int = 0
@@ -160,6 +169,11 @@ class JobReport:
     scale_decision: Optional[str] = None    # slo.choose_cores reasoning
     n_workers_used: int = 0
     prefetch_stats: Optional[Dict[str, float]] = None
+    # error-bounded approximate execution (DESIGN.md §10)
+    tasks_executed: int = 0
+    tasks_cancelled: int = 0
+    stop_reason: Optional[str] = None       # None ⇒ ran to completion
+    final_ci: Optional[Dict[str, Any]] = None   # EstimateSnapshot dict
 
 
 def make_tasks(sample_sizes: Sequence[int], sizing: str,
@@ -657,10 +671,52 @@ class Platform:
                                     workload, engine)
         phases["compile"] = time.perf_counter() - t0
 
-        # phase 4 — execute; partials stream into the reduce tree
+        # phase 4 — execute; partials stream into the reduce tree.  With
+        # an epsilon target (DESIGN.md §10) an estimator rides along: the
+        # threaded combiner feeds it leaf by leaf, the simulator replays
+        # the calibration partials in virtual completion order; either
+        # way the backend's scheduler DRAINs once the CI converges.
         want_values = (spec.backend == "threaded" or spec.compute_values)
-        tree = StreamingReduceTree(len(tasks)) if want_values else None
-        emit = tree.offer if tree is not None else (lambda tid, v: None)
+        statistic = getattr(workload, "statistic", "custom")
+        approx = spec.epsilon is not None
+        # validated before the tree exists: a constructor ValueError
+        # below would leak the tree's combiner thread
+        est_mod.validate_error_target(spec.epsilon, spec.confidence)
+        if approx and not want_values:
+            raise ValueError(
+                "epsilon needs computed partials to estimate from; "
+                "simulated specs must keep compute_values=True")
+        tree, stopper, sim_partials = None, None, None
+        emit: Callable[[int, Any], None] = lambda tid, v: None
+        if want_values:
+            if approx:
+                estimator = est_mod.SubsampleEstimator(
+                    statistic, spec.confidence)
+                if spec.backend == "threaded":
+                    tree = StreamingReduceTree(len(tasks),
+                                               estimator=estimator)
+                    emit = tree.offer
+                    stopper = est_mod.StoppingController(
+                        estimator, spec.epsilon, min_tasks=spec.min_tasks)
+                else:
+                    # calibration computes EVERY partial (that is how the
+                    # simulator measures costs); capture them so the
+                    # replay stopper observes only virtually-completed
+                    # tasks and the final reduce covers only those
+                    sim_partials = {}
+                    tree = StreamingReduceTree(len(tasks))
+
+                    def emit(tid, v, _offer=tree.offer,
+                             _cap=sim_partials):
+                        _cap[tid] = v
+                        _offer(tid, v)
+
+                    stopper = est_mod.ReplayStopper(
+                        estimator, spec.epsilon, partials=sim_partials,
+                        min_tasks=spec.min_tasks)
+            else:
+                tree = StreamingReduceTree(len(tasks))
+                emit = tree.offer
         t0 = time.perf_counter()
         try:
             outcome = self._backend(n_eff).run(
@@ -671,16 +727,32 @@ class Platform:
                 wave_cap=(ctx.cap if wave_on else None),
                 locality_score=locality_score,
                 prefetcher=prefetcher,
-                on_scheduler=on_scheduler)
+                on_scheduler=on_scheduler,
+                stopper=stopper)
             phases["execute"] = time.perf_counter() - t0
 
-            # phase 5 — drain the reduce tree, finalize the statistic
+            # phase 5 — drain the reduce tree, finalize the statistic.
+            # An early-stopped job finalizes over its executed subset in
+            # the same fixed tree order (deterministic for the set).
             t0 = time.perf_counter()
             result, reduce_info = None, None
             if tree is not None:
-                root = tree.result(timeout=600.0)
-                result = finalize_stats(
-                    root, getattr(workload, "statistic", "custom"))
+                if stopper is not None and stopper.stopped:
+                    executed = {r.task_id for r in outcome.results}
+                    if sim_partials is not None:
+                        root = StreamingReduceTree.combine_subset(
+                            len(tasks),
+                            {tid: sim_partials[tid]
+                             for tid in sorted(executed)})
+                        tree.close()       # full-leaf stream, unused now
+                    else:
+                        tree.wait_leaves(len(executed), timeout=600.0)
+                        root = tree.snapshot()
+                        tree.close()
+                    result = finalize_stats(root, statistic)
+                else:
+                    root = tree.result(timeout=600.0)
+                    result = finalize_stats(root, statistic)
                 reduce_info = tree.stats()
             phases["reduce"] = time.perf_counter() - t0
         except BaseException:
@@ -705,7 +777,8 @@ class Platform:
                             result, reduce_info, dispatch=dispatch,
                             scale_decision=decision, n_workers_used=n_eff,
                             prefetch_stats=(stats if prefetcher is not None
-                                            else None))
+                                            else None),
+                            stopper=stopper)
 
     # -- virtual-time scale-out over a cost model ----------------------------
     def run_scaleout(self, sample_sizes: Sequence[int], *,
@@ -767,12 +840,15 @@ class Platform:
                 scale_decision: Optional[slo_mod.ScaleDecision] = None,
                 n_workers_used: Optional[int] = None,
                 prefetch_stats: Optional[Dict[str, float]] = None,
+                stopper=None,
                 ) -> JobReport:
         backend_name = backend_name or self.spec.backend
         dispatch = dispatch or pc.DispatchStats()
         execs = sorted(r.exec_time for r in outcome.results)
         median = execs[len(execs) // 2] if execs else 0.0
         stragglers = sum(1 for e in execs if median and e > 2.0 * median)
+        executed = len({r.task_id for r in outcome.results})
+        snap = stopper.snapshot() if stopper is not None else None
         return JobReport(
             platform=plat.name,
             n_tasks=len(tasks),
@@ -807,4 +883,9 @@ class Platform:
                             if scale_decision is not None else None),
             n_workers_used=(n_workers_used if n_workers_used is not None
                             else self._n_exec_workers()),
-            prefetch_stats=prefetch_stats)
+            prefetch_stats=prefetch_stats,
+            tasks_executed=executed,
+            tasks_cancelled=max(len(tasks) - executed, 0),
+            stop_reason=(stopper.stop_reason if stopper is not None
+                         else None),
+            final_ci=(snap.as_dict() if snap is not None else None))

@@ -33,13 +33,21 @@ class StreamingReduceTree:
     ``offer(leaf, partial)`` may be called from any thread (map workers,
     the simulator's calibration pass); combining happens on a dedicated
     thread.  ``result()`` closes the stream and returns the root.
+
+    ``estimator`` — when given — is a
+    :class:`~repro.core.estimator.SubsampleEstimator` fed each leaf as
+    it is combined in; :meth:`estimate` then surfaces the running
+    online-aggregation snapshot (value + CI + tasks_in) without
+    disturbing the bit-identical full-reduce path (DESIGN.md §10).
     """
 
     def __init__(self, n_leaves: int,
-                 combine: Callable[[Any, Any], Any] = tree_add):
+                 combine: Callable[[Any, Any], Any] = tree_add,
+                 estimator: Optional[Any] = None):
         assert n_leaves >= 1
         self.n_leaves = n_leaves
         self._combine = combine
+        self._estimator = estimator
         # level sizes: n, ceil(n/2), ... 1
         self._sizes: List[int] = [n_leaves]
         while self._sizes[-1] > 1:
@@ -53,6 +61,7 @@ class StreamingReduceTree:
         self.max_backlog = 0               # combiner behind (reduce-bound)
         self._error: Optional[BaseException] = None
         self._node_lock = threading.Lock()   # snapshot() vs combiner
+        self._leaf_cond = threading.Condition()  # wait_leaves() wakeups
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -75,13 +84,23 @@ class StreamingReduceTree:
                 if leaf in seen:               # speculative re-execution dup
                     continue
                 seen.add(leaf)
+                if self._estimator is not None:
+                    self._estimator.observe(leaf, partial)
                 with self._node_lock:
                     self._insert(0, leaf, partial)
                     self.leaves_seen = len(seen)
+                with self._leaf_cond:
+                    self._leaf_cond.notify_all()
         except BaseException as e:             # noqa: BLE001
             # a combine raised: park the error so result() re-raises it
             # on the caller's thread instead of hanging forever
             self._error = e
+        finally:
+            # wake wait_leaves() callers on ANY exit (error, early close,
+            # normal completion) so they time out against live state
+            # instead of sleeping through a dead combiner
+            with self._leaf_cond:
+                self._leaf_cond.notify_all()
 
     def _insert(self, level: int, idx: int, value: Any) -> None:
         """Place a completed node and bubble combines up the fixed tree."""
@@ -136,6 +155,62 @@ class StreamingReduceTree:
             for node in resident[1:]:
                 acc = self._combine(acc, node)
             return acc
+
+    def estimate(self):
+        """Online-aggregation snapshot from the attached estimator — an
+        :class:`~repro.core.estimator.EstimateSnapshot` (value, ci_low,
+        ci_high, tasks_in) or ``None`` (no estimator attached, or no
+        usable leaf yet).  Unlike :meth:`snapshot`, this is deterministic
+        for a given set of arrived leaves by construction (the estimator
+        reduces in sorted-task-id order)."""
+        if self._estimator is None:
+            return None
+        return self._estimator.estimate()
+
+    def wait_leaves(self, n: int, timeout: Optional[float] = None) -> None:
+        """Block until at least ``n`` distinct leaves have been combined
+        in (the DRAINING path: an early-stopped job knows exactly how
+        many tasks executed and finalizes from :meth:`snapshot` once they
+        all landed).  Raises the combiner's parked error, or
+        :class:`TimeoutError` if the stream dies or stalls."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        with self._leaf_cond:
+            while self.leaves_seen < n:
+                if self._error is not None:
+                    raise self._error
+                if not self._thread.is_alive():
+                    raise TimeoutError(
+                        f"reduce stream closed at {self.leaves_seen}/"
+                        f"{n} awaited leaves")
+                wait = (None if deadline is None
+                        else deadline - time.monotonic())
+                if wait is not None and wait <= 0:
+                    raise TimeoutError(
+                        f"only {self.leaves_seen}/{n} leaves after "
+                        f"{timeout}s")
+                self._leaf_cond.wait(0.05 if wait is None
+                                     else min(wait, 0.05))
+        if self._error is not None:
+            raise self._error
+
+    @classmethod
+    def combine_subset(cls, n_leaves: int, items: Dict[int, Any],
+                       combine: Callable[[Any, Any], Any] = tree_add,
+                       timeout: float = 60.0) -> Optional[Any]:
+        """Deterministically combine a *subset* of a job's leaves in the
+        same fixed (level, index) order the live tree uses — the final
+        reduce of an early-terminated job.  Result depends only on the
+        set of leaf ids, not on dict order."""
+        tree = cls(n_leaves, combine)
+        try:
+            for leaf, partial in items.items():
+                tree.offer(leaf, partial)
+            if items:
+                tree.wait_leaves(len(items), timeout=timeout)
+            return tree.snapshot()
+        finally:
+            tree.close()
 
     def close(self) -> None:
         """Abort the combiner (error/cancellation paths only)."""

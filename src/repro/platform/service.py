@@ -46,11 +46,13 @@ import dataclasses
 import itertools
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import estimator as est_mod
 from repro.core import scheduler as sch
 from repro.platform import compute as pc
 from repro.platform.backend import PoolJob, ServicePool
@@ -78,6 +80,11 @@ DONE = "done"
 FAILED = "failed"
 REJECTED = "rejected"      # shed by admission control
 CANCELLED = "cancelled"
+
+
+# "caller did not pass epsilon/confidence" marker — distinct from an
+# explicit epsilon=None, which forces a full (exact) run
+_UNSET = object()
 
 
 class AdmissionError(RuntimeError):
@@ -224,6 +231,41 @@ class DatasetHandle:
             return qc, True
 
 
+class PartialEstimate(dict):
+    """What :meth:`JobTicket.partial` returns: the online-aggregation
+    snapshot — ``value``/``ci_low``/``ci_high``/``half_width`` (the CI
+    fields are ``None`` for statistics without an estimator plug-in),
+    ``tasks_in``/``n_tasks`` progress, ``confidence``, and ``estimate``,
+    the running finalized statistic dict (the old bare-value shape).
+
+    Deprecation shim: reading a legacy statistic key directly (e.g.
+    ``p["mean"]``) still works but warns — it now lives under
+    ``p["estimate"]["mean"]``."""
+
+    @classmethod
+    def build(cls, stat: Dict[str, Any], snap, *, n_tasks: int,
+              confidence: float) -> "PartialEstimate":
+        out = cls(estimate=stat, n_tasks=n_tasks, confidence=confidence,
+                  value=None, ci_low=None, ci_high=None,
+                  half_width=None, tasks_in=0)
+        if snap is not None:
+            out.update(value=snap.value, ci_low=snap.ci_low,
+                       ci_high=snap.ci_high, half_width=snap.half_width,
+                       tasks_in=snap.tasks_in,
+                       confidence=snap.confidence)
+        return out
+
+    def __missing__(self, key):
+        est = dict.get(self, "estimate") or {}
+        if key in est:
+            warnings.warn(
+                f"JobTicket.partial() now returns an estimate snapshot; "
+                f"read partial()['estimate'][{key!r}] instead of "
+                f"partial()[{key!r}]", DeprecationWarning, stacklevel=2)
+            return est[key]
+        raise KeyError(key)
+
+
 class JobTicket:
     """Handle on one submitted job: poll (:meth:`status`/:meth:`progress`),
     stream (:meth:`partial`), or block (:meth:`result`)."""
@@ -247,6 +289,16 @@ class JobTicket:
         self.device_dispatches = 0               # waves this job rode in
         self.tree: Optional[StreamingReduceTree] = None
         self.cancel_requested = False      # set before pool.cancel fires
+        # error-bounded approximate execution (DESIGN.md §10)
+        self.epsilon: Optional[float] = None
+        self.confidence: float = 0.95
+        self.min_tasks: int = 8
+        self.estimator: Optional[est_mod.SubsampleEstimator] = None
+        self.stopper: Optional[est_mod.StoppingController] = None
+        self.tasks_executed: int = 0       # set at completion
+        self.tasks_cancelled: int = 0      # dropped by the DRAINING flip
+        self.stop_reason: Optional[str] = None
+        self.final_ci: Optional[Dict[str, Any]] = None
         self._result: Optional[dict] = None
         self._done = threading.Event()
 
@@ -270,23 +322,34 @@ class JobTicket:
         return self.started_at - self.submitted_at
 
     # -- stream -------------------------------------------------------------
-    def partial(self) -> Optional[dict]:
-        """Early estimate from the partials combined *so far* (finalized
-        like the real statistic); ``None`` before the first leaf.  The
-        final :meth:`result` remains bit-deterministic — this view is
-        only as stable as arrival order."""
+    def partial(self) -> Optional[PartialEstimate]:
+        """The online-aggregation snapshot so far: a
+        :class:`PartialEstimate` carrying the estimate *value with its
+        confidence interval* (``value``/``ci_low``/``ci_high``/
+        ``half_width``/``tasks_in``) plus ``estimate`` — the running
+        finalized statistic dict; ``None`` before the first leaf.  The
+        final :meth:`result` remains bit-deterministic — the running
+        ``estimate`` view is only as stable as arrival order, while the
+        CI fields depend only on the *set* of tasks in."""
         # the DONE guard matters: a job failed by close() mid-run may
         # still have had _result assigned by the racing completion path —
         # a non-DONE ticket must keep reporting a snapshot, not a final
         if self.status == DONE and self._result is not None:
-            return self._result
+            snap = None
+            if self.final_ci is not None:
+                snap = est_mod.EstimateSnapshot(**self.final_ci)
+            return PartialEstimate.build(self._result, snap,
+                                         n_tasks=self.n_tasks,
+                                         confidence=self.confidence)
         tree = self.tree       # alias: _finish(DONE) nulls it concurrently
         if tree is None:
             return None
         root = tree.snapshot()
         if root is None:
             return None
-        return finalize_stats(root, self.statistic)
+        return PartialEstimate.build(
+            finalize_stats(root, self.statistic), tree.estimate(),
+            n_tasks=self.n_tasks, confidence=self.confidence)
 
     def _close_tree(self) -> None:
         """Abort the reduce tree if still attached.  The aliased read is
@@ -323,6 +386,10 @@ class JobTicket:
             "queue_wait_s": self.queue_wait,
             "bytes_uploaded": self.bytes_uploaded,
             "device_dispatches": self.device_dispatches,
+            "epsilon": self.epsilon,
+            "tasks_executed": self.tasks_executed,
+            "tasks_cancelled": self.tasks_cancelled,
+            "stop_reason": self.stop_reason,
         }
 
 
@@ -433,20 +500,43 @@ class PlatformService:
     def submit(self, handle: DatasetHandle, workload, *,
                seed: Optional[int] = None, priority: int = 0,
                deadline: Optional[float] = None,
-               weight: float = 1.0) -> JobTicket:
+               weight: float = 1.0,
+               epsilon: Any = _UNSET,
+               confidence: Optional[float] = None,
+               min_tasks: Optional[int] = None) -> JobTicket:
         """Enqueue one subsample query; returns immediately with a
         :class:`JobTicket`.  ``deadline`` is seconds from now (drives the
         scheduler's deadline boost and SLO-aware admission);
         ``priority`` tiers are strict (higher first), fairness is
         deficit-round-robin within a tier, ``weight`` scales a job's DRR
-        share."""
+        share.
+
+        ``epsilon``/``confidence``/``min_tasks`` make the query
+        *error-bounded* (DESIGN.md §10): the job streams a running
+        estimate with a confidence interval and is DRAINed early —
+        queued tasks cancelled, the freed workers immediately serving
+        peer jobs — once the CI half-width falls under ``epsilon``.
+        They default to the service spec's values, so a spec with an
+        epsilon gives every interactive tenant early-stop by default;
+        pass ``epsilon=None`` explicitly to force a full run."""
         if self._closed:
             raise RuntimeError("service is closed")
         seed = self.spec.seed if seed is None else seed
+        eff_epsilon = self.spec.epsilon if epsilon is _UNSET else epsilon
+        eff_conf = (self.spec.confidence if confidence is None
+                    else confidence)
+        eff_min = self.spec.min_tasks if min_tasks is None else min_tasks
+        # fail fast: a ValueError later (inside _admit, after the
+        # admission slot was reserved) would leak the slot and hang the
+        # ticket — and kill a pool worker on the queued-drain path
+        est_mod.validate_error_target(eff_epsilon, eff_conf)
         engine = pc.resolve_engine(workload.statistic, self.spec.engine)
 
         if self.spec.backend == "simulated":
-            return self._submit_simulated(handle, workload, seed)
+            return self._submit_simulated(handle, workload, seed,
+                                          epsilon=eff_epsilon,
+                                          confidence=eff_conf,
+                                          min_tasks=eff_min)
 
         wave_on = wave_enabled(self.spec, engine, workload)
         qc, built_now = handle.query_class(
@@ -455,6 +545,8 @@ class PlatformService:
             wave_on=wave_on)
         ticket = JobTicket(next(self._job_seq), handle, workload,
                            len(qc.plan.tasks), workload.statistic, seed)
+        ticket.epsilon, ticket.confidence = eff_epsilon, eff_conf
+        ticket.min_tasks = eff_min
         if built_now:
             with self._stats_lock:
                 self.dispatch.bytes_uploaded += qc.arena_bytes
@@ -540,7 +632,22 @@ class PlatformService:
                 self._finish(ticket, REJECTED, reason="service closed")
             return
         ticket.admitted_at = time.monotonic()
-        ticket.tree = StreamingReduceTree(len(qc.plan.tasks))
+        # every job carries an estimator (partial() streams value + CI
+        # for free); only an epsilon target adds the stopping rule
+        ticket.estimator = est_mod.SubsampleEstimator(ticket.statistic,
+                                                      ticket.confidence)
+        ticket.tree = StreamingReduceTree(len(qc.plan.tasks),
+                                          estimator=ticket.estimator)
+        if ticket.epsilon is not None:
+            ticket.stopper = est_mod.StoppingController(
+                ticket.estimator, ticket.epsilon,
+                min_tasks=ticket.min_tasks)
+
+        def on_cancelled(n: int) -> None:
+            # the pool's DRAINING flip dropped n queued tasks (counted
+            # under the pool lock, before the completion that finishes
+            # the job can settle — _on_job_done reads a stable value)
+            ticket.tasks_cancelled += n
 
         fetch = None
         locality_score = None
@@ -564,7 +671,8 @@ class PlatformService:
             fetch=fetch, fuse_key=qc.fuse_key, cap=qc.cap,
             priority=priority, deadline=abs_deadline, weight=weight,
             on_start=lambda at: setattr(ticket, "started_at", at),
-            locality_score=locality_score)
+            locality_score=locality_score,
+            stopper=ticket.stopper, on_cancelled=on_cancelled)
         pool.submit(job)
         if ticket.cancel_requested:
             # cancel() raced the hand-off: it saw RUNNING but the job was
@@ -648,11 +756,30 @@ class PlatformService:
         if ticket.status != RUNNING:       # cancelled while in flight
             return
         try:
-            root = ticket.tree.result(timeout=600.0)
+            tree = ticket.tree
+            if ticket.tasks_cancelled:
+                # DRAINed early: finalize over the executed subset in
+                # fixed-tree order (deterministic for the set) — the
+                # full-leaf result() would wait for leaves that were
+                # cancelled and will never arrive
+                executed = ticket.n_tasks - ticket.tasks_cancelled
+                tree.wait_leaves(executed, timeout=600.0)
+                root = tree.snapshot()
+                tree.close()
+            else:
+                root = tree.result(timeout=600.0)
             ticket._result = finalize_stats(root, ticket.statistic)
         except BaseException as e:         # noqa: BLE001
             self._on_job_error(ticket, e)
             return
+        ticket.tasks_executed = ticket.n_tasks - ticket.tasks_cancelled
+        stopper, estimator = ticket.stopper, ticket.estimator
+        if stopper is not None:
+            ticket.stop_reason = stopper.stop_reason
+            snap = stopper.snapshot()
+        else:
+            snap = estimator.estimate() if estimator is not None else None
+        ticket.final_ci = snap.as_dict() if snap is not None else None
         self._finish(ticket, DONE)
 
     def _on_job_error(self, ticket: JobTicket, error: BaseException) -> None:
@@ -690,7 +817,13 @@ class PlatformService:
                 else:
                     self.jobs_rejected += 1
         if status == DONE:
-            ticket.tree = None             # free the node arrays
+            # free the node arrays and the estimator's per-task theta
+            # dict — partial()/final_ci never read them after DONE, and
+            # a caller-held ticket would otherwise pin ~n_tasks×D floats
+            # for its lifetime
+            ticket.tree = None
+            ticket.estimator = None
+            ticket.stopper = None
         ticket._done.set()
         self._drain_waiting()
         return True
@@ -741,7 +874,9 @@ class PlatformService:
 
     # -- simulated-backend path ----------------------------------------------
     def _submit_simulated(self, handle: DatasetHandle, workload,
-                          seed: int) -> JobTicket:
+                          seed: int, *, epsilon: Optional[float] = None,
+                          confidence: float = 0.95,
+                          min_tasks: int = 8) -> JobTicket:
         """Virtual-time spec: run the job inline through the one-shot
         driver (a resident pool has no meaning in virtual time), reusing
         the handle's cached kneepoint so repeat queries still skip the
@@ -750,10 +885,14 @@ class PlatformService:
         _res, knee = handle.cached_knee(
             workload, engine=engine, sizing=self.plat.task_sizing,
             kneepoint_sizes=self.spec.kneepoint_sizes)
-        spec = dataclasses.replace(self.spec, seed=seed, knee_bytes=knee)
+        spec = dataclasses.replace(self.spec, seed=seed, knee_bytes=knee,
+                                   epsilon=epsilon, confidence=confidence,
+                                   min_tasks=min_tasks)
         ticket = JobTicket(next(self._job_seq), handle, workload,
                            n_tasks=0, statistic=workload.statistic,
                            seed=seed)
+        ticket.epsilon, ticket.confidence = epsilon, confidence
+        ticket.min_tasks = min_tasks
         with self._admission_lock:
             # same closed re-check + slot reservation as the threaded
             # path: a submit racing close() raises instead of running
@@ -781,6 +920,10 @@ class PlatformService:
         ticket._result = report.result
         ticket.device_dispatches = report.device_dispatches
         ticket.bytes_uploaded = report.bytes_uploaded
+        ticket.tasks_executed = report.tasks_executed
+        ticket.tasks_cancelled = report.tasks_cancelled
+        ticket.stop_reason = report.stop_reason
+        ticket.final_ci = report.final_ci
         self._finish(ticket, DONE)
         return ticket
 

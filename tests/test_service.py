@@ -412,7 +412,11 @@ def test_partial_estimates_stream_while_running():
             done, total = ticket.progress()
             if p is not None and done < total:
                 saw_partial = True
-                assert set(p) == {"mean", "var", "count"}
+                # new snapshot shape (DESIGN.md §10): CI fields + the
+                # finalized running statistic under "estimate"
+                assert {"value", "ci_low", "ci_high", "tasks_in",
+                        "estimate"} <= set(p)
+                assert set(p["estimate"]) == {"mean", "var", "count"}
                 break
             if ticket.status == "done":
                 break
