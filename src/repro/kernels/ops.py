@@ -83,3 +83,18 @@ def subsample_stats(data, indices, *, rows_per_step=8,
     return _sg.subsample_stats_wave(data, indices,
                                     rows_per_step=rows_per_step,
                                     interpret=interpret)
+
+
+def subsample_stats_shard(data, indices, *, rows_per_step=8,
+                          interpret=not ON_TPU):
+    """Per-shard wave kernel entry: the body of :func:`subsample_stats`
+    WITHOUT the jit wrapper, for use inside ``shard_map`` (the sharded
+    wave dispatch jits the whole per-device pipeline once, and a nested
+    jit boundary would only add a trace level).  Pallas has no SPMD
+    replication rule, so the caller must wrap with ``check_rep=False``;
+    the math is identical to the single-device kernel — per-task
+    accumulation never crosses the batch axis, which is what makes the
+    sharded wave bit-identical to the unsharded one."""
+    return _sg.subsample_stats_wave(data, indices,
+                                    rows_per_step=rows_per_step,
+                                    interpret=interpret)

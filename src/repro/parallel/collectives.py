@@ -69,6 +69,28 @@ def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     return lax.psum(dequantize_int8(q, s, x.shape), axis_name)
 
 
+def gather_shards(x: jax.Array):
+    """Host-side deterministic gather of a 1-D-sharded array's shards.
+
+    The sharded wave path (platform DESIGN.md §11) combines per-device
+    partials on the HOST, in mesh-axis order, because on the emulated
+    CPU mesh a device-side ``all_gather`` serializes through a cross-
+    thread rendezvous (observed 5 s participant stalls) for data that is
+    already host-resident.  Shards are ordered by their global offset
+    along axis 0 — the mesh ``"wave"`` axis — so the result is identical
+    to ``np.asarray(x)`` but makes the deterministic combine order
+    explicit (and keeps working if a future jax changes the default
+    assembly path).
+    """
+    import numpy as np
+
+    shards = getattr(x, "addressable_shards", None)
+    if not shards:
+        return np.asarray(x)
+    shards = sorted(shards, key=lambda s: s.index[0].start or 0)
+    return np.concatenate([np.asarray(s.data) for s in shards], axis=0)
+
+
 def reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
     """psum followed by keeping this device's shard (ZeRO grad shard)."""
     n = _axis_size(axis_name)

@@ -189,6 +189,15 @@ def init_params(rng: jax.Array, tree, default_dtype) -> Any:
     return jax.tree.unflatten(treedef, out)
 
 
+def wave_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis sharding over the platform's 1-D ``"wave"`` mesh
+    (``launch.mesh.make_wave_mesh``): the arena's task axis — and each
+    wave's ``[n_dev, width]`` slot/seed matrices — split one contiguous
+    block per device.  Kept here so the wave path shares the same
+    NamedSharding vocabulary as the model-zoo rules above."""
+    return NamedSharding(mesh, P("wave"))
+
+
 _HINT_MESH: list = [None]
 
 

@@ -128,6 +128,13 @@ class ThreadedBackend:
                     time.sleep(plat.dfs_tax * took)
                 if plat.monitoring:
                     time.sleep(0.20 * took)
+                # one partial per claimed task, in claim order — the
+                # sharded wave path pads per-device lanes, and a
+                # mis-stripped pad would otherwise emit a wrong partial
+                # under a real task id via this zip
+                assert len(values) == len(batch), \
+                    f"wave returned {len(values)} partials for " \
+                    f"{len(batch)} tasks"
                 for task, value in zip(batch, values):
                     emit(task.task_id, value)
                 return values

@@ -28,6 +28,15 @@ seeds in with ``jax.vmap`` / a batched Pallas grid so one compiled kernel
 serves the whole wave.  Per-task accumulation order is independent of the
 wave partition, so wave and per-task execution are bit-identical for a
 fixed seed.
+
+Sharded wave execution (DESIGN.md §11): :class:`ShardedBlockArena`
+partitions each shape bucket over a 1-D ``"wave"`` device mesh
+(interleaved slot→(device, local-slot) placement, :func:`shard_slot`);
+:func:`run_map_wave_sharded` splits a wave into per-device lanes and runs
+the SAME per-task math under ``shard_map``, one dispatch for all devices.
+Because per-task accumulation never crosses the batch axis and partials
+re-enter the reduce tree keyed by task id, sharded results are
+bit-identical to single-device execution at every mesh size.
 """
 
 from __future__ import annotations
@@ -253,6 +262,106 @@ class BlockArena:
 
 
 # ---------------------------------------------------------------------------
+# Sharded block arena (multi-device wave execution, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def shard_slot(index: int, n_dev: int) -> Tuple[int, int]:
+    """Interleaved slot→(device, local-slot) indirection: logical bucket
+    index ``i`` lives on device ``i % n_dev`` at local slot ``i // n_dev``.
+
+    Interleaving — rather than contiguous blocks per device — is what
+    bounds per-device wave occupancy: the scheduler claims waves as
+    contiguous FIFO runs of the bucket, and any contiguous run of ``w``
+    logical slots touches each device at most ``ceil(w / n_dev)`` times,
+    so the per-device kernel width pinned at warmup can never be
+    exceeded by a tail or mid-job wave."""
+    return index % n_dev, index // n_dev
+
+
+def unshard_slot(device: int, local: int, n_dev: int) -> int:
+    """Inverse of :func:`shard_slot` (exact round-trip for any
+    ``0 <= device < n_dev``)."""
+    return local * n_dev + device
+
+
+def shard_wave_width(cap: int, n_dev: int) -> int:
+    """Per-device wave width for a bucket whose (mesh-invariant) claim
+    cap is ``cap``: the lanes one device contributes to a full wave,
+    rounded to a power of two so exactly one kernel shape compiles."""
+    return pow2_ceil(-(-max(cap, 1) // max(n_dev, 1)))
+
+
+class ShardedBlockArena(BlockArena):
+    """A :class:`BlockArena` partitioned over a 1-D ``"wave"`` device
+    mesh: each shape bucket's rows are permuted so device ``d`` holds the
+    contiguous physical rows ``[d * per_dev, (d+1) * per_dev)`` — exactly
+    its interleaved logical slots — and uploaded once with
+    ``NamedSharding(mesh, P("wave"))``.  Tail rows (bucket size not a
+    multiple of the mesh) wrap-copy earlier blocks so every physical row
+    is valid data; their outputs are never read.
+
+    The base-class ``_slot`` keeps the *physical* row (so ``slots()``
+    and any single-device consumer still work); ``_dev_slot`` adds the
+    (device, local-slot) view the sharded dispatch uses."""
+
+    def __init__(self, mesh):
+        super().__init__()
+        self.mesh = mesh
+        self.n_dev = int(mesh.shape["wave"])
+        self._dev_slot: Dict[int, Tuple[Any, int, int]] = {}
+        self._per_dev: Dict[Any, int] = {}
+
+    @classmethod
+    def pack(cls, tasks: Sequence, shape_key: Callable, build: Callable,
+             mesh=None, with_months: bool = True) -> "ShardedBlockArena":
+        assert mesh is not None, "ShardedBlockArena.pack needs a mesh"
+        import jax
+
+        from repro.parallel.sharding import wave_sharding
+
+        arena = cls(mesh)
+        n_dev = arena.n_dev
+        sharding = wave_sharding(mesh)
+        buckets: Dict[Any, List] = {}
+        for task in tasks:
+            buckets.setdefault(shape_key(task), []).append(task)
+        for key, group in buckets.items():
+            pairs = [build(t) for t in group]
+            b = len(group)
+            per_dev = -(-b // n_dev)
+            # physical order: device-major over the interleaved placement
+            order = [unshard_slot(dev, local, n_dev) % b
+                     for dev in range(n_dev) for local in range(per_dev)]
+            data = np.stack([pairs[i][0] for i in order])
+            arena._data[key] = jax.device_put(data, sharding)
+            arena.nbytes += float(data.nbytes)
+            if with_months:
+                months = np.stack([pairs[i][1] for i in order])
+                arena._months[key] = jax.device_put(months, sharding)
+                arena.nbytes += float(months.nbytes)
+            else:
+                arena._months[key] = None
+            arena._per_dev[key] = per_dev
+            for i, task in enumerate(group):
+                dev, local = shard_slot(i, n_dev)
+                arena._slot[task.task_id] = (key, dev * per_dev + local)
+                arena._dev_slot[task.task_id] = (key, dev, local)
+        return arena
+
+    def dev_slots(self, tasks: Sequence) -> Tuple[Any, np.ndarray, np.ndarray]:
+        """(key, devices, local rows) for a same-shape wave."""
+        keys = {self._dev_slot[t.task_id][0] for t in tasks}
+        assert len(keys) == 1, f"wave spans shape buckets: {keys}"
+        key = keys.pop()
+        devs = np.asarray([self._dev_slot[t.task_id][1] for t in tasks],
+                          np.int32)
+        rows = np.asarray([self._dev_slot[t.task_id][2] for t in tasks],
+                          np.int32)
+        return key, devs, rows
+
+
+# ---------------------------------------------------------------------------
 # Engines
 # ---------------------------------------------------------------------------
 
@@ -347,7 +456,74 @@ def _jnp_wave_jit():
     return wave
 
 
+def _moments_wave_sharded_jit(mesh):
+    """Sharded moments wave: the per-device body is the SAME pipeline as
+    :func:`_moments_wave_jit` (local-slot gather → vmapped PRNG index
+    derivation → stats-only Pallas kernel), wrapped in ``shard_map`` so
+    one dispatch drives every device.  ``check_rep=False`` because Pallas
+    has no SPMD replication rule; outputs are per-device anyway."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import ops
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def wave(arena, rows, seeds, *, n):
+        def per_device(a, r, s):
+            # a: [per_dev, count, len]; r, s: [1, width]
+            data = jnp.take(a, r[0], axis=0)
+            ns = data.shape[1]
+            idx = jax.vmap(
+                lambda k: jax.random.randint(jax.random.PRNGKey(k), (n,),
+                                             0, ns, dtype=jnp.int32))(s[0])
+            return ops.subsample_stats_shard(data, idx)[None]
+        return shard_map(per_device, mesh=mesh,
+                         in_specs=(P("wave"), P("wave"), P("wave")),
+                         out_specs=P("wave"), check_rep=False)(
+            arena, rows, seeds)
+
+    return wave
+
+
+def _jnp_wave_sharded_jit(mesh):
+    """Sharded jnp wave: per-device ``jax.vmap`` over the jitted
+    ``subsample.map_task`` with in-graph PRNG keys — the same math as
+    :func:`_jnp_wave_jit`, per device, under one ``shard_map``."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import subsample as ss
+
+    @functools.partial(jax.jit, static_argnames=("draws", "draw_size",
+                                                 "grid", "statistic"))
+    def wave(arena, arena_mo, rows, seeds, *, draws, draw_size, grid,
+             statistic):
+        def per_device(a, m, r, s):
+            data = jnp.take(a, r[0], axis=0)
+            months = jnp.take(m, r[0], axis=0)
+            keys = jax.vmap(jax.random.PRNGKey)(s[0])
+            out = jax.vmap(lambda d, mo, k: ss.map_task(
+                d, mo, k, draws=draws, draw_size=draw_size, grid=grid,
+                statistic=statistic))(data, months, keys)
+            return jax.tree.map(lambda x: x[None], out)
+        return shard_map(per_device, mesh=mesh,
+                         in_specs=(P("wave"),) * 4,
+                         out_specs=P("wave"), check_rep=False)(
+            arena, arena_mo, rows, seeds)
+
+    return wave
+
+
 _WAVE_FNS: Dict[str, Any] = {}
+_SHARDED_WAVE_FNS: Dict[Tuple[str, Any], Any] = {}
 
 
 def _wave_fn(kind: str):
@@ -358,6 +534,18 @@ def _wave_fn(kind: str):
         _WAVE_FNS[kind] = (_moments_wave_jit() if kind == "moments"
                            else _jnp_wave_jit())
     return _WAVE_FNS[kind]
+
+
+def _sharded_wave_fn(kind: str, mesh):
+    """Like :func:`_wave_fn` but keyed per (kind, mesh): jax ``Mesh`` is
+    hashable and equal meshes compare equal, so rebuilding the same
+    1-D wave mesh reuses the cached shard_map-wrapped jit."""
+    key = (kind, mesh)
+    if key not in _SHARDED_WAVE_FNS:
+        _SHARDED_WAVE_FNS[key] = (
+            _moments_wave_sharded_jit(mesh) if kind == "moments"
+            else _jnp_wave_sharded_jit(mesh))
+    return _SHARDED_WAVE_FNS[key]
 
 
 def _moments_wave_device(arena_data, rows, seeds, *, n_idx: int):
@@ -388,8 +576,17 @@ def run_map_wave(arena: BlockArena, tasks: Sequence, seeds: np.ndarray,
     per shape bucket so exactly ONE kernel shape compiles per bucket and
     a small tail wave can never trigger a mid-job recompile — else to the
     next power of two.
+
+    A :class:`ShardedBlockArena` routes to the multi-device dispatch —
+    same signature, bit-identical results — so the wave closures in the
+    driver, service pool and threaded backend need not know whether the
+    arena is sharded.
     """
     import jax
+
+    if isinstance(arena, ShardedBlockArena):
+        return run_map_wave_sharded(arena, tasks, seeds, workload, engine,
+                                    pad_to=pad_to)
 
     key, rows = arena.slots(tasks)
     b = len(rows)
@@ -411,6 +608,79 @@ def run_map_wave(arena: BlockArena, tasks: Sequence, seeds: np.ndarray,
         out = _jnp_wave_device(data, months, rows, seeds, workload)
         out = jax.tree.map(np.asarray, out)
         return [jax.tree.map(lambda a: a[i], out) for i in range(b)]
+    raise ValueError(f"engine {engine!r} does not support wave execution")
+
+
+def run_map_wave_sharded(arena: ShardedBlockArena, tasks: Sequence,
+                         seeds: np.ndarray, workload, engine: str,
+                         pad_to: Optional[int] = None,
+                         ) -> List[Dict[str, np.ndarray]]:
+    """Execute a wave across the arena's device mesh in one dispatch.
+
+    The wave's members are routed to their owning device's lane matrix
+    (``[n_dev, width]`` local rows + seeds, sharded over the mesh), every
+    device runs the identical per-task pipeline under ``shard_map``, and
+    the per-device partials are gathered HOST-side in mesh-axis order
+    (``parallel.collectives.gather_shards`` — a device-side all_gather
+    serializes through a rendezvous on the emulated CPU mesh) before
+    re-entering task order.  Padding lanes repeat local row 0 / the first
+    seed and their outputs are discarded, so results depend only on each
+    task's (block, seed) — bit-identical to the single-device wave.
+
+    ``width`` is the warmup-pinned :func:`shard_wave_width` of the claim
+    cap; a cross-job fused wave that lands the same slot twice can
+    overfill one device, in which case the width grows to the next power
+    of two (one extra bounded compile, never a per-wave retrace).
+    """
+    import jax
+
+    from repro.parallel import collectives as col
+    from repro.parallel.sharding import wave_sharding
+
+    key, devs, local_rows = arena.dev_slots(tasks)
+    n_dev = arena.n_dev
+    b = len(tasks)
+    seeds = np.asarray(seeds, np.int32)
+    cap = pad_to if pad_to is not None else b
+    width = shard_wave_width(cap, n_dev)
+    occupancy = np.bincount(devs, minlength=n_dev)
+    if occupancy.max() > width:
+        width = pow2_ceil(int(occupancy.max()))
+
+    rows = np.zeros((n_dev, width), np.int32)
+    lane_seeds = np.full((n_dev, width), seeds[0], np.int32)
+    fill = np.zeros(n_dev, np.int32)
+    place: List[Tuple[int, int]] = []
+    for i in range(b):
+        d = int(devs[i])
+        lane = int(fill[d])
+        fill[d] += 1
+        rows[d, lane] = local_rows[i]
+        lane_seeds[d, lane] = seeds[i]
+        place.append((d, lane))
+
+    sharding = wave_sharding(arena.mesh)
+    rows_dev = jax.device_put(rows, sharding)
+    seeds_dev = jax.device_put(lane_seeds, sharding)
+    data, months = arena.bucket(key)
+
+    if engine == "pallas":
+        n_idx = workload.draws * workload.draw_size
+        out = _sharded_wave_fn("moments", arena.mesh)(
+            data, rows_dev, seeds_dev, n=n_idx)
+        stats = np.asarray(col.gather_shards(out), np.float32)
+        picked = np.stack([stats[d, lane] for d, lane in place])
+        return _split_moments(picked, n_idx)
+    if engine == "jnp":
+        assert months is not None, "jnp waves need pack(with_months=True)"
+        out = _sharded_wave_fn("jnp", arena.mesh)(
+            data, months, rows_dev, seeds_dev, draws=workload.draws,
+            draw_size=workload.draw_size, grid=workload.grid,
+            statistic=workload.statistic)
+        host = jax.tree.map(col.gather_shards, out)   # leaves [n_dev, w, ...]
+        return [jax.tree.map(lambda a, d=d, lane=lane: np.asarray(a[d, lane]),
+                             host)
+                for d, lane in place]
     raise ValueError(f"engine {engine!r} does not support wave execution")
 
 

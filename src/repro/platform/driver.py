@@ -98,6 +98,15 @@ class PlatformSpec:
     #   same-shape ready tasks into one device dispatch (threaded backend,
     #   pallas/jnp engines; per-task fallback for numpy & custom map_fn)
     max_wave: int = 32                     # wave size cap (task count)
+    # sharded wave execution (DESIGN.md §11): partition the block arena
+    # and every wave over a 1-D "wave" mesh of this many devices (must
+    # not exceed jax.device_count(); CPU runs emulate 8 via XLA_FLAGS=
+    # --xla_force_host_platform_device_count=8).  None keeps the plain
+    # single-device arena; mesh_devices=1 routes through the sharded
+    # path on a 1-device mesh.  Results are bit-identical at any mesh
+    # size, and the scheduler's claim cap stays mesh-invariant so the
+    # epsilon early-stop executes the same task set on every mesh.
+    mesh_devices: Optional[int] = None
     # balanced dynamic scheduling (DESIGN.md §9): rank ready tasks by the
     # predicted fetch latency of their best available data-node replica
     # ("auto" engages whenever a datastore is attached; "on" requires one)
@@ -364,15 +373,29 @@ class WaveContext:
 
 
 def build_wave_context(plan: JobPlan, workload, *, n_exec: int,
-                       max_wave: int, warm_seed: int = 0) -> WaveContext:
+                       max_wave: int, warm_seed: int = 0,
+                       mesh=None) -> WaveContext:
     """Pack the plan's blocks into the device arena, pin one wave width
     per shape bucket, and warm one full-size wave per bucket so exactly
     ONE kernel shape compiles per bucket (a tail wave can never recompile
     mid-job); buckets split across workers so one worker cannot swallow
-    a bucket in a single wave while its peers idle."""
-    arena = pc.BlockArena.pack(plan.tasks, plan.task_shape,
-                               plan.build_block,
-                               with_months=(plan.engine == "jnp"))
+    a bucket in a single wave while its peers idle.
+
+    With ``mesh`` (a ``launch.mesh.make_wave_mesh`` 1-D mesh) the arena
+    is partitioned over its devices and waves dispatch sharded.  The
+    ``wave_pad`` claim caps are computed identically either way — they
+    drive the *scheduler's* wave partition, which must stay
+    mesh-invariant for the epsilon early-stop path to settle at the
+    same task counts on every mesh size; only the per-device kernel
+    width inside the sharded dispatch varies with the mesh."""
+    if mesh is not None:
+        arena: pc.BlockArena = pc.ShardedBlockArena.pack(
+            plan.tasks, plan.task_shape, plan.build_block, mesh,
+            with_months=(plan.engine == "jnp"))
+    else:
+        arena = pc.BlockArena.pack(plan.tasks, plan.task_shape,
+                                   plan.build_block,
+                                   with_months=(plan.engine == "jnp"))
     by_key: Dict[Any, List[sch.Task]] = {}
     for task in plan.tasks:
         by_key.setdefault(plan.task_shape(task), []).append(task)
@@ -428,6 +451,28 @@ def wave_enabled(spec: PlatformSpec, engine: str, workload,
     if spec.wave == "auto":
         return supported and pc.wave_profitable(workload)
     return supported
+
+
+def resolve_wave_mesh(spec: PlatformSpec, wave_on: bool):
+    """Build the 1-D wave mesh a spec asks for, or ``None``.
+
+    Like the other mode resolvers, an impossible request is an error,
+    never a silent fallback: ``mesh_devices`` without wave execution
+    would shard nothing, and asking for more devices than exist fails
+    in ``make_wave_mesh`` with the XLA_FLAGS hint."""
+    if spec.mesh_devices is None:
+        return None
+    if spec.mesh_devices < 1:
+        raise ValueError(
+            f"mesh_devices must be >= 1, got {spec.mesh_devices}")
+    if not wave_on:
+        raise ValueError(
+            "mesh_devices shards wave execution, which this spec "
+            "disables — it needs the threaded backend, a device engine "
+            "(pallas|jnp) and wave != 'off'")
+    from repro.launch.mesh import make_wave_mesh
+
+    return make_wave_mesh(spec.mesh_devices)
 
 
 def balanced_enabled(spec: PlatformSpec, has_datastore: bool) -> bool:
@@ -590,6 +635,7 @@ class Platform:
             else self._n_exec_workers()
 
         wave_on = self._wave_enabled(engine, workload)
+        mesh = resolve_wave_mesh(spec, wave_on)
         dispatch = pc.DispatchStats()
         dispatch_lock = threading.Lock()
         block_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
@@ -645,7 +691,8 @@ class Platform:
             ctx = build_wave_context(plan, workload,
                                      n_exec=n_eff,
                                      max_wave=spec.max_wave,
-                                     warm_seed=spec.seed)
+                                     warm_seed=spec.seed,
+                                     mesh=mesh)
             dispatch.bytes_uploaded += ctx.arena.nbytes
 
             def compute_wave(batch: List[sch.Task]):

@@ -201,10 +201,13 @@ class StreamingReduceTree:
         """Deterministically combine a *subset* of a job's leaves in the
         same fixed (level, index) order the live tree uses — the final
         reduce of an early-terminated job.  Result depends only on the
-        set of leaf ids, not on dict order."""
+        set of leaf ids, not on dict order: the fixed tree guarantees
+        that for any arrival order, and offering in sorted-task-id order
+        makes it manifest when the items were produced by MANY shards
+        (the sharded wave path) whose dict-insertion order is a race."""
         tree = cls(n_leaves, combine)
         try:
-            for leaf, partial in items.items():
+            for leaf, partial in sorted(items.items()):
                 tree.offer(leaf, partial)
             if items:
                 tree.wait_leaves(len(items), timeout=timeout)

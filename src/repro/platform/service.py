@@ -68,6 +68,7 @@ from repro.platform.driver import (
     prefetch_enabled,
     resolve_platform_config,
     resolve_speculation,
+    resolve_wave_mesh,
     slo_worker_decision,
     wave_enabled,
 )
@@ -192,8 +193,11 @@ class DatasetHandle:
                     wave_on: bool) -> Tuple[QueryClass, bool]:
         """Plan + pack for one query class; ``(qc, built_now)`` where
         ``built_now`` marks the submit that paid the one-time cost."""
+        # mesh_devices joins the key: a sharded and an unsharded arena
+        # for the same workload are different device-resident state (and
+        # ServicePool claims must route to the arena their jobs warmed)
         key = (workload_key(workload), engine, sizing, n_exec, wave_on,
-               spec.max_wave)
+               spec.max_wave, spec.mesh_devices)
         with self._lock:
             qc = self._classes.get(key)
             if qc is not None:
@@ -215,7 +219,8 @@ class DatasetHandle:
             if wave_on:
                 qc.wave_ctx = build_wave_context(
                     plan, workload, n_exec=n_exec, max_wave=spec.max_wave,
-                    warm_seed=spec.seed)
+                    warm_seed=spec.seed,
+                    mesh=resolve_wave_mesh(spec, wave_on))
                 qc.arena_bytes = qc.wave_ctx.arena.nbytes
             elif engine in ("jnp", "pallas"):
                 # per-task warmup: compile one kernel per distinct shape
@@ -539,6 +544,10 @@ class PlatformService:
                                           min_tasks=eff_min)
 
         wave_on = wave_enabled(self.spec, engine, workload)
+        # validated on EVERY submit (not just the arena-building one):
+        # mesh_devices without wave execution must error, never silently
+        # run an unsharded per-task job
+        resolve_wave_mesh(self.spec, wave_on)
         qc, built_now = handle.query_class(
             workload, spec=self.spec, engine=engine,
             sizing=self.plat.task_sizing, n_exec=self.spec.n_workers,
