@@ -14,6 +14,7 @@ tracked across PRs.  Figure map:
   (kernels)  bench_kernels          Pallas/oracle microbenchmarks
   (§10)      bench_approx           error-bounded early-stop frontier
   (§11)      bench_sharded          multi-device sharded wave scaling
+  (§12)      bench_faults           seeded fault injection + recovery
 
 ``--smoke`` runs the fast subset (platform_overhead + kernels, scaled
 down) for CI; the harness FAILS (exit 2) when the wave engine's
@@ -72,8 +73,15 @@ COMPARE_APPROX_ABS_SLACK = 4.0
 # gated: the CI mesh emulates 8 devices on one CPU core, so lanes run
 # serially and wall time is flat — see bench_sharded's docstring.
 MIN_SHARD_RATIO = 3.0
+# fault recovery (ISSUE 7): a run with one injected worker crash + one
+# node kill must finish within this factor of the fault-free makespan.
+# Wall-clock is otherwise never gated, but bounded recovery IS the
+# acceptance criterion here — the absolute slack keeps the gate stable
+# when the fault-free denominator is a fraction of a second on CI
+MAX_FAULT_MAKESPAN_RATIO = 1.5
+FAULT_MAKESPAN_ABS_SLACK = 0.05
 SMOKE_MODULES = ("platform_overhead", "kernels", "service", "balance",
-                 "approx", "sharded")
+                 "approx", "sharded", "faults")
 
 
 def _check_wave_regression(structured: dict) -> list:
@@ -219,6 +227,60 @@ def _check_sharded_regression(structured: dict) -> list:
     return failures
 
 
+def _check_faults_regression(structured: dict) -> list:
+    """ISSUE 7 gates over bench_faults' structured results: injected
+    worker-crash + node-kill runs bit-identical on both execution paths
+    with bounded recovery makespan; checkpoint-interrupted jobs resume
+    executing ONLY the missing tasks, bit-identically; every seeded
+    chaos plan reproduces the clean result."""
+    failures = []
+    for path, res in structured.get("kill", {}).items():
+        if not res["bit_identical"]:
+            failures.append(
+                f"faults kill/{path}: result diverged from the "
+                f"fault-free run under injected worker crash + node "
+                f"kill")
+        if res["events_fired"] < res["events_planned"]:
+            failures.append(
+                f"faults kill/{path}: only {res['events_fired']} of "
+                f"{res['events_planned']} planned faults fired — the "
+                f"scenario did not exercise recovery")
+        limit = (MAX_FAULT_MAKESPAN_RATIO * res["makespan_clean_s"]
+                 + FAULT_MAKESPAN_ABS_SLACK)
+        if res["makespan_faulty_s"] > limit:
+            failures.append(
+                f"faults kill/{path}: recovery makespan "
+                f"{res['makespan_faulty_s']:.3f}s > "
+                f"{MAX_FAULT_MAKESPAN_RATIO}x fault-free "
+                f"{res['makespan_clean_s']:.3f}s (+ "
+                f"{FAULT_MAKESPAN_ABS_SLACK}s slack)")
+    for path, res in structured.get("resume", {}).items():
+        if not res["interrupted"]:
+            failures.append(
+                f"faults resume/{path}: injected checkpoint crash did "
+                f"not interrupt the job")
+        if res["restored"] <= 0:
+            failures.append(
+                f"faults resume/{path}: checkpoint restored no "
+                f"partials")
+        if not res["only_missing"]:
+            failures.append(
+                f"faults resume/{path}: resume did not execute exactly "
+                f"the missing tasks ({res['executed_new']} executed, "
+                f"{res['restored']} restored, {res['n_tasks']} total)")
+        if not res["bit_identical"]:
+            failures.append(
+                f"faults resume/{path}: resumed result diverged from "
+                f"the uninterrupted run")
+    chaos = structured.get("chaos")
+    if chaos and not chaos["all_bit_identical"]:
+        bad = [s for s, r in chaos["seeds"].items()
+               if not r["bit_identical"]]
+        failures.append(
+            f"faults chaos: seeds {bad} diverged from the clean run")
+    return failures
+
+
 def _check_balance_regression(structured: dict) -> list:
     """ISSUE 4 gates over bench_balance's structured results."""
     failures = []
@@ -292,6 +354,18 @@ def _comparable_metrics(report: dict) -> dict:
     if sh.get("gate_active"):
         out["sharded.dispatch_amortization"] = (
             float(sh["dispatch_amortization"]), "higher")
+    # fault recovery: event counts and restore/re-execution counts are
+    # deterministic (seeded plans, fixed checkpoint cadence); the
+    # makespan ratio is wall-clock and gated by its own absolute check
+    fa = mods.get("faults", {}).get("structured", {})
+    for path, res in fa.get("kill", {}).items():
+        out[f"faults.kill.{path}.events_fired"] = (
+            float(res["events_fired"]), "higher")
+    for path, res in fa.get("resume", {}).items():
+        out[f"faults.resume.{path}.tasks_restored"] = (
+            float(res["restored"]), "higher")
+        out[f"faults.resume.{path}.executed_new"] = (
+            float(res["executed_new"]), "lower")
     # bench_balance's makespan ratio is wall-clock-derived, so it is
     # gated by its own MIN_BALANCE_RATIO check, not compared here
     return out
@@ -350,6 +424,7 @@ _STRUCTURED_CHECKS = {
     "platform_overhead": _check_wave_regression,
     "approx": _check_approx_regression,
     "sharded": _check_sharded_regression,
+    "faults": _check_faults_regression,
 }
 
 
@@ -380,10 +455,11 @@ def main(argv=None) -> int:
         args.json = "" if args.only else "BENCH_platform.json"
 
     from benchmarks import (bench_approx, bench_balance, bench_elasticity,
-                            bench_hetero, bench_jobsize, bench_kernels,
-                            bench_kneepoint, bench_platform_overhead,
-                            bench_reduce_sim, bench_service,
-                            bench_sharded, bench_task_sizing)
+                            bench_faults, bench_hetero, bench_jobsize,
+                            bench_kernels, bench_kneepoint,
+                            bench_platform_overhead, bench_reduce_sim,
+                            bench_service, bench_sharded,
+                            bench_task_sizing)
     modules = [
         # balance first: its FIFO-vs-balanced wall-clock ratio is the
         # noise-sensitive gate, and the JAX modules leave threadpools
@@ -400,6 +476,7 @@ def main(argv=None) -> int:
         ("service", bench_service),
         ("approx", bench_approx),
         ("sharded", bench_sharded),
+        ("faults", bench_faults),
     ]
 
     report = {"schema": 1, "smoke": args.smoke, "modules": {}}

@@ -44,7 +44,10 @@ class CheckpointManager:
         self.process_index = process_index
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # background-save failures park here (under _err_lock) and are
+        # re-raised on the NEXT save()/wait() — never silently dropped
         self._error: Optional[BaseException] = None
+        self._err_lock = threading.Lock()
 
     # -- save ------------------------------------------------------------------
     def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
@@ -69,8 +72,11 @@ class CheckpointManager:
                     if leaf.dtype.kind == "V":
                         leaf = leaf.view(np.uint16)
                     arrays[f"a{i}"] = leaf
-                np.savez(os.path.join(
-                    tmp, f"proc_{self.process_index}.npz"), **arrays)
+                with open(os.path.join(
+                        tmp, f"proc_{self.process_index}.npz"), "wb") as f:
+                    np.savez(f, **arrays)
+                    f.flush()
+                    os.fsync(f.fileno())
                 meta = {
                     "step": step,
                     "treedef": str(treedef),
@@ -80,12 +86,23 @@ class CheckpointManager:
                 }
                 with open(os.path.join(tmp, "meta.json"), "w") as f:
                     json.dump(meta, f)
+                    f.flush()
+                    os.fsync(f.fileno())
                 if os.path.exists(final):
                     shutil.rmtree(final)
                 os.rename(tmp, final)                  # atomic commit
+                # fsync the parent directory so the rename itself is
+                # durable — without it a crash can leave the directory
+                # entry unwritten and the "atomic" claim is hollow
+                dfd = os.open(self.directory, os.O_RDONLY)
+                try:
+                    os.fsync(dfd)
+                finally:
+                    os.close(dfd)
                 self._gc()
             except BaseException as e:                 # noqa: BLE001
-                self._error = e
+                with self._err_lock:
+                    self._error = e
 
         self._thread = threading.Thread(target=write, daemon=True)
         self._thread.start()
@@ -93,11 +110,17 @@ class CheckpointManager:
             self.wait()
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
+        """Join any in-flight background save and re-raise its parked
+        error (also raised by the next :meth:`save`, which waits first —
+        a failed async save is surfaced on the following call, never
+        silently dropped)."""
+        thread = self._thread
+        if thread is not None:
+            thread.join()
             self._thread = None
-        if self._error is not None:
+        with self._err_lock:
             err, self._error = self._error, None
+        if err is not None:
             raise err
 
     def _gc(self) -> None:

@@ -36,11 +36,14 @@ the SLO.
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from . import recovery as rec
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
@@ -71,6 +74,13 @@ class DataNode:
     fetches: int = 0                    # successful fetches served
     failures: int = 0                   # total failed fetches
     consecutive_failures: int = 0
+    # probe-driven auto-revival (failure-detected DOWN only): when the
+    # next health probe is due, and the current (backed-off) interval.
+    # Administrative mark_down() leaves auto_probe False — that path
+    # stays sticky until an explicit revive(), as documented.
+    auto_probe: bool = False
+    next_probe_at: Optional[float] = None
+    probe_interval: float = 0.0
 
     def fetch(self, sample_id: int,
               inflight: Optional[int] = None) -> Tuple[np.ndarray, float]:
@@ -105,6 +115,28 @@ class ReplicationPolicy:
     degraded_factor: float = 3.0       # EMA > factor·median(peers) ⇒ DEGRADED
     max_fetch_attempts: int = 3        # bounded retries across replicas
     resp_alpha: float = 0.3            # response-time EMA smoothing
+    # unified retry policy (repro.core.recovery.RetryPolicy): 0 base
+    # delay keeps the legacy immediate-failover behavior; callers that
+    # want real backoff between replica attempts raise it
+    retry_base_delay: float = 0.0
+    retry_backoff_factor: float = 2.0
+    retry_max_delay: float = 0.25
+    retry_jitter: float = 0.0
+    # probe-driven auto-revival of failure-detected DOWN nodes: re-probe
+    # after probe_interval, backing off multiplicatively on failed
+    # probes up to probe_max_interval
+    auto_revive: bool = True
+    probe_interval: float = 0.05
+    probe_backoff_factor: float = 2.0
+    probe_max_interval: float = 2.0
+
+    def retry_policy(self) -> "rec.RetryPolicy":
+        return rec.RetryPolicy(
+            max_attempts=self.max_fetch_attempts,
+            base_delay=self.retry_base_delay,
+            backoff_factor=self.retry_backoff_factor,
+            max_delay=self.retry_max_delay,
+            jitter=self.retry_jitter)
 
 
 class ReplicatedDataStore:
@@ -124,7 +156,7 @@ class ReplicatedDataStore:
     def __init__(self, n_initial: int = 2,
                  policy: ReplicationPolicy = ReplicationPolicy(),
                  latency: Optional[Callable[[int], float]] = None,
-                 select: str = "response_time"):
+                 select: str = "response_time", seed: int = 0):
         # "response_time": predicted-latency scores (the balanced
         # subsystem); "least_inflight": queue counts only, blind to
         # latency magnitude; "static": always the sample's primary
@@ -136,6 +168,8 @@ class ReplicatedDataStore:
                              "'static'")
         self.policy = policy
         self.select = select
+        self._retry = policy.retry_policy()
+        self._rng = random.Random(seed)     # retry jitter (deterministic)
         self._latency = latency or (lambda nbytes: 0.0)
         self.nodes: List[DataNode] = [
             DataNode(i, latency=self._latency)
@@ -289,8 +323,13 @@ class ReplicatedDataStore:
 
     def mark_down(self, node_id: int) -> None:
         """Administratively take a node out of the replica set (chaos
-        injection / external health checks)."""
-        self._set_state(self._node(node_id), DOWN)
+        injection / external health checks).  Unlike failure-detected
+        DOWN, this is sticky: no auto-revival probe is armed."""
+        node = self._node(node_id)
+        with self._lock:
+            node.auto_probe = False
+            node.next_probe_at = None
+        self._set_state(node, DOWN)
 
     def revive(self, node_id: int) -> None:
         """Return a down node to service (its EMA restarts fresh)."""
@@ -298,7 +337,56 @@ class ReplicatedDataStore:
         with self._lock:
             node.consecutive_failures = 0
             node.resp_ema = None
+            node.auto_probe = False
+            node.next_probe_at = None
         self._set_state(node, HEALTHY)
+
+    def _maybe_probe_down(self) -> None:
+        """Probe-driven auto-revival: re-probe failure-detected DOWN
+        nodes whose (backed-off) probe timer is due.  A successful probe
+        revives the node and seeds its EMA; a failed probe only widens
+        the backoff — it does NOT touch the node's failure counters
+        (probes are health checks, not serving fetches, and a DOWN node
+        never serves claims)."""
+        if not self.policy.auto_revive:
+            return
+        now = time.monotonic()
+        due: List[DataNode] = []
+        with self._lock:
+            for n in self.nodes:
+                if (n.state == DOWN and n.auto_probe
+                        and n.next_probe_at is not None
+                        and now >= n.next_probe_at):
+                    # claim the probe so concurrent fetchers don't race
+                    n.next_probe_at = now + 3600.0
+                    due.append(n)
+        for node in due:
+            sid = next(iter(node.store), None)
+            ok = False
+            took = None
+            if sid is not None:
+                with self._lock:
+                    node.inflight += 1
+                    snap = node.inflight
+                try:
+                    _, took = node.fetch(sid, inflight=snap)
+                    ok = True
+                except BaseException:      # noqa: BLE001
+                    pass
+                finally:
+                    with self._lock:
+                        node.inflight -= 1
+            if ok:
+                self.revive(node.node_id)
+                self._record_outcome(node, took)   # seed the fresh EMA
+            else:
+                with self._lock:
+                    node.probe_interval = min(
+                        node.probe_interval
+                        * self.policy.probe_backoff_factor,
+                        self.policy.probe_max_interval)
+                    node.next_probe_at = (time.monotonic()
+                                          + node.probe_interval)
 
     def _node(self, node_id: int) -> DataNode:
         for n in self.nodes:
@@ -321,6 +409,13 @@ class ReplicatedDataStore:
             return None
         if node.consecutive_failures >= self.policy.max_consecutive_failures:
             new = DOWN
+            if self.policy.auto_revive:
+                # failure-detected DOWN: arm the auto-revival probe
+                # (administrative mark_down() stays sticky)
+                node.auto_probe = True
+                node.probe_interval = self.policy.probe_interval
+                node.next_probe_at = (time.monotonic()
+                                      + node.probe_interval)
         else:
             peers = [n.resp_ema for n in self.nodes
                      if n is not node and n.state != DOWN
@@ -389,15 +484,22 @@ class ReplicatedDataStore:
         node.inflight += 1
         return node
 
-    def fetch(self, sample_id: int) -> np.ndarray:
-        """Fetch one sample from the cheapest available replica, with
-        bounded retries + failover: a raising node records a failure
-        (taking it DOWN after ``max_consecutive_failures``) and the fetch
-        moves to the next-best holder — never an unbounded retry loop on
-        one replica."""
+    def fetch(self, sample_id: int,
+              budget: Optional["rec.RetryBudget"] = None) -> np.ndarray:
+        """Fetch one sample from the cheapest available replica, under
+        the unified :class:`~repro.core.recovery.RetryPolicy`: a raising
+        node records a failure (taking it DOWN after
+        ``max_consecutive_failures``) and the fetch fails over to the
+        next-best holder after the policy's (default zero) backoff.
+        Permanent errors propagate immediately; ``budget`` exhaustion
+        stops retrying early.  Replica exhaustion raises a
+        :class:`DataNodeError` tagged ``permanent`` so upstream retry
+        layers fail fast instead of re-spinning a dead sample."""
+        self._maybe_probe_down()
+        policy = self._retry
         tried: List[int] = []
         last_err: Optional[BaseException] = None
-        for _ in range(max(1, self.policy.max_fetch_attempts)):
+        for attempt in range(max(1, policy.max_attempts)):
             with self._lock:
                 node = self._claim_locked(sample_id, exclude=tried)
                 snap = node.inflight if node is not None else 0
@@ -411,17 +513,28 @@ class ReplicatedDataStore:
                 with self._lock:
                     node.inflight -= 1
                 self._record_outcome(node, None)
+                if rec.is_permanent(e):
+                    break
+                if budget is not None and not budget.spend():
+                    break
+                delay = policy.delay(attempt + 1, self._rng)
+                if delay > 0.0:
+                    time.sleep(delay)
                 continue
             with self._lock:
                 node.inflight -= 1
             self._record_outcome(node, took)
             self._observe(took)
             return data
-        raise DataNodeError(
+        err = DataNodeError(
             f"sample {sample_id}: no replica served the fetch "
-            f"(tried nodes {tried})") from last_err
+            f"(tried nodes {tried})")
+        err.permanent = True
+        raise err from last_err
 
-    def fetch_many(self, sample_ids: Sequence[int]) -> List[np.ndarray]:
+    def fetch_many(self, sample_ids: Sequence[int],
+                   budget: Optional["rec.RetryBudget"] = None
+                   ) -> List[np.ndarray]:
         """Batch fetch, spread across the replica set concurrently.
 
         ONE lock acquisition assigns every sample of the batch its
@@ -430,9 +543,10 @@ class ReplicatedDataStore:
         node) and snapshots each node's inflight count for the latency
         model; the fetches themselves then run in parallel on a small
         shared pool.  A failed fetch fails over to the sample's next-best
-        holder (bounded by ``max_fetch_attempts``)."""
+        holder (bounded by ``max_fetch_attempts``, spending ``budget``)."""
+        self._maybe_probe_down()
         if len(sample_ids) <= 1:
-            return [self.fetch(s) for s in sample_ids]
+            return [self.fetch(s, budget=budget) for s in sample_ids]
 
         def one(claim):
             sid, node, snap = claim
@@ -460,8 +574,10 @@ class ReplicatedDataStore:
             for sid in sample_ids:
                 node = self._claim_locked(sid)
                 if node is None:
-                    raise DataNodeError(
+                    err = DataNodeError(
                         f"sample {sid}: every replica is down")
+                    err.permanent = True
+                    raise err
                 futures.append(pool.submit(one, (sid, node, node.inflight)))
 
         out: Dict[int, np.ndarray] = {}
@@ -475,7 +591,7 @@ class ReplicatedDataStore:
             self._observe(took)
             out[sid] = data
         for sid in failed:                 # bounded failover, serial tail
-            out[sid] = self.fetch(sid)
+            out[sid] = self.fetch(sid, budget=budget)
         return [out[sid] for sid in order]
 
     def _fetch_pool_locked(self):

@@ -315,6 +315,18 @@ class StoppingController:
             return True
         return False
 
+    def force_stop(self, reason: str) -> None:
+        """Latch the stop NOW with whatever CI has been achieved — the
+        graceful-degradation path: injected/real failures shrank capacity
+        past feasibility, so an epsilon-capable job drains at the
+        achieved confidence interval instead of hanging.  Idempotent; a
+        job that already converged keeps its converged reason."""
+        if self.stopped:
+            return
+        self.stopped = True
+        self.stop_reason = reason
+        self.final = self.estimator.estimate()
+
     def snapshot(self) -> Optional[EstimateSnapshot]:
         """Latest estimate (the latched ``final`` once stopped)."""
         return self.final if self.final is not None \

@@ -22,8 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import random
+import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 logger = logging.getLogger(__name__)
 
@@ -101,6 +103,131 @@ def should_speculate(age_seconds: float, exec_ema: Optional[float], *,
     if age_seconds <= straggler_factor * exec_ema:
         return False
     return speculation_gain(age_seconds, exec_ema) > clone_tax * exec_ema
+
+
+# ---------------------------------------------------------------------------
+# Failure taxonomy + retry policy (shared by datastore / runner / pool)
+# ---------------------------------------------------------------------------
+
+
+class WorkerCrash(RuntimeError):
+    """A worker thread died (injected or detected) while holding claimed
+    tasks.  The runner/pool reclaims the worker's claims back to the
+    scheduler and respawns the thread; first-completion-wins dedup keeps
+    settlement at-most-once, so recovery is bit-identical."""
+
+
+class DegradedJobError(RuntimeError):
+    """A job can no longer complete exactly: failures exhausted every
+    replica (or the retry budget) for some task's data.  Carries a
+    structured partial-result report so callers see exactly how far the
+    job got instead of a bare traceback."""
+
+    def __init__(self, message: str, *, reason: str = "",
+                 n_tasks: int = 0, completed: int = 0,
+                 completed_ids: Optional[list] = None,
+                 partial: Any = None):
+        super().__init__(message)
+        self.reason = reason or message
+        self.n_tasks = n_tasks
+        self.completed = completed
+        self.completed_ids = list(completed_ids or [])
+        self.partial = partial
+
+    def report(self) -> Dict[str, Any]:
+        return {"reason": self.reason, "n_tasks": self.n_tasks,
+                "completed": self.completed,
+                "completed_ids": sorted(self.completed_ids)}
+
+
+#: exception types that retrying cannot fix — fail fast instead of
+#: burning the budget (mirrors the transient/permanent split every
+#: lease-based scheduler draws between "node flaked" and "task is wrong")
+PERMANENT_ERRORS = (KeyError, TypeError, ValueError, AssertionError,
+                    DegradedJobError)
+
+
+def is_permanent(err: BaseException) -> bool:
+    """True when retrying the operation cannot succeed: programming /
+    lookup errors, or an error explicitly marked permanent by the raiser
+    (``err.permanent = True`` — the datastore tags replica-exhaustion
+    this way so callers stop retrying a dead sample)."""
+    if getattr(err, "permanent", False):
+        return True
+    return isinstance(err, PERMANENT_ERRORS)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Unified bounded-retry policy: exponential backoff with seeded
+    jitter and permanent-vs-transient classification.  ``base_delay=0``
+    (the default) keeps the legacy immediate-retry behavior of the
+    datastore's old ad-hoc loops — failover to another replica should
+    not sleep — while remote-fetch callers can opt into real backoff."""
+
+    max_attempts: int = 3
+    base_delay: float = 0.0          # seconds before attempt 2
+    backoff_factor: float = 2.0
+    max_delay: float = 1.0
+    jitter: float = 0.0              # +- fraction of the delay
+
+    def delay(self, attempt: int, rng: Optional[random.Random] = None
+              ) -> float:
+        """Backoff before retry ``attempt`` (1-based count of failures
+        so far).  Deterministic for a seeded ``rng``."""
+        if self.base_delay <= 0.0:
+            return 0.0
+        d = min(self.base_delay * self.backoff_factor ** (attempt - 1),
+                self.max_delay)
+        if self.jitter > 0.0 and rng is not None:
+            d *= 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
+        return max(d, 0.0)
+
+    def call(self, fn: Callable[[], Any], *,
+             rng: Optional[random.Random] = None,
+             budget: Optional["RetryBudget"] = None,
+             sleep: Callable[[float], None] = time.sleep) -> Any:
+        """Run ``fn`` under this policy.  Permanent errors propagate
+        immediately; transient ones retry up to ``max_attempts`` total
+        attempts, spending one unit of ``budget`` per retry."""
+        last: Optional[BaseException] = None
+        for attempt in range(max(1, self.max_attempts)):
+            try:
+                return fn()
+            except BaseException as e:      # noqa: BLE001
+                last = e
+                if is_permanent(e) or attempt + 1 >= max(1, self.max_attempts):
+                    raise
+                if budget is not None and not budget.spend():
+                    raise
+                d = self.delay(attempt + 1, rng)
+                if d > 0.0:
+                    sleep(d)
+        raise last  # pragma: no cover — loop always returns or raises
+
+
+class RetryBudget:
+    """Thread-safe per-job retry allowance.  Every retry anywhere in the
+    job's data path spends one unit; exhaustion turns the next transient
+    error permanent, so a job drowning in flaky fetches degrades
+    promptly instead of head-of-line blocking the pool."""
+
+    def __init__(self, limit: Optional[int] = None):
+        self.limit = limit
+        self._spent = 0
+        self._lock = threading.Lock()
+
+    def spend(self, n: int = 1) -> bool:
+        with self._lock:
+            if self.limit is not None and self._spent + n > self.limit:
+                return False
+            self._spent += n
+            return True
+
+    @property
+    def spent(self) -> int:
+        with self._lock:
+            return self._spent
 
 
 @dataclasses.dataclass

@@ -110,6 +110,12 @@ class SchedulerConfig:
     speculative_factor: float = 2.0        # legacy name for the age factor
     straggler_factor: Optional[float] = None   # overrides when set
     seed: int = 0
+    # lease-based task reclamation (DESIGN.md §12): a claimed task whose
+    # lease expires is requeued for another worker — the safety net for
+    # workers that die without reporting.  First-completion-wins dedup
+    # keeps a late original settlement harmless (at-most-once, results
+    # bit-identical).  None disables leasing entirely.
+    lease_seconds: Optional[float] = None
 
     def effective_straggler_factor(self) -> float:
         return (self.straggler_factor if self.straggler_factor is not None
@@ -141,6 +147,12 @@ class TwoPhaseScheduler:
         self.queues: List[deque[Task]] = [deque() for _ in range(n_workers)]
         self.inflight: Dict[int, Task] = {}
         self.inflight_by_worker: Dict[int, Task] = {}
+        # EVERY claimed-but-unsettled task per worker (a wave claim is
+        # many tasks) — what crash/lease reclamation recovers.  The
+        # single-task ``inflight_by_worker`` keeps its legacy straggler
+        # semantics alongside.
+        self.claims_by_worker: Dict[int, Dict[int, Task]] = {}
+        self._lease: Dict[int, float] = {}   # task_id -> lease expiry
         self._started_at: Dict[int, float] = {}
         self._first_worker: Dict[int, int] = {}
         self._speculated: set = set()
@@ -148,6 +160,9 @@ class TwoPhaseScheduler:
         self.speculative_launches = 0
         self.speculation_wins = 0          # clone finished before original
         self.cancelled_tasks = 0           # dropped by cancel_pending()
+        self.worker_crashes = 0            # crashed workers reclaimed
+        self.reclaimed_tasks = 0           # tasks requeued by crash/lease
+        self.lost_tasks = 0                # dropped permanently (degraded)
         self.results: List[TaskResult] = []
         self.depth_trace: List[int] = []   # dynamic-k after each completion
         self.avg_exec = None
@@ -224,17 +239,22 @@ class TwoPhaseScheduler:
                       now: Optional[float] = None) -> None:
         self.inflight[task.task_id] = task
         self.inflight_by_worker[worker] = task
+        self.claims_by_worker.setdefault(worker, {})[task.task_id] = task
+        t_now = time.perf_counter() if now is None else now
+        if self.cfg.lease_seconds is not None:
+            self._lease[task.task_id] = t_now + self.cfg.lease_seconds
         self._first_worker.setdefault(task.task_id, worker)
         # a speculative clone's start must not reset the straggler clock
         if task.task_id not in self._started_at:
-            self._started_at[task.task_id] = (time.perf_counter()
-                                              if now is None else now)
+            self._started_at[task.task_id] = t_now
 
     def on_task_complete(self, result: TaskResult) -> List[Tuple[int, Task]]:
         """Record a result; return new (worker, task) queue assignments.
         First completion wins — a speculative duplicate's second
         completion is ignored (per-task seeds make both bit-identical)."""
         self.inflight_by_worker.pop(result.worker_id, None)
+        self.claims_by_worker.get(result.worker_id, {}).pop(
+            result.task_id, None)
         if result.task_id in self._completed:
             return []
         self._completed.add(result.task_id)
@@ -243,6 +263,7 @@ class TwoPhaseScheduler:
                 != result.worker_id):
             self.speculation_wins += 1     # the clone beat the original
         self.inflight.pop(result.task_id, None)
+        self._lease.pop(result.task_id, None)
         self._started_at.pop(result.task_id, None)
         self.results.append(result)
         self._observe(result)
@@ -269,16 +290,24 @@ class TwoPhaseScheduler:
         if not self._alive[worker]:
             return None
         self._maybe_rerank()
+        # lease-reclaimed duplicates: a requeued copy whose original
+        # settled in the meantime is dropped at claim time, not run again
         q = self.queues[worker]
-        if q:
-            return q.popleft()
-        if self.backlog:
-            return self.backlog.popleft()
+        while q:
+            t = q.popleft()
+            if t.task_id not in self._completed:
+                return t
+        while self.backlog:
+            t = self.backlog.popleft()
+            if t.task_id not in self._completed:
+                return t
         if self.cfg.work_stealing:
             victim = max(range(self.n_workers),
                          key=lambda i: len(self.queues[i]))
-            if len(self.queues[victim]) > 1:
-                return self.queues[victim].pop()   # steal from the tail
+            while len(self.queues[victim]) > 1:
+                t = self.queues[victim].pop()      # steal from the tail
+                if t.task_id not in self._completed:
+                    return t
         if self.cfg.speculative and self.avg_exec and self._started_at:
             t_now = time.perf_counter() if now is None else now
             factor = self.cfg.effective_straggler_factor()
@@ -334,21 +363,24 @@ class TwoPhaseScheduler:
         gets a fair share and one worker cannot swallow the backlog).
         The caller must :meth:`on_task_start` every claimed task.
 
-        NOTE: ``inflight_by_worker`` tracks ONE task per worker, so
-        task-level failure recovery (``recovery="task"``) would reclaim
-        only the last wave member of a dead worker.  Waves are currently
-        driven only by :class:`ThreadedRunner`, which aborts the whole
-        job on a worker error (job-level recovery) — a caller combining
-        waves with task-level recovery must first widen
-        ``inflight_by_worker`` to a set per worker."""
+        Crash recovery tracks the FULL wave: every claimed task lands in
+        ``claims_by_worker`` at :meth:`on_task_start`, so
+        :meth:`on_worker_crash` / :meth:`reclaim_expired` recover every
+        wave member of a dead worker, not just the last one (the legacy
+        single-slot ``inflight_by_worker`` only feeds straggler
+        speculation)."""
         q = self.queues[worker]
         out = [first]
         key = key_fn(first)
         while len(out) < max_n and q and key_fn(q[0]) == key:
-            out.append(q.popleft())
+            t = q.popleft()
+            if t.task_id not in self._completed:
+                out.append(t)
         while (len(out) < max_n and self.backlog
                and key_fn(self.backlog[0]) == key):
-            out.append(self.backlog.popleft())
+            t = self.backlog.popleft()
+            if t.task_id not in self._completed:
+                out.append(t)
         return out
 
     def cancel_pending(self) -> List[Task]:
@@ -376,9 +408,13 @@ class TwoPhaseScheduler:
         reclaimed = list(self.queues[worker])
         self.queues[worker].clear()
         own = self.inflight_by_worker.pop(worker, None)
+        claims = self.claims_by_worker.pop(worker, {})
         if own is not None:
-            self.inflight.pop(own.task_id, None)
-            reclaimed.append(own)
+            claims.setdefault(own.task_id, own)
+        for t in claims.values():
+            self.inflight.pop(t.task_id, None)
+            self._lease.pop(t.task_id, None)
+            reclaimed.append(t)
         for t in reclaimed:
             # reset the straggler clock: the re-execution must not
             # inherit the dead worker's elapsed time (it would be
@@ -387,6 +423,86 @@ class TwoPhaseScheduler:
             self._first_worker.pop(t.task_id, None)
         self.backlog.extend(reclaimed)
         return reclaimed
+
+    def on_worker_crash(self, worker: int, *,
+                        respawn: bool = True) -> List[Task]:
+        """A worker thread died mid-task (detected or injected): requeue
+        EVERY claimed-but-unsettled task it held — the whole wave, plus
+        its queued work — at the FRONT of the backlog so recovery work
+        drains first.  Unlike :meth:`on_worker_failure` this never
+        aborts the job: the runner respawns the worker under the same id
+        (``respawn=True`` keeps it alive in the scheduler) and
+        first-completion-wins dedup keeps any late settlement from the
+        dead thread harmless.  Idempotent per crash."""
+        self.worker_crashes += 1
+        reclaimed = [t for t in self.queues[worker]
+                     if t.task_id not in self._completed]
+        self.queues[worker].clear()
+        self.inflight_by_worker.pop(worker, None)
+        claims = self.claims_by_worker.pop(worker, {})
+        for tid, t in claims.items():
+            if tid not in self._completed:
+                reclaimed.append(t)
+        seen: set = set()
+        requeue: List[Task] = []
+        for t in reclaimed:
+            if t.task_id in seen:
+                continue
+            seen.add(t.task_id)
+            self.inflight.pop(t.task_id, None)
+            self._lease.pop(t.task_id, None)
+            self._started_at.pop(t.task_id, None)
+            self._first_worker.pop(t.task_id, None)
+            requeue.append(t)
+        self.backlog.extendleft(reversed(requeue))
+        self.reclaimed_tasks += len(requeue)
+        if not respawn:
+            self._alive[worker] = False
+        return requeue
+
+    def reclaim_expired(self, now: Optional[float] = None) -> List[Task]:
+        """Lease expiry sweep (drivers call this from idle workers): any
+        claimed task whose lease has lapsed is requeued at the front of
+        the backlog for re-execution — the safety net for workers that
+        die without a detectable crash.  The original claim stays live
+        (a slow-but-alive worker may still settle first; dedup keeps it
+        at-most-once), so the re-execution behaves exactly like a
+        speculative clone with the task's own seed: bit-identical."""
+        if self.cfg.lease_seconds is None or not self._lease:
+            return []
+        t_now = time.perf_counter() if now is None else now
+        expired = [tid for tid, exp in self._lease.items()
+                   if exp <= t_now and tid not in self._completed]
+        out: List[Task] = []
+        for tid in expired:
+            self._lease.pop(tid, None)
+            task = self.inflight.get(tid)
+            if task is None:
+                continue
+            # reset the straggler clock for the re-execution
+            self._started_at.pop(tid, None)
+            self.backlog.appendleft(task)
+            self.reclaimed_tasks += 1
+            out.append(task)
+        return out
+
+    def on_tasks_lost(self, worker: int, tasks: Sequence[Task]) -> None:
+        """Permanently drop claimed tasks whose data is gone (every
+        replica down, retry budget spent): settle them OUT of the
+        in-flight accounting without marking them completed, so a
+        degraded drain can finish from what actually executed instead of
+        hanging on tasks that can never settle."""
+        claims = self.claims_by_worker.get(worker, {})
+        for t in tasks:
+            if t.task_id in self._completed:
+                continue
+            claims.pop(t.task_id, None)
+            self.inflight.pop(t.task_id, None)
+            self._lease.pop(t.task_id, None)
+            self._started_at.pop(t.task_id, None)
+            self._first_worker.pop(t.task_id, None)
+            self.lost_tasks += 1
+        self.inflight_by_worker.pop(worker, None)
 
     def done(self) -> bool:
         return (not self.backlog and not self.inflight
@@ -408,6 +524,9 @@ class MultiJobConfig:
     # straggler_factor × the pool-wide exec EMA; first completion wins
     speculative: Any = False
     straggler_factor: float = 2.0
+    # lease-based reclamation across the pool (None disables): claimed
+    # tasks whose lease lapses are requeued to their job's front
+    lease_seconds: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -478,6 +597,13 @@ class MultiJobScheduler:
         self.speculation_wins = 0
         self._rank_dirty = False
         self.reranks = 0
+        # crash/lease recovery: every claimed-but-unsettled (job, task)
+        # per worker, and per-claim lease expiries
+        self.claimed_by: Dict[int, Dict[Tuple[int, int], Task]] = {}
+        self._lease: Dict[Tuple[int, int], float] = {}
+        self.worker_crashes = 0
+        self.reclaimed_tasks = 0
+        self.lost_tasks = 0
 
     # -- job lifecycle -------------------------------------------------------
     def add_job(self, job_id: int, tasks: Sequence[Task], *,
@@ -627,11 +753,14 @@ class MultiJobScheduler:
         # to the back of ``_rr``)
         return max(tier, key=lambda j: j.deficit)
 
-    def claim(self, now: float,
-              max_n: Optional[int] = None) -> List[Tuple[ServiceJob, Task]]:
+    def claim(self, now: float, max_n: Optional[int] = None,
+              worker: Optional[int] = None) -> List[Tuple[ServiceJob,
+                                                          Task]]:
         """Claim the next batch for an idle worker: ``[]`` when nothing
         is ready.  Every claimed task is marked in-flight; the caller
-        reports each back through :meth:`on_task_complete`."""
+        reports each back through :meth:`on_task_complete`.  ``worker``
+        tags the claim for crash/lease reclamation (a dead worker's
+        claims are requeued by :meth:`on_worker_dead`)."""
         self._maybe_rerank()
         job = self._pick(now)
         if job is None:
@@ -646,7 +775,12 @@ class MultiJobScheduler:
         batch: List[Tuple[ServiceJob, Task]] = []
         while (job.pending and len(batch) < cap
                and job.fuse_key(job.pending[0]) == key):
-            batch.append((job, job.pending.popleft()))
+            t = job.pending.popleft()
+            # a lease-reclaimed duplicate whose original settled is
+            # dropped at claim time, never re-executed
+            if t.task_id in job.completed_ids:
+                continue
+            batch.append((job, t))
         # debit what was actually served; cap the carried credit at one
         # quantum so an idle-ish job cannot hoard turns
         job.deficit = min(job.deficit - len(batch), self.cfg.quantum)
@@ -663,7 +797,10 @@ class MultiJobScheduler:
                 took = 0
                 while (peer.pending and len(batch) < cap
                        and peer.fuse_key(peer.pending[0]) == key):
-                    batch.append((peer, peer.pending.popleft()))
+                    t = peer.pending.popleft()
+                    if t.task_id in peer.completed_ids:
+                        continue
+                    batch.append((peer, t))
                     took += 1
                 if took:
                     peer.deficit -= took    # fused service still counts
@@ -673,10 +810,21 @@ class MultiJobScheduler:
             j.inflight += 1
             j.inflight_tasks[t.task_id] = t
             j.started_at.setdefault(t.task_id, now)
+            self._record_claim(worker, j.job_id, t, now)
         return batch
+
+    def _record_claim(self, worker: Optional[int], job_id: int,
+                      task: Task, now: float) -> None:
+        if worker is not None:
+            self.claimed_by.setdefault(worker, {})[
+                (job_id, task.task_id)] = task
+        if self.cfg.lease_seconds is not None:
+            self._lease[(job_id, task.task_id)] = (
+                now + self.cfg.lease_seconds)
 
     def claim_speculative(self, now: float,
                           cfg_speculative: Any = None,
+                          worker: Optional[int] = None,
                           ) -> List[Tuple[ServiceJob, Task]]:
         """Straggler speculation for an idle pool worker when nothing is
         ready: clone the oldest in-flight task whose age exceeds
@@ -713,13 +861,17 @@ class MultiJobScheduler:
         job.speculated.add(task.task_id)
         job.inflight += 1
         self.speculative_launches += 1
+        self._record_claim(worker, job.job_id, task, now)
         return [(job, task)]
 
-    def on_task_abandoned(self, job_id: int, task_id: int) -> None:
+    def on_task_abandoned(self, job_id: int, task_id: int,
+                          worker: Optional[int] = None) -> None:
         """Settle a claimed task that will never complete — a
         speculative clone whose execution failed.  In-flight accounting
         only: the original still owns completion, and a lost redundant
         bet must never fail or finish the job."""
+        if worker is not None:
+            self.claimed_by.get(worker, {}).pop((job_id, task_id), None)
         job = self.jobs.get(job_id)
         if job is not None:
             job.inflight -= 1
@@ -727,7 +879,8 @@ class MultiJobScheduler:
     def on_task_complete(self, job_id: int,
                          exec_seconds: Optional[float],
                          task_id: Optional[int] = None,
-                         speculative: bool = False) -> bool:
+                         speculative: bool = False,
+                         worker: Optional[int] = None) -> bool:
         """Record one finished task; True when its job just completed.
         ``exec_seconds`` feeds the per-task-seconds EMA the deadline
         model uses; pass ``None`` to settle in-flight accounting without
@@ -744,6 +897,10 @@ class MultiJobScheduler:
             self.avg_task_seconds = (
                 exec_seconds if self.avg_task_seconds is None
                 else (1 - a) * self.avg_task_seconds + a * exec_seconds)
+        if worker is not None and task_id is not None:
+            self.claimed_by.get(worker, {}).pop((job_id, task_id), None)
+        if task_id is not None:
+            self._lease.pop((job_id, task_id), None)
         job = self.jobs.get(job_id)
         if job is None:
             return False
@@ -762,10 +919,102 @@ class MultiJobScheduler:
         # speculative clone still races (the duplicate settles against a
         # job that has already left the table); legacy callers without
         # task ids fall back to the raw in-flight count
-        finished = (job.done and not job.pending
+        finished = (job.done
                     and ((not job.inflight_tasks) if task_id is not None
                          else job.inflight == 0))
+        if finished and job.pending:
+            # crash/lease requeues can leave already-completed
+            # duplicates in pending; they never execute, so the job
+            # finishes when every pending entry is such a duplicate
+            finished = all(t.task_id in job.completed_ids
+                           for t in job.pending)
+            if finished:
+                job.pending.clear()
+                self._drop_from_rotation(job_id)
         if finished:
+            self.jobs.pop(job_id, None)
+            return True
+        return False
+
+    # -- crash / lease reclamation (DESIGN.md §12) ---------------------------
+    def on_worker_dead(self, worker: int) -> List[Tuple[int, Task]]:
+        """A pool worker thread died: requeue every claimed-but-
+        unsettled task it held to the FRONT of its job's pending queue
+        (recovery work drains first).  Settlement stays at-most-once —
+        completed ids are skipped here and duplicates are dropped at
+        claim time — so results are bit-identical to the fault-free
+        run.  Returns the requeued (job_id, task) pairs."""
+        self.worker_crashes += 1
+        claims = self.claimed_by.pop(worker, {})
+        requeued: List[Tuple[int, Task]] = []
+        for (jid, tid), task in claims.items():
+            self._lease.pop((jid, tid), None)
+            job = self.jobs.get(jid)
+            if job is None or tid in job.completed_ids:
+                continue
+            job.inflight -= 1
+            job.inflight_tasks.pop(tid, None)
+            job.started_at.pop(tid, None)
+            job.speculated.discard(tid)
+            job.pending.appendleft(task)
+            if jid not in self._rr:
+                self._rr.append(jid)
+            self.reclaimed_tasks += 1
+            requeued.append((jid, task))
+        return requeued
+
+    def reclaim_expired(self, now: float) -> List[Tuple[int, Task]]:
+        """Lease-expiry sweep (idle pool workers call this): requeue
+        claimed tasks whose lease lapsed.  The original claim's
+        accounting stays live (a slow worker may still settle first —
+        dedup keeps it at-most-once); the re-execution runs with the
+        task's own seed, so the race is bit-identical either way."""
+        if self.cfg.lease_seconds is None or not self._lease:
+            return []
+        expired = [k for k, exp in self._lease.items() if exp <= now]
+        out: List[Tuple[int, Task]] = []
+        for jid, tid in expired:
+            self._lease.pop((jid, tid), None)
+            job = self.jobs.get(jid)
+            if job is None or tid in job.completed_ids:
+                continue
+            task = job.inflight_tasks.get(tid)
+            if task is None:
+                continue
+            # like a speculative clone: the original may still settle
+            job.speculated.add(tid)
+            job.pending.appendleft(task)
+            if jid not in self._rr:
+                self._rr.append(jid)
+            self.reclaimed_tasks += 1
+            out.append((jid, task))
+        return out
+
+    def on_task_lost(self, job_id: int, task_id: int,
+                     worker: Optional[int] = None) -> bool:
+        """Permanent loss (every replica of the task's data is gone):
+        settle the claim WITHOUT completion and shrink the job so a
+        degraded drain can finish from what actually executed.  Returns
+        True when the job just finished (degraded)."""
+        if worker is not None:
+            self.claimed_by.get(worker, {}).pop((job_id, task_id), None)
+        self._lease.pop((job_id, task_id), None)
+        job = self.jobs.get(job_id)
+        if job is None:
+            return False
+        job.inflight -= 1
+        job.inflight_tasks.pop(task_id, None)
+        job.started_at.pop(task_id, None)
+        if task_id not in job.completed_ids:
+            job.n_tasks -= 1
+            self.lost_tasks += 1
+        finished = (job.done
+                    and not job.inflight_tasks
+                    and all(t.task_id in job.completed_ids
+                            for t in job.pending))
+        if finished:
+            job.pending.clear()
+            self._drop_from_rotation(job_id)
             self.jobs.pop(job_id, None)
             return True
         return False
@@ -980,7 +1229,9 @@ class ThreadedRunner:
                  max_batch: int = 1,
                  batch_cap: Optional[Callable[[Task], int]] = None,
                  locality_score: Optional[Callable[[Task], float]] = None,
-                 prefetcher=None, stopper=None):
+                 prefetcher=None, stopper=None,
+                 crash_hook: Optional[Callable[[int], None]] = None,
+                 max_respawns: int = 2):
         self.n_workers = n_workers
         self.run_task = run_task
         self.fetch = fetch
@@ -988,6 +1239,15 @@ class ThreadedRunner:
         self.run_batch = run_batch
         self.batch_key = batch_key or (lambda t: len(t.sample_ids))
         self.max_batch = max_batch
+        # fault injection (repro.platform.faults): called with the
+        # worker id right after each claim; raises WorkerCrash to
+        # simulate the thread dying mid-task
+        self.crash_hook = crash_hook
+        # per-worker respawn budget: a crashed worker thread is
+        # restarted under the same id until the budget runs out, after
+        # which its work is reclaimed and the pool shrinks
+        self.max_respawns = max_respawns
+        self.worker_respawns = 0
         # per-shape wave-size cap (the driver pins one padded wave width
         # per shape bucket; claims must not exceed it)
         self.batch_cap = batch_cap
@@ -1049,10 +1309,15 @@ class ThreadedRunner:
                     with lock:
                         if sched.done():
                             return
+                        # lease sweep while idle: requeue claims whose
+                        # lease lapsed (a peer died without reporting)
+                        sched.reclaim_expired()
                     time.sleep(1e-4)
                     continue
                 claimed = batch if batch is not None else [t]
                 try:
+                    if self.crash_hook is not None:
+                        self.crash_hook(wid)
                     t0 = time.perf_counter()
                     if prefetcher is not None:
                         prefetcher.prefetch(
@@ -1070,7 +1335,37 @@ class ThreadedRunner:
                     else:
                         values = [self.run_task(t)]
                     t2 = time.perf_counter()
+                except rec.WorkerCrash:
+                    # this worker "died" mid-task: reclaim its whole
+                    # claimed wave and exit the thread — the supervisor
+                    # respawns it under the same id (DESIGN.md §12)
+                    with lock:
+                        sched.on_worker_crash(wid)
+                    return
                 except BaseException as e:     # noqa: BLE001
+                    if (getattr(e, "permanent", False)
+                            and self.stopper is not None):
+                        # graceful degradation: this wave's data is
+                        # permanently gone, but the job is epsilon-
+                        # capable — drop the lost tasks, latch the stop
+                        # at the achieved CI, and drain what's in flight
+                        with lock:
+                            sched.on_tasks_lost(wid, claimed)
+                            self.stopper.force_stop(f"degraded: {e}")
+                            sched.cancel_pending()
+                        continue
+                    if getattr(e, "permanent", False):
+                        # exact job: fail with a structured partial-
+                        # result report instead of a bare traceback
+                        with lock:
+                            sched.on_tasks_lost(wid, claimed)
+                            e = rec.DegradedJobError(
+                                f"job degraded: {e}", reason=str(e),
+                                n_tasks=len(tasks),
+                                completed=len(sched._completed),
+                                completed_ids=sched._completed)
+                            errors.append(e)
+                        return
                     with lock:
                         errors.append(e)
                     return
@@ -1093,12 +1388,47 @@ class ThreadedRunner:
                         sched.cancel_pending()
 
         sched.initial_assignments()
-        threads = [threading.Thread(target=worker_loop, args=(w,))
-                   for w in range(self.n_workers)]
-        for th in threads:
+        threads: Dict[int, threading.Thread] = {
+            w: threading.Thread(target=worker_loop, args=(w,))
+            for w in range(self.n_workers)}
+        respawns = {w: 0 for w in range(self.n_workers)}
+        for th in threads.values():
             th.start()
-        for th in threads:
-            th.join()
+        # supervision loop: join with a timeout and respawn dead worker
+        # threads while the job is unfinished — a thread that exits
+        # before done() is a crash (normal exits only happen at done()
+        # or after parking an error), so its claims were (or are now)
+        # reclaimed and a fresh thread under the same id picks them up
+        while True:
+            any_alive = False
+            for w, th in list(threads.items()):
+                th.join(0.02)
+                if th.is_alive():
+                    any_alive = True
+                    continue
+                with lock:
+                    finished = bool(errors) or sched.done()
+                if finished:
+                    continue
+                if respawns[w] < self.max_respawns:
+                    respawns[w] += 1
+                    self.worker_respawns += 1
+                    nth = threading.Thread(target=worker_loop, args=(w,))
+                    threads[w] = nth
+                    nth.start()
+                    any_alive = True
+                else:
+                    # respawn budget exhausted: reclaim (idempotent) and
+                    # shrink the pool — survivors absorb the work
+                    with lock:
+                        sched.on_worker_crash(w, respawn=False)
+            if not any_alive:
+                break
         if errors:
             raise errors[0]
+        if not sched.done() and (self.stopper is None
+                                 or not self.stopper.stopped):
+            raise JobFailure(
+                "job incomplete: every worker exhausted its respawn "
+                "budget")
         return results

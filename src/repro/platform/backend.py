@@ -29,6 +29,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
+from repro.core import recovery as rec
 from repro.core import scheduler as sch
 
 Emit = Callable[[int, Any], None]
@@ -63,6 +64,7 @@ class PlatformBackend(Protocol):
             prefetcher=None,
             on_scheduler: Optional[Callable[[Any], None]] = None,
             stopper=None,
+            crash_hook: Optional[Callable[[int], None]] = None,
             ) -> BackendOutcome:
         """Execute ``tasks``; stream each task's partial through ``emit``.
         ``shape_key(task)`` identifies the task's compiled block shape
@@ -80,7 +82,10 @@ class PlatformBackend(Protocol):
         state changes to :meth:`request_rerank`; ``stopper`` is a
         :class:`~repro.core.estimator.StoppingController` consulted at
         wave settlement — on convergence the scheduler cancels its
-        pending tasks and the job drains (DESIGN.md §10)."""
+        pending tasks and the job drains (DESIGN.md §10);
+        ``crash_hook(worker_id)`` is a fault-injection tick called per
+        claim — it may raise :class:`~repro.core.recovery.WorkerCrash`
+        to kill that worker mid-task (DESIGN.md §12)."""
         ...
 
 
@@ -98,7 +103,7 @@ class ThreadedBackend:
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
             shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
             locality_score=None, prefetcher=None, on_scheduler=None,
-            stopper=None):
+            stopper=None, crash_hook=None, max_respawns=2):
         assert compute is not None, "threaded backend needs real compute"
 
         def run_task(task: sch.Task):
@@ -146,7 +151,9 @@ class ThreadedBackend:
                                     batch_cap=wave_cap,
                                     locality_score=locality_score,
                                     prefetcher=prefetcher,
-                                    stopper=stopper)
+                                    stopper=stopper,
+                                    crash_hook=crash_hook,
+                                    max_respawns=max_respawns)
         runner.on_scheduler = on_scheduler
         t0 = time.perf_counter()
         time.sleep(plat.startup_time)
@@ -157,7 +164,8 @@ class ThreadedBackend:
             makespan=makespan, results=results,
             queue_depths=list(sched.depth_trace) if sched else [],
             speculative_launches=sched.speculative_launches if sched else 0,
-            speculation_wins=sched.speculation_wins if sched else 0)
+            speculation_wins=sched.speculation_wins if sched else 0,
+            restarts=runner.worker_respawns)
 
 
 # ---------------------------------------------------------------------------
@@ -215,7 +223,9 @@ class ServicePool:
 
     def __init__(self, n_workers: int, plat,
                  cfg: Optional[sch.MultiJobConfig] = None,
-                 prefetcher=None):
+                 prefetcher=None,
+                 crash_hook: Optional[Callable[[int], None]] = None,
+                 max_respawns: int = 2):
         self.n_workers = max(n_workers, 1)
         self.plat = plat
         self.sched = sch.MultiJobScheduler(self.n_workers,
@@ -223,10 +233,17 @@ class ServicePool:
         # core.prefetch.TaskPrefetcher: next waves' data-node fetches go
         # in flight while the current wave executes
         self.prefetcher = prefetcher
+        # fault-injection tick (DESIGN.md §12): called per claim with the
+        # worker id; may raise recovery.WorkerCrash to kill that worker
+        self.crash_hook = crash_hook
+        self.max_respawns = max_respawns
+        self.worker_respawns = 0
         self._jobs: Dict[int, PoolJob] = {}
         self._started_jobs: set = set()
         self._cond = threading.Condition()
-        self._threads: List[threading.Thread] = []
+        self._threads: Dict[int, threading.Thread] = {}
+        self._respawns: Dict[int, int] = {}
+        self._monitor: Optional[threading.Thread] = None
         self._stop = False
         self.started = False
 
@@ -248,22 +265,63 @@ class ServicePool:
         with self._cond:
             if self._stop:     # close() ran during the startup sleep
                 return
-            self._threads = [
-                threading.Thread(target=self._worker_loop, args=(w,),
-                                 name=f"service-worker-{w}", daemon=True)
-                for w in range(self.n_workers)]
-            for th in self._threads:
+            self._threads = {
+                w: threading.Thread(target=self._worker_loop, args=(w,),
+                                    name=f"service-worker-{w}",
+                                    daemon=True)
+                for w in range(self.n_workers)}
+            self._respawns = {w: 0 for w in range(self.n_workers)}
+            for th in self._threads.values():
                 th.start()
+            # supervisor: detects dead worker threads (injected crashes,
+            # uncaught bugs), reclaims their claims, respawns bounded
+            # replacements (DESIGN.md §12)
+            self._monitor = threading.Thread(
+                target=self._monitor_loop, name="service-monitor",
+                daemon=True)
+            self._monitor.start()
 
     def close(self) -> None:
         with self._cond:
             self._stop = True
             self._cond.notify_all()
-        for th in self._threads:
+        for th in list(self._threads.values()):
             th.join(timeout=30.0)
-        self._threads = []
+        if self._monitor is not None:
+            self._monitor.join(timeout=30.0)
+            self._monitor = None
+        self._threads = {}
         if self.prefetcher is not None:
             self.prefetcher.close()
+
+    def _monitor_loop(self) -> None:
+        """Worker supervision: a thread that died without the pool
+        stopping had its claims orphaned — requeue them via the
+        scheduler's crash path and respawn a replacement under the same
+        worker id (per-task seeds make the re-execution bit-identical).
+        Respawns are bounded by ``max_respawns`` per worker slot; an
+        exhausted slot stays down and its share of the pool is served by
+        the surviving workers."""
+        while True:
+            with self._cond:
+                if self._stop:
+                    return
+                for w, th in list(self._threads.items()):
+                    if th.is_alive():
+                        continue
+                    self.sched.on_worker_dead(w)
+                    if self._respawns.get(w, 0) < self.max_respawns:
+                        self._respawns[w] = self._respawns.get(w, 0) + 1
+                        self.worker_respawns += 1
+                        nth = threading.Thread(
+                            target=self._worker_loop, args=(w,),
+                            name=f"service-worker-{w}", daemon=True)
+                        self._threads[w] = nth
+                        nth.start()
+                    else:
+                        self._threads.pop(w, None)
+                self._cond.notify_all()
+            time.sleep(0.02)
 
     # -- job intake ----------------------------------------------------------
     def submit(self, job: PoolJob) -> None:
@@ -304,7 +362,6 @@ class ServicePool:
 
     # -- workers -------------------------------------------------------------
     def _worker_loop(self, wid: int) -> None:
-        del wid
         plat = self.plat
         speculative = self.sched.cfg.speculative
         while True:
@@ -316,17 +373,21 @@ class ServicePool:
                 try:
                     batch = []
                     while not self._stop:
-                        batch = self.sched.claim(time.monotonic())
+                        batch = self.sched.claim(time.monotonic(),
+                                                 worker=wid)
                         if batch:
                             break
                         if speculative:
                             # idle + nothing ready: clone a straggler
                             # (first completion wins; same per-task seed)
                             batch = self.sched.claim_speculative(
-                                time.monotonic())
+                                time.monotonic(), worker=wid)
                             if batch:
                                 is_spec = True
                                 break
+                        # idle worker = free capacity for lease recovery:
+                        # requeue claims whose lease lapsed (§12)
+                        self.sched.reclaim_expired(time.monotonic())
                         self._cond.wait(0.02)
                 except Exception as e:      # noqa: BLE001
                     # a scheduler-policy bug must fail jobs, not kill the
@@ -356,6 +417,17 @@ class ServicePool:
                 continue
             if not batch:
                 continue
+            if self.crash_hook is not None:
+                # fault-injection tick: a planned crash kills this worker
+                # holding its claims — exactly the window the monitor's
+                # on_worker_dead reclamation covers
+                try:
+                    self.crash_hook(wid)
+                except rec.WorkerCrash:
+                    with self._cond:
+                        self.sched.on_worker_dead(wid)
+                        self._cond.notify_all()
+                    return
             if not pool_batch:
                 # defensive: should be unreachable while cancel() keeps
                 # claimed jobs resident (sched.jobs ⊆ _jobs under _cond),
@@ -366,7 +438,8 @@ class ServicePool:
                     for job, _task in batch:
                         self.sched.on_task_complete(job.job_id, None,
                                                     _task.task_id,
-                                                    speculative=is_spec)
+                                                    speculative=is_spec,
+                                                    worker=wid)
                     self._cond.notify_all()
                 continue
             for pj in {pj.job_id: pj for pj in fresh}.values():
@@ -399,8 +472,15 @@ class ServicePool:
                     with self._cond:
                         for job, _task in batch:
                             self.sched.on_task_abandoned(job.job_id,
-                                                         _task.task_id)
+                                                         _task.task_id,
+                                                         worker=wid)
                         self._cond.notify_all()
+                elif rec.is_permanent(e):
+                    # permanent data loss (every replica down): graceful
+                    # degradation instead of a hard failure (§12) —
+                    # epsilon jobs drain at the achieved CI, exact jobs
+                    # fail with a structured partial-result report
+                    self._degrade_batch(wid, batch, e)
                 else:
                     self._fail_batch(batch, e)
                 continue
@@ -408,8 +488,20 @@ class ServicePool:
                 time.sleep(plat.dfs_tax * took)
             if plat.monitoring:
                 time.sleep(0.20 * took)
+            emit_failed: Dict[int, BaseException] = {}
             for (pj, task), value in zip(pool_batch, values):
-                pj.emit(task.task_id, value)
+                if pj.job_id in emit_failed:
+                    continue
+                try:
+                    pj.emit(task.task_id, value)
+                except BaseException as e:  # noqa: BLE001
+                    # an emit that throws (e.g. an injected
+                    # checkpoint-write crash, §12) must fail ITS job —
+                    # letting it unwind would kill this worker thread
+                    # and, once respawns are exhausted, hang the job
+                    emit_failed[pj.job_id] = e
+            for jid, e in emit_failed.items():
+                self._fail_jobs([jid], e)
             # average over the tasks that actually ran; a job missing from
             # pool_batch (defensive — see the not-pool_batch branch above)
             # settles without a sample (its tasks never executed, and
@@ -425,7 +517,8 @@ class ServicePool:
                     sample = (exec_each if job.job_id in executed else None)
                     if self.sched.on_task_complete(job.job_id, sample,
                                                    _task.task_id,
-                                                   speculative=is_spec):
+                                                   speculative=is_spec,
+                                                   worker=wid):
                         pj = self._jobs.pop(job.job_id, None)
                         self._started_jobs.discard(job.job_id)
                         if pj is not None:
@@ -466,6 +559,77 @@ class ServicePool:
                 self.prefetcher.discard(lambda k: k[0] in gone)
             for pj in finished:
                 pj.on_done()
+
+    def _degrade_batch(self, wid: int, batch,
+                       error: BaseException) -> None:
+        """Permanent data loss under a batch (DESIGN.md §12): every
+        replica of some claimed task's data is gone, so retrying cannot
+        help.  Each job with tasks in the failed batch settles those
+        tasks as LOST (the job shrinks — the data is unrecoverable),
+        then
+
+        * epsilon jobs (those with a stopper) force-stop with
+          ``stop_reason="degraded: ..."`` and DRAIN — the ticket reports
+          the estimate achieved from the tasks that did execute;
+        * exact jobs fail with a structured
+          :class:`~repro.core.recovery.DegradedJobError` carrying the
+          partial-progress report.
+
+        The batch failed as one device call, so per-task blame is
+        unknowable here; fusion peers that shared the wave degrade too,
+        losing at most one wave's worth of tasks — the report says
+        exactly how many."""
+        by_job: Dict[int, List[sch.Task]] = {}
+        for j, t in batch:
+            by_job.setdefault(j.job_id, []).append(t)
+        finished: List[PoolJob] = []
+        failed: List[Tuple[PoolJob, BaseException]] = []
+        with self._cond:
+            for jid, tasks in by_job.items():
+                pj = self._jobs.get(jid)
+                sjob = self.sched.jobs.get(jid)
+                n_before = sjob.n_tasks if sjob is not None else 0
+                completed = sjob.completed if sjob is not None else 0
+                completed_ids = (set(sjob.completed_ids)
+                                 if sjob is not None else set())
+                n_lost = 0
+                for t in tasks:
+                    if t.task_id not in completed_ids:
+                        n_lost += 1
+                    self.sched.on_task_lost(jid, t.task_id, worker=wid)
+                if pj is None:
+                    continue
+                if pj.stopper is not None:
+                    pj.stopper.force_stop(f"degraded: {error}")
+                    dropped = self.sched.cancel_job(jid)
+                    n_gone = n_lost + len(dropped)
+                    if pj.on_cancelled is not None and n_gone:
+                        pj.on_cancelled(n_gone)
+                    if jid not in self.sched.jobs:
+                        # nothing left in flight anywhere: the degraded
+                        # drain itself completed the job
+                        self._jobs.pop(jid, None)
+                        self._started_jobs.discard(jid)
+                        finished.append(pj)
+                else:
+                    self.sched.fail_job(jid)
+                    self._jobs.pop(jid, None)
+                    self._started_jobs.discard(jid)
+                    failed.append((pj, rec.DegradedJobError(
+                        f"job {jid} lost {n_lost} task(s) to permanent "
+                        f"data failure: {error}",
+                        reason=str(error), n_tasks=n_before,
+                        completed=completed,
+                        completed_ids=completed_ids)))
+            self._cond.notify_all()
+        if self.prefetcher is not None and (finished or failed):
+            gone = ({pj.job_id for pj in finished}
+                    | {pj.job_id for pj, _ in failed})
+            self.prefetcher.discard(lambda k: k[0] in gone)
+        for pj in finished:
+            pj.on_done()
+        for pj, err in failed:
+            pj.on_error(err)
 
     def _fail_batch(self, batch, error: BaseException) -> None:
         """A batch died: fail every job with a task in it (their values
@@ -562,13 +726,16 @@ class SimulatedBackend:
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
             shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
             locality_score=None, prefetcher=None, on_scheduler=None,
-            stopper=None):
+            stopper=None, crash_hook=None, max_respawns=2):
         # calibration measures per-task costs; waves don't apply, and the
         # §3.5 fetch/execute overlap is already modeled in virtual time
         # (queue-warm cost = max(exec, fetch)), so the real prefetcher is
         # unused; locality ranking applies — replica scores reorder the
         # virtual-time backlog exactly as they do the threaded one
+        # crash injection is a real-thread concern (virtual-time failure
+        # studies use SimWorker.fail_at instead)
         del compute_wave, max_wave, wave_cap, prefetcher, on_scheduler
+        del crash_hook, max_respawns
         calibration = 0.0
         if self.exec_model is not None:
             exec_time = self.exec_model

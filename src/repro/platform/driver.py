@@ -41,6 +41,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.core import estimator as est_mod
 from repro.core import kneepoint as kp
 from repro.core import scheduler as sch
@@ -132,6 +133,17 @@ class PlatformSpec:
     epsilon: Optional[float] = None
     confidence: float = 0.95
     min_tasks: int = 8
+    # failure model (DESIGN.md §12).  ``lease_seconds`` arms lease-based
+    # task reclamation: a claimed task whose lease lapses is requeued
+    # (first completion wins; per-task seeds keep the race bit-exact).
+    # ``checkpoint_dir`` persists completed reduce-tree partials every
+    # ``checkpoint_every`` leaves so an interrupted job resumes via
+    # ``Platform.run(resume_from=...)`` executing only missing tasks.
+    # ``max_respawns`` bounds per-worker crash respawns.
+    lease_seconds: Optional[float] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 8
+    max_respawns: int = 2
     knee_bytes: Optional[float] = None     # skip the offline phase if set
     kneepoint_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
     seed: int = 0
@@ -183,6 +195,10 @@ class JobReport:
     tasks_cancelled: int = 0
     stop_reason: Optional[str] = None       # None ⇒ ran to completion
     final_ci: Optional[Dict[str, Any]] = None   # EstimateSnapshot dict
+    # failure model / recovery observability (DESIGN.md §12)
+    tasks_restored: int = 0        # leaves restored from a checkpoint
+    checkpoint_saves: int = 0      # committed checkpoint steps this run
+    fault_events: int = 0          # injected faults that fired this run
 
 
 def make_tasks(sample_sizes: Sequence[int], sizing: str,
@@ -548,17 +564,114 @@ def slo_worker_decision(spec: PlatformSpec, plat: PlatformConfig,
         slo_seconds=spec.slo_seconds)
 
 
+class JobCheckpointer:
+    """Persist completed reduce-tree leaf partials during execution
+    (DESIGN.md §12).  Every ``every`` newly completed leaves the full
+    set of accumulated partials is saved through
+    :class:`~repro.checkpoint.manager.CheckpointManager` (atomic
+    tmp+rename, async, fsynced), so a crash at ANY point leaves the
+    newest committed step restorable.  :meth:`load` gives the partials
+    back as ``{task_id: {name: array}}``; the resumed job offers them
+    into a full-size reduce tree and executes only the missing tasks —
+    the tree's fixed shape makes the combined result bit-identical to
+    an uninterrupted run.
+
+    ``injector`` is an optional
+    :class:`~repro.platform.faults.FaultInjector` whose
+    :meth:`~repro.platform.faults.FaultInjector.checkpoint_tick` fires
+    planned mid-save crashes."""
+
+    def __init__(self, directory: str, n_tasks: int, *, every: int = 8,
+                 restored: Optional[Dict[int, Dict[str, Any]]] = None,
+                 injector=None, keep: int = 2):
+        self.mgr = CheckpointManager(directory, keep=keep)
+        self.n_tasks = n_tasks
+        self.every = max(int(every), 1)
+        self.injector = injector
+        self.saves = 0
+        self._lock = threading.Lock()
+        self._partials: Dict[int, Dict[str, Any]] = dict(restored or {})
+        self._since = 0
+        self._step = self.mgr.all_steps()[-1] if self.mgr.all_steps() \
+            else 0
+
+    def offer(self, task_id: int, value: Any) -> None:
+        """Record one completed leaf; saves when a full interval of new
+        leaves has accumulated.  The save snapshot is taken under the
+        lock; serialization runs on the manager's background thread."""
+        due = False
+        with self._lock:
+            if task_id not in self._partials:
+                self._partials[task_id] = value
+                self._since += 1
+                if self._since >= self.every:
+                    self._since = 0
+                    self._step += 1
+                    step = self._step
+                    snap = dict(self._partials)
+                    due = True
+        if not due:
+            return
+        if self.injector is not None:
+            self.injector.checkpoint_tick()
+        state: Dict[str, np.ndarray] = {}
+        for tid, partial in snap.items():
+            for name, arr in partial.items():
+                state[f"{tid}/{name}"] = np.asarray(arr)
+        state["__meta__/completed"] = np.asarray(sorted(snap),
+                                                 dtype=np.int64)
+        state["__meta__/n_tasks"] = np.asarray(self.n_tasks,
+                                               dtype=np.int64)
+        self.mgr.save(step, state)
+        self.saves += 1
+
+    def finish(self) -> None:
+        """Join the in-flight save and surface any parked background
+        error (satellite of the §12 durability contract: a failed async
+        save must fail the job, never vanish)."""
+        self.mgr.wait()
+
+    @staticmethod
+    def load(directory: str) -> Tuple[Dict[int, Dict[str, Any]],
+                                      Optional[int]]:
+        """Restore ``({task_id: partial}, n_tasks)`` from the newest
+        committed checkpoint; ``({}, None)`` when none exists."""
+        mgr = CheckpointManager(directory)
+        flat = mgr.restore_latest()
+        if flat is None:
+            return {}, None
+        partials: Dict[int, Dict[str, Any]] = {}
+        n_tasks: Optional[int] = None
+        for key, arr in flat.items():
+            # names are jax keystr forms of flat-dict keys: "['12/sum']"
+            if key.startswith("['") and key.endswith("']"):
+                key = key[2:-2]
+            if key.startswith("__meta__/"):
+                if key == "__meta__/n_tasks":
+                    n_tasks = int(arr)
+                continue
+            tid, name = key.split("/", 1)
+            partials.setdefault(int(tid), {})[name] = np.asarray(arr)
+        return partials, n_tasks
+
+
 class Platform:
     """The end-to-end driver.  ``datastore`` is an optional
     :class:`~repro.core.datastore.ReplicatedDataStore`; ``map_fn`` replaces
     the workload engine with a custom per-task callable
-    ``(task, block, months, seed) -> partial`` (overhead benchmarks)."""
+    ``(task, block, months, seed) -> partial`` (overhead benchmarks);
+    ``fault_injector`` is an optional
+    :class:`~repro.platform.faults.FaultInjector` driving a seeded
+    :class:`~repro.platform.faults.FaultPlan` through the run
+    (DESIGN.md §12)."""
 
     def __init__(self, spec: PlatformSpec = PlatformSpec(), *,
-                 datastore=None, map_fn: Optional[MapFn] = None):
+                 datastore=None, map_fn: Optional[MapFn] = None,
+                 fault_injector=None):
         self.spec = spec
         self.datastore = datastore
         self.map_fn = map_fn
+        self.fault_injector = fault_injector
 
     # -- config plumbing -----------------------------------------------------
     def _platform_config(self) -> PlatformConfig:
@@ -575,7 +688,8 @@ class Platform:
         return sch.SchedulerConfig(
             recovery=plat.recovery, seed=self.spec.seed,
             speculative=resolve_speculation(self.spec),
-            straggler_factor=self.spec.straggler_factor)
+            straggler_factor=self.spec.straggler_factor,
+            lease_seconds=self.spec.lease_seconds)
 
     def _backend(self, n_workers: Optional[int] = None) -> PlatformBackend:
         n = n_workers if n_workers is not None else self.spec.n_workers
@@ -595,8 +709,14 @@ class Platform:
 
     # -- the full data path --------------------------------------------------
     def run(self, samples: Dict[int, np.ndarray],
-            months: Dict[int, np.ndarray], workload) -> JobReport:
-        """Kneepoint → distribute → schedule/execute → streaming reduce."""
+            months: Dict[int, np.ndarray], workload, *,
+            resume_from: Optional[str] = None) -> JobReport:
+        """Kneepoint → distribute → schedule/execute → streaming reduce.
+
+        ``resume_from`` names a checkpoint directory written by a prior
+        (interrupted) run of the same job: its committed leaf partials
+        are restored into the reduce tree and only the missing tasks
+        execute — bit-identical to an uninterrupted run (§12)."""
         spec = self.spec
         plat = self._platform_config()
         engine = ("custom" if self.map_fn is not None
@@ -626,6 +746,20 @@ class Platform:
         phases["distribute"] = (plan.partition_seconds
                                 + time.perf_counter() - t0)
         tasks, ids, task_shape = plan.tasks, plan.ids, plan.task_shape
+
+        # resume (DESIGN.md §12): restore committed leaf partials and
+        # execute only the missing tasks; the tree keeps its full shape
+        # so the combined result is bit-identical to an unbroken run
+        restored: Dict[int, Dict[str, Any]] = {}
+        if resume_from is not None:
+            restored, ckpt_n = JobCheckpointer.load(resume_from)
+            if ckpt_n is not None and ckpt_n != len(tasks):
+                raise ValueError(
+                    f"checkpoint at {resume_from!r} holds partials for "
+                    f"{ckpt_n} tasks but this plan produced {len(tasks)}"
+                    " — resume needs the same dataset, sizing and knee")
+        run_tasks = ([t for t in tasks if t.task_id not in restored]
+                     if restored else tasks)
 
         # SLO-aware pool sizing (slo.choose_cores over the knee-derived
         # throughput model); explicit sim worker lists are respected
@@ -764,10 +898,33 @@ class Platform:
             else:
                 tree = StreamingReduceTree(len(tasks))
                 emit = tree.offer
+        # restored leaves enter the tree (and any estimator) first,
+        # exactly as if those tasks had just completed — BEFORE the
+        # checkpoint/injector wraps so they neither re-save nor tick the
+        # injector's completion clock
+        for tid in sorted(restored):
+            emit(tid, restored[tid])
+        ckpt: Optional[JobCheckpointer] = None
+        if spec.checkpoint_dir is not None and tree is not None:
+            ckpt = JobCheckpointer(
+                spec.checkpoint_dir, len(tasks),
+                every=spec.checkpoint_every, restored=restored,
+                injector=self.fault_injector)
+            prev_emit = emit
+
+            def emit(tid, v, _prev=prev_emit, _c=ckpt):
+                _prev(tid, v)
+                _c.offer(tid, v)
+
+        injector = self.fault_injector
+        if injector is not None:
+            if self.datastore is not None:
+                injector.attach_store(self.datastore)
+            emit = injector.wrap_emit(emit)
         t0 = time.perf_counter()
         try:
             outcome = self._backend(n_eff).run(
-                tasks, compute=compute_task, fetch=fetch, plat=plat,
+                run_tasks, compute=compute_task, fetch=fetch, plat=plat,
                 cfg=self._scheduler_cfg(plat), emit=emit,
                 shape_key=task_shape, compute_wave=compute_wave,
                 max_wave=spec.max_wave if wave_on else 1,
@@ -775,8 +932,16 @@ class Platform:
                 locality_score=locality_score,
                 prefetcher=prefetcher,
                 on_scheduler=on_scheduler,
-                stopper=stopper)
+                stopper=stopper,
+                crash_hook=(injector.worker_tick
+                            if injector is not None else None),
+                max_respawns=spec.max_respawns)
             phases["execute"] = time.perf_counter() - t0
+            if ckpt is not None:
+                # surface any parked async-save error: a job that "ran"
+                # but silently failed to persist its restore point must
+                # not report success (§12 durability contract)
+                ckpt.finish()
 
             # phase 5 — drain the reduce tree, finalize the statistic.
             # An early-stopped job finalizes over its executed subset in
@@ -785,7 +950,8 @@ class Platform:
             result, reduce_info = None, None
             if tree is not None:
                 if stopper is not None and stopper.stopped:
-                    executed = {r.task_id for r in outcome.results}
+                    executed = ({r.task_id for r in outcome.results}
+                                | set(restored))
                     if sim_partials is not None:
                         root = StreamingReduceTree.combine_subset(
                             len(tasks),
@@ -825,7 +991,12 @@ class Platform:
                             scale_decision=decision, n_workers_used=n_eff,
                             prefetch_stats=(stats if prefetcher is not None
                                             else None),
-                            stopper=stopper)
+                            stopper=stopper,
+                            tasks_restored=len(restored),
+                            checkpoint_saves=(ckpt.saves
+                                              if ckpt is not None else 0),
+                            fault_events=(len(injector.fired)
+                                          if injector is not None else 0))
 
     # -- virtual-time scale-out over a cost model ----------------------------
     def run_scaleout(self, sample_sizes: Sequence[int], *,
@@ -888,6 +1059,9 @@ class Platform:
                 n_workers_used: Optional[int] = None,
                 prefetch_stats: Optional[Dict[str, float]] = None,
                 stopper=None,
+                tasks_restored: int = 0,
+                checkpoint_saves: int = 0,
+                fault_events: int = 0,
                 ) -> JobReport:
         backend_name = backend_name or self.spec.backend
         dispatch = dispatch or pc.DispatchStats()
@@ -931,8 +1105,11 @@ class Platform:
             n_workers_used=(n_workers_used if n_workers_used is not None
                             else self._n_exec_workers()),
             prefetch_stats=prefetch_stats,
-            tasks_executed=executed,
-            tasks_cancelled=max(len(tasks) - executed, 0),
+            tasks_executed=executed + tasks_restored,
+            tasks_cancelled=max(len(tasks) - executed - tasks_restored, 0),
             stop_reason=(stopper.stop_reason if stopper is not None
                          else None),
-            final_ci=(snap.as_dict() if snap is not None else None))
+            final_ci=(snap.as_dict() if snap is not None else None),
+            tasks_restored=tasks_restored,
+            checkpoint_saves=checkpoint_saves,
+            fault_events=fault_events)

@@ -57,6 +57,7 @@ from repro.core import scheduler as sch
 from repro.platform import compute as pc
 from repro.platform.backend import PoolJob, ServicePool
 from repro.platform.driver import (
+    JobCheckpointer,
     JobPlan,
     Platform,
     PlatformSpec,
@@ -302,6 +303,8 @@ class JobTicket:
         self.stopper: Optional[est_mod.StoppingController] = None
         self.tasks_executed: int = 0       # set at completion
         self.tasks_cancelled: int = 0      # dropped by the DRAINING flip
+        self.tasks_restored: int = 0       # leaves restored from checkpoint
+        self.checkpointer: Optional[JobCheckpointer] = None
         self.stop_reason: Optional[str] = None
         self.final_ci: Optional[Dict[str, Any]] = None
         self._result: Optional[dict] = None
@@ -394,6 +397,7 @@ class JobTicket:
             "epsilon": self.epsilon,
             "tasks_executed": self.tasks_executed,
             "tasks_cancelled": self.tasks_cancelled,
+            "tasks_restored": self.tasks_restored,
             "stop_reason": self.stop_reason,
         }
 
@@ -409,7 +413,7 @@ class PlatformService:
 
     def __init__(self, spec: PlatformSpec = PlatformSpec(), *,
                  admission: AdmissionPolicy = AdmissionPolicy(),
-                 datastore=None):
+                 datastore=None, fault_injector=None):
         if spec.backend not in ("threaded", "simulated"):
             raise ValueError(
                 f"service backend must be threaded|simulated, "
@@ -419,6 +423,11 @@ class PlatformService:
         self.spec = spec
         self.admission = admission
         self.datastore = datastore
+        # deterministic fault injection (DESIGN.md §12): node events hit
+        # the data plane, worker_tick rides into the pool as crash_hook
+        self.fault_injector = fault_injector
+        if fault_injector is not None and datastore is not None:
+            fault_injector.attach_store(datastore)
         self.plat = resolve_platform_config(spec)
         # validated up front: balanced="on" without a datastore (and any
         # bad mode string) must error, never silently run FIFO
@@ -508,7 +517,9 @@ class PlatformService:
                weight: float = 1.0,
                epsilon: Any = _UNSET,
                confidence: Optional[float] = None,
-               min_tasks: Optional[int] = None) -> JobTicket:
+               min_tasks: Optional[int] = None,
+               checkpoint_dir: Optional[str] = None,
+               resume_from: Optional[str] = None) -> JobTicket:
         """Enqueue one subsample query; returns immediately with a
         :class:`JobTicket`.  ``deadline`` is seconds from now (drives the
         scheduler's deadline boost and SLO-aware admission);
@@ -523,7 +534,13 @@ class PlatformService:
         peer jobs — once the CI half-width falls under ``epsilon``.
         They default to the service spec's values, so a spec with an
         epsilon gives every interactive tenant early-stop by default;
-        pass ``epsilon=None`` explicitly to force a full run."""
+        pass ``epsilon=None`` explicitly to force a full run.
+
+        ``checkpoint_dir`` persists the job's completed reduce partials
+        (DESIGN.md §12); ``resume_from`` restores a prior interrupted
+        run's partials from such a directory — a restarted service
+        executes only the missing tasks and the result is bit-identical
+        to an uninterrupted run."""
         if self._closed:
             raise RuntimeError("service is closed")
         seed = self.spec.seed if seed is None else seed
@@ -541,7 +558,9 @@ class PlatformService:
             return self._submit_simulated(handle, workload, seed,
                                           epsilon=eff_epsilon,
                                           confidence=eff_conf,
-                                          min_tasks=eff_min)
+                                          min_tasks=eff_min,
+                                          checkpoint_dir=checkpoint_dir,
+                                          resume_from=resume_from)
 
         wave_on = wave_enabled(self.spec, engine, workload)
         # validated on EVERY submit (not just the arena-building one):
@@ -552,6 +571,18 @@ class PlatformService:
             workload, spec=self.spec, engine=engine,
             sizing=self.plat.task_sizing, n_exec=self.spec.n_workers,
             wave_on=wave_on)
+        # resume (DESIGN.md §12): restore committed leaf partials up
+        # front — a stale checkpoint must fail the submit, not a pool
+        # worker — and hand only the missing tasks to the pool
+        restored: Dict[int, Dict[str, Any]] = {}
+        if resume_from is not None:
+            restored, ckpt_n = JobCheckpointer.load(resume_from)
+            if ckpt_n is not None and ckpt_n != len(qc.plan.tasks):
+                raise ValueError(
+                    f"checkpoint at {resume_from!r} holds partials for "
+                    f"{ckpt_n} tasks but this query class has "
+                    f"{len(qc.plan.tasks)} — resume needs the same "
+                    "dataset, workload, sizing and knee")
         ticket = JobTicket(next(self._job_seq), handle, workload,
                            len(qc.plan.tasks), workload.statistic, seed)
         ticket.epsilon, ticket.confidence = eff_epsilon, eff_conf
@@ -581,9 +612,12 @@ class PlatformService:
                 with self._lock:
                     self._waiting.append(
                         (ticket,
-                         (handle, qc, priority, abs_deadline, weight)))
+                         (handle, qc, priority, abs_deadline, weight,
+                          checkpoint_dir, restored)))
         if verdict is None:
-            self._admit(ticket, handle, qc, priority, abs_deadline, weight)
+            self._admit(ticket, handle, qc, priority, abs_deadline, weight,
+                        checkpoint_dir=checkpoint_dir,
+                        restored=restored)
         elif reject_now:
             self._finish(ticket, REJECTED, reason=verdict[1])
         return ticket
@@ -620,7 +654,10 @@ class PlatformService:
 
     def _admit(self, ticket: JobTicket, handle: DatasetHandle,
                qc: QueryClass, priority: int,
-               abs_deadline: Optional[float], weight: float) -> None:
+               abs_deadline: Optional[float], weight: float,
+               checkpoint_dir: Optional[str] = None,
+               restored: Optional[Dict[int, Dict[str, Any]]] = None
+               ) -> None:
         """Hand an already-reserved ticket (present in ``_active``) to
         the pool."""
         with self._lock:
@@ -652,6 +689,44 @@ class PlatformService:
                 ticket.estimator, ticket.epsilon,
                 min_tasks=ticket.min_tasks)
 
+        # restored leaves enter the tree (and estimator) first, exactly
+        # as if those tasks had just completed; only the missing tasks
+        # go to the pool — the tree's fixed shape keeps the combined
+        # result bit-identical to an uninterrupted run (§12)
+        restored = restored or {}
+        for tid in sorted(restored):
+            ticket.tree.offer(tid, restored[tid])
+        ticket.tasks_restored = len(restored)
+        emit = ticket.tree.offer
+        if checkpoint_dir is not None:
+            ticket.checkpointer = JobCheckpointer(
+                checkpoint_dir, len(qc.plan.tasks),
+                every=self.spec.checkpoint_every, restored=restored,
+                injector=self.fault_injector)
+            tree_offer = emit
+
+            def emit(tid, v, _prev=tree_offer, _c=ticket.checkpointer):
+                _prev(tid, v)
+                _c.offer(tid, v)
+
+        if self.fault_injector is not None:
+            # last wrap: the injector's completion clock must tick only
+            # for leaves the pool actually executes this run (restored
+            # offers above bypass it, same as the driver path)
+            emit = self.fault_injector.wrap_emit(emit)
+
+        run_tasks = ([t for t in qc.plan.tasks
+                      if t.task_id not in restored]
+                     if restored else qc.plan.tasks)
+        if not run_tasks:
+            # everything was restored from the checkpoint — there is no
+            # task to schedule, so the pool would never observe a
+            # completion and the job would hang; finish directly off the
+            # fully-populated tree
+            ticket.started_at = time.monotonic()
+            self._on_job_done(ticket)
+            return
+
         def on_cancelled(n: int) -> None:
             # the pool's DRAINING flip dropped n queued tasks (counted
             # under the pool lock, before the completion that finishes
@@ -672,9 +747,9 @@ class PlatformService:
                         [ids[sid] for sid in task.sample_ids])
 
         job = PoolJob(
-            job_id=ticket.job_id, tasks=qc.plan.tasks, seed=ticket.seed,
+            job_id=ticket.job_id, tasks=run_tasks, seed=ticket.seed,
             run_batch=self._class_run_batch(qc),
-            emit=ticket.tree.offer,
+            emit=emit,
             on_done=lambda: self._on_job_done(ticket),
             on_error=lambda e: self._on_job_error(ticket, e),
             fetch=fetch, fuse_key=qc.fuse_key, cap=qc.cap,
@@ -708,12 +783,17 @@ class PlatformService:
         prefetcher = (build_prefetcher(n_workers)
                       if prefetch_enabled(
                           self.spec, self.datastore is not None) else None)
+        injector = self.fault_injector
         pool = ServicePool(
             n_workers, self.plat,
             cfg=sch.MultiJobConfig(
                 speculative=resolve_speculation(self.spec),
-                straggler_factor=self.spec.straggler_factor),
-            prefetcher=prefetcher)
+                straggler_factor=self.spec.straggler_factor,
+                lease_seconds=self.spec.lease_seconds),
+            prefetcher=prefetcher,
+            crash_hook=(injector.worker_tick
+                        if injector is not None else None),
+            max_respawns=self.spec.max_respawns)
         if self.datastore is not None and self.balanced:
             # a node turning degraded/down re-ranks every job's queue
             self.datastore.on_state_change = \
@@ -765,6 +845,11 @@ class PlatformService:
         if ticket.status != RUNNING:       # cancelled while in flight
             return
         try:
+            if ticket.checkpointer is not None:
+                # surface any parked async-save error: a job that "ran"
+                # but failed to persist its restore point must not
+                # report success (§12 durability contract)
+                ticket.checkpointer.finish()
             tree = ticket.tree
             if ticket.tasks_cancelled:
                 # DRAINed early: finalize over the executed subset in
@@ -850,8 +935,10 @@ class PlatformService:
                 with self._lock:
                     self._waiting.popleft()
                     self._active[ticket.job_id] = ticket   # reserve
-            handle, qc, priority, abs_deadline, weight = args
-            self._admit(ticket, handle, qc, priority, abs_deadline, weight)
+            (handle, qc, priority, abs_deadline, weight,
+             checkpoint_dir, restored) = args
+            self._admit(ticket, handle, qc, priority, abs_deadline, weight,
+                        checkpoint_dir=checkpoint_dir, restored=restored)
 
     # -- cancellation --------------------------------------------------------
     def cancel(self, ticket: JobTicket) -> bool:
@@ -885,7 +972,9 @@ class PlatformService:
     def _submit_simulated(self, handle: DatasetHandle, workload,
                           seed: int, *, epsilon: Optional[float] = None,
                           confidence: float = 0.95,
-                          min_tasks: int = 8) -> JobTicket:
+                          min_tasks: int = 8,
+                          checkpoint_dir: Optional[str] = None,
+                          resume_from: Optional[str] = None) -> JobTicket:
         """Virtual-time spec: run the job inline through the one-shot
         driver (a resident pool has no meaning in virtual time), reusing
         the handle's cached kneepoint so repeat queries still skip the
@@ -896,7 +985,8 @@ class PlatformService:
             kneepoint_sizes=self.spec.kneepoint_sizes)
         spec = dataclasses.replace(self.spec, seed=seed, knee_bytes=knee,
                                    epsilon=epsilon, confidence=confidence,
-                                   min_tasks=min_tasks)
+                                   min_tasks=min_tasks,
+                                   checkpoint_dir=checkpoint_dir)
         ticket = JobTicket(next(self._job_seq), handle, workload,
                            n_tasks=0, statistic=workload.statistic,
                            seed=seed)
@@ -920,12 +1010,13 @@ class PlatformService:
         ticket.admitted_at = ticket.started_at = time.monotonic()
         try:
             report = Platform(spec).run(handle.samples, handle.months,
-                                        workload)
+                                        workload, resume_from=resume_from)
         except BaseException as e:         # noqa: BLE001
             ticket.error = e
             self._finish(ticket, FAILED, reason=repr(e))
             return ticket
         ticket.n_tasks = report.n_tasks
+        ticket.tasks_restored = report.tasks_restored
         ticket._result = report.result
         ticket.device_dispatches = report.device_dispatches
         ticket.bytes_uploaded = report.bytes_uploaded
