@@ -80,8 +80,14 @@ MIN_SHARD_RATIO = 3.0
 # when the fault-free denominator is a fraction of a second on CI
 MAX_FAULT_MAKESPAN_RATIO = 1.5
 FAULT_MAKESPAN_ABS_SLACK = 0.05
+# unified telemetry (ISSUE 8): the enabled bus may cost at most this
+# factor of the disabled run's makespan (median over interleaved pairs;
+# the absolute slack keeps the gate stable when the denominator is a
+# fraction of a second on CI), and on/off must be bit-identical
+MAX_TELEMETRY_OVERHEAD = 1.05
+TELEMETRY_OVERHEAD_ABS_SLACK = 0.05
 SMOKE_MODULES = ("platform_overhead", "kernels", "service", "balance",
-                 "approx", "sharded", "faults")
+                 "approx", "sharded", "faults", "telemetry")
 
 
 def _check_wave_regression(structured: dict) -> list:
@@ -281,6 +287,69 @@ def _check_faults_regression(structured: dict) -> list:
     return failures
 
 
+def _check_telemetry_regression(structured: dict) -> list:
+    """ISSUE 8 gates over bench_telemetry's structured results: the
+    enabled bus stays within the overhead budget with results
+    bit-identical to telemetry-off on both backends (disabled records
+    exactly zero events), the exported trace carries ≥1 exec span per
+    executed task with monotone phase timestamps, and chaos runs keep
+    the ring bound."""
+    failures = []
+    ov = structured.get("overhead")
+    if ov:
+        limit = (MAX_TELEMETRY_OVERHEAD
+                 + TELEMETRY_OVERHEAD_ABS_SLACK
+                 / max(ov["median_off_s"], 1e-9))
+        if ov["median_ratio"] > limit:
+            failures.append(
+                f"telemetry overhead: enabled median makespan "
+                f"{ov['median_on_s']:.3f}s is {ov['median_ratio']:.3f}x "
+                f"disabled ({ov['median_off_s']:.3f}s) > "
+                f"{MAX_TELEMETRY_OVERHEAD}x budget (+ "
+                f"{TELEMETRY_OVERHEAD_ABS_SLACK}s slack)")
+        if not ov["bit_identical"]:
+            failures.append("telemetry overhead: an on/off pair's "
+                            "results diverged")
+    for backend, res in structured.get("identity", {}).items():
+        if not res["bit_identical"]:
+            failures.append(
+                f"telemetry identity/{backend}: result with telemetry "
+                f"on diverged from telemetry off")
+        if res["disabled_events"] != 0:
+            failures.append(
+                f"telemetry identity/{backend}: disabled bus recorded "
+                f"{res['disabled_events']} events (must be 0)")
+        if res["enabled_events"] <= 0:
+            failures.append(
+                f"telemetry identity/{backend}: enabled bus recorded "
+                f"no events")
+    tr = structured.get("trace")
+    if tr:
+        if not tr["spans_per_task_ok"]:
+            failures.append(
+                f"telemetry trace: {tr['exec_spans']} exec spans for "
+                f"{tr['tasks_settled']} settled tasks (need one span "
+                f"per executed task)")
+        if not tr["monotone_ok"]:
+            failures.append("telemetry trace: fetch/exec phase "
+                            "timestamps not monotone within a task")
+    chaos = structured.get("chaos")
+    if chaos:
+        if not chaos["all_bounded"]:
+            bad = [s for s, r in chaos["seeds"].items()
+                   if not r["ring_bounded"]]
+            failures.append(
+                f"telemetry chaos: ring bound {chaos['capacity']} "
+                f"violated on seeds {bad}")
+        if not chaos["all_bit_identical"]:
+            bad = [s for s, r in chaos["seeds"].items()
+                   if not r["bit_identical"]]
+            failures.append(
+                f"telemetry chaos: seeds {bad} diverged from the clean "
+                f"run with telemetry enabled")
+    return failures
+
+
 def _check_balance_regression(structured: dict) -> list:
     """ISSUE 4 gates over bench_balance's structured results."""
     failures = []
@@ -366,6 +435,13 @@ def _comparable_metrics(report: dict) -> dict:
             float(res["restored"]), "higher")
         out[f"faults.resume.{path}.executed_new"] = (
             float(res["executed_new"]), "lower")
+    # telemetry: the burst trace's span count equals settled tasks (a
+    # fixed 3-job burst with no early stop ⇒ deterministic); the
+    # overhead ratio is wall-clock and gated by its own absolute check
+    te = mods.get("telemetry", {}).get("structured", {})
+    if te.get("trace"):
+        out["telemetry.exec_spans"] = (
+            float(te["trace"]["exec_spans"]), "higher")
     # bench_balance's makespan ratio is wall-clock-derived, so it is
     # gated by its own MIN_BALANCE_RATIO check, not compared here
     return out
@@ -425,6 +501,7 @@ _STRUCTURED_CHECKS = {
     "approx": _check_approx_regression,
     "sharded": _check_sharded_regression,
     "faults": _check_faults_regression,
+    "telemetry": _check_telemetry_regression,
 }
 
 
@@ -459,7 +536,7 @@ def main(argv=None) -> int:
                             bench_kernels, bench_kneepoint,
                             bench_platform_overhead, bench_reduce_sim,
                             bench_service, bench_sharded,
-                            bench_task_sizing)
+                            bench_task_sizing, bench_telemetry)
     modules = [
         # balance first: its FIFO-vs-balanced wall-clock ratio is the
         # noise-sensitive gate, and the JAX modules leave threadpools
@@ -477,6 +554,7 @@ def main(argv=None) -> int:
         ("approx", bench_approx),
         ("sharded", bench_sharded),
         ("faults", bench_faults),
+        ("telemetry", bench_telemetry),
     ]
 
     report = {"schema": 1, "smoke": args.smoke, "modules": {}}

@@ -186,6 +186,10 @@ class ReplicatedDataStore:
         # fired (outside the lock) on HEALTHY/DEGRADED/DOWN transitions so
         # the scheduler can re-rank ready tasks the moment a node turns
         self.on_state_change: Optional[Callable[[DataNode], None]] = None
+        # optional repro.platform.telemetry.TelemetryBus the driver or
+        # service attaches (data-plane events: fetch_start/done/failed,
+        # node_state_change with the EMA/score behind each transition)
+        self.telemetry = None
 
     # -- data placement ------------------------------------------------------
     def put_all(self, samples: Dict[int, np.ndarray],
@@ -398,8 +402,10 @@ class ReplicatedDataStore:
         with self._lock:
             changed = node.state != state
             node.state = state
-        if changed and self.on_state_change is not None:
-            self.on_state_change(node)
+        if changed:
+            self._emit_state_change(node)
+            if self.on_state_change is not None:
+                self.on_state_change(node)
 
     def _refresh_state_locked(self, node: DataNode) -> Optional[DataNode]:
         """Recompute a node's availability from its counters/EMA; returns
@@ -458,9 +464,17 @@ class ReplicatedDataStore:
                                  else (1 - a) * node.resp_ema + a * took)
             changed = [n for n in self.nodes
                        if self._refresh_state_locked(n) is not None]
-        if self.on_state_change is not None:
-            for n in changed:
+        for n in changed:
+            self._emit_state_change(n)
+            if self.on_state_change is not None:
                 self.on_state_change(n)
+
+    def _emit_state_change(self, node: DataNode) -> None:
+        bus = self.telemetry
+        if bus is not None:
+            bus.emit("node_state_change", node=node.node_id,
+                     state=node.state, resp_ema=node.resp_ema,
+                     consecutive_failures=node.consecutive_failures)
 
     # -- fetch path ----------------------------------------------------------
     def _claim_locked(self, sample_id: int,
@@ -505,6 +519,10 @@ class ReplicatedDataStore:
                 snap = node.inflight if node is not None else 0
             if node is None:
                 break
+            bus = self.telemetry
+            if bus is not None:
+                bus.emit("fetch_start", sample_id=sample_id,
+                         node=node.node_id)
             try:
                 data, took = node.fetch(sample_id, inflight=snap)
             except BaseException as e:     # noqa: BLE001
@@ -512,6 +530,9 @@ class ReplicatedDataStore:
                 tried.append(node.node_id)
                 with self._lock:
                     node.inflight -= 1
+                if bus is not None:
+                    bus.emit("fetch_failed", sample_id=sample_id,
+                             node=node.node_id)
                 self._record_outcome(node, None)
                 if rec.is_permanent(e):
                     break
@@ -523,6 +544,9 @@ class ReplicatedDataStore:
                 continue
             with self._lock:
                 node.inflight -= 1
+            if bus is not None:
+                bus.emit("fetch_done", sample_id=sample_id,
+                         node=node.node_id, took=took)
             self._record_outcome(node, took)
             self._observe(took)
             return data
@@ -550,16 +574,25 @@ class ReplicatedDataStore:
 
         def one(claim):
             sid, node, snap = claim
+            bus = self.telemetry
+            if bus is not None:
+                bus.emit("fetch_start", sample_id=sid, node=node.node_id)
             try:
                 data, took = node.fetch(sid, inflight=snap)
             except BaseException:          # noqa: BLE001
                 with self._lock:
                     node.inflight -= 1
+                if bus is not None:
+                    bus.emit("fetch_failed", sample_id=sid,
+                             node=node.node_id)
                 self._record_outcome(node, None)
                 # failover path re-claims under the lock (different node)
                 return sid, None, None
             with self._lock:
                 node.inflight -= 1
+            if bus is not None:
+                bus.emit("fetch_done", sample_id=sid, node=node.node_id,
+                         took=took)
             self._record_outcome(node, took)
             return sid, data, took
 

@@ -140,7 +140,8 @@ class TwoPhaseScheduler:
     def __init__(self, n_workers: int, tasks: Sequence[Task],
                  cfg: SchedulerConfig = SchedulerConfig(), *,
                  locality_score: Optional[Callable[[Task], float]] = None,
-                 bucket_key: Optional[Callable[[Task], Any]] = None):
+                 bucket_key: Optional[Callable[[Task], Any]] = None,
+                 telemetry=None):
         self.cfg = cfg
         self.n_workers = n_workers
         self.backlog: deque[Task] = deque(tasks)
@@ -165,6 +166,14 @@ class TwoPhaseScheduler:
         self.lost_tasks = 0                # dropped permanently (degraded)
         self.results: List[TaskResult] = []
         self.depth_trace: List[int] = []   # dynamic-k after each completion
+        # one aggregation path (DESIGN.md §13): the bus's aggregator owns
+        # the depth_trace appends; a scheduler built without a bus gets a
+        # fresh disabled one (aggregation still runs, ring stays empty)
+        if telemetry is None:
+            from repro.platform.telemetry import null_bus
+            telemetry = null_bus()
+        self.telemetry = telemetry
+        telemetry.bind_depths(self.depth_trace)
         self.avg_exec = None
         self.avg_fetch = None
         self._rng = np.random.default_rng(cfg.seed)
@@ -248,10 +257,14 @@ class TwoPhaseScheduler:
         if task.task_id not in self._started_at:
             self._started_at[task.task_id] = t_now
 
-    def on_task_complete(self, result: TaskResult) -> List[Tuple[int, Task]]:
+    def on_task_complete(self, result: TaskResult,
+                         ts: Optional[float] = None
+                         ) -> List[Tuple[int, Task]]:
         """Record a result; return new (worker, task) queue assignments.
         First completion wins — a speculative duplicate's second
-        completion is ignored (per-task seeds make both bit-identical)."""
+        completion is ignored (per-task seeds make both bit-identical).
+        ``ts`` stamps the settle event in virtual time (simulated
+        backend); wall-time drivers leave it unset."""
         self.inflight_by_worker.pop(result.worker_id, None)
         self.claims_by_worker.get(result.worker_id, {}).pop(
             result.task_id, None)
@@ -272,7 +285,12 @@ class TwoPhaseScheduler:
         w = result.worker_id
         out: List[Tuple[int, Task]] = []
         depth = self.queue_depth()
-        self.depth_trace.append(depth)
+        # the aggregation path appends ``depth`` to self.depth_trace
+        self.telemetry.emit(
+            "task_settled", ts=ts, task_id=result.task_id,
+            worker=result.worker_id, depth=depth,
+            fetch_seconds=result.fetch_time,
+            exec_seconds=result.exec_time)
         # batched refill: top this worker's queue up to k (two-choice may
         # divert some of the batch to a shorter queue)
         while self.backlog and len(self.queues[w]) < depth:
@@ -396,6 +414,8 @@ class TwoPhaseScheduler:
             dropped.extend(q)
             q.clear()
         self.cancelled_tasks += len(dropped)
+        if dropped:
+            self.telemetry.emit("job_draining", n_cancelled=len(dropped))
         return dropped
 
     def on_worker_failure(self, worker: int) -> List[Task]:
@@ -456,6 +476,8 @@ class TwoPhaseScheduler:
             requeue.append(t)
         self.backlog.extendleft(reversed(requeue))
         self.reclaimed_tasks += len(requeue)
+        self.telemetry.emit("worker_crash", worker=worker,
+                            reclaimed=len(requeue), respawn=respawn)
         if not respawn:
             self._alive[worker] = False
         return requeue
@@ -484,6 +506,10 @@ class TwoPhaseScheduler:
             self.backlog.appendleft(task)
             self.reclaimed_tasks += 1
             out.append(task)
+        if out:
+            self.telemetry.emit(
+                "lease_reclaimed", n=len(out),
+                task_ids=tuple(t.task_id for t in out))
         return out
 
     def on_tasks_lost(self, worker: int, tasks: Sequence[Task]) -> None:
@@ -585,8 +611,13 @@ class MultiJobScheduler:
     """
 
     def __init__(self, n_workers: int,
-                 cfg: MultiJobConfig = MultiJobConfig()):
+                 cfg: MultiJobConfig = MultiJobConfig(), *,
+                 telemetry=None):
         self.cfg = cfg
+        if telemetry is None:
+            from repro.platform.telemetry import null_bus
+            telemetry = null_bus()
+        self.telemetry = telemetry
         self.n_workers = max(n_workers, 1)
         self.jobs: Dict[int, ServiceJob] = {}
         self._rr: deque[int] = deque()      # active round-robin order
@@ -811,6 +842,13 @@ class MultiJobScheduler:
             j.inflight_tasks[t.task_id] = t
             j.started_at.setdefault(t.task_id, now)
             self._record_claim(worker, j.job_id, t, now)
+        if batch:
+            by_job: Dict[int, List[int]] = {}
+            for j, t in batch:
+                by_job.setdefault(j.job_id, []).append(t.task_id)
+            for jid, tids in by_job.items():
+                self.telemetry.emit("task_claimed", job_id=jid,
+                                    task_ids=tuple(tids), worker=worker)
         return batch
 
     def _record_claim(self, worker: Optional[int], job_id: int,
@@ -907,6 +945,10 @@ class MultiJobScheduler:
         job.inflight -= 1
         duplicate = (task_id is not None and task_id in job.completed_ids)
         if not duplicate:
+            self.telemetry.emit(
+                "task_settled", job_id=job_id, task_id=task_id,
+                worker=worker, exec_seconds=exec_seconds,
+                speculative=speculative)
             job.completed += 1
             if task_id is not None:
                 job.completed_ids.add(task_id)
@@ -945,6 +987,7 @@ class MultiJobScheduler:
         claim time — so results are bit-identical to the fault-free
         run.  Returns the requeued (job_id, task) pairs."""
         self.worker_crashes += 1
+        self.telemetry.emit("worker_crash", worker=worker)
         claims = self.claimed_by.pop(worker, {})
         requeued: List[Tuple[int, Task]] = []
         for (jid, tid), task in claims.items():
@@ -988,6 +1031,11 @@ class MultiJobScheduler:
                 self._rr.append(jid)
             self.reclaimed_tasks += 1
             out.append((jid, task))
+        if out:
+            self.telemetry.emit(
+                "lease_reclaimed", n=len(out),
+                task_ids=tuple(t.task_id for _, t in out),
+                job_ids=tuple(jid for jid, _ in out))
         return out
 
     def on_task_lost(self, job_id: int, task_id: int,
@@ -1062,6 +1110,7 @@ def simulate_job(
     locality_score: Optional[Callable[[Task], float]] = None,
     bucket_key: Optional[Callable[[Task], Any]] = None,
     stopper=None,
+    telemetry=None,
 ) -> SimOutcome:
     """Run the two-phase scheduler under virtual time.  Prefetch overlap:
     a task's data fetch for queued work proceeds while the previous task
@@ -1077,7 +1126,8 @@ def simulate_job(
         try:
             return _simulate_once(tasks, alive, params, cfg, restarts,
                                   locality_score=locality_score,
-                                  bucket_key=bucket_key, stopper=stopper)
+                                  bucket_key=bucket_key, stopper=stopper,
+                                  telemetry=telemetry)
         except JobFailure as e:
             restarts += 1
             if restarts > max_restarts:
@@ -1097,13 +1147,14 @@ def simulate_job(
 
 def _simulate_once(tasks, workers, params, cfg, restarts, *,
                    locality_score=None, bucket_key=None,
-                   stopper=None) -> SimOutcome:
+                   stopper=None, telemetry=None) -> SimOutcome:
     """Worker identity inside the scheduler is positional (0..n-1); the
     SimWorker.worker_id is only used for reporting (survivor restarts
     renumber positions but keep ids)."""
     sched = TwoPhaseScheduler(len(workers), tasks, cfg,
                               locality_score=locality_score,
-                              bucket_key=bucket_key)
+                              bucket_key=bucket_key, telemetry=telemetry)
+    bus = sched.telemetry
     now = params.startup_time
     busy: Dict[int, float] = {w.worker_id: 0.0 for w in workers}
     # event heap: (time, seq, kind, worker_index, task)
@@ -1127,6 +1178,8 @@ def _simulate_once(tasks, workers, params, cfg, restarts, *,
         if t is None:
             continue
         sched.on_task_start(widx, t, now)
+        bus.emit("task_claimed", ts=now, task_ids=(t.task_id,),
+                 worker=widx)
         total, fetch, ex = task_cost(workers[widx], t, queue_warm=False)
         heapq.heappush(heap, (now + total, next(seq), "done", widx, t))
         busy[workers[widx].worker_id] += total
@@ -1138,6 +1191,8 @@ def _simulate_once(tasks, workers, params, cfg, restarts, *,
         nxt = sched.on_worker_idle(widx, at)
         if nxt is not None:
             sched.on_task_start(widx, nxt, at)
+            bus.emit("task_claimed", ts=at, task_ids=(nxt.task_id,),
+                     worker=widx)
             total, _, _ = task_cost(workers[widx], nxt, queue_warm=True)
             heapq.heappush(heap, (at + total, next(seq), "done", widx, nxt))
             busy[workers[widx].worker_id] += total
@@ -1184,7 +1239,7 @@ def _simulate_once(tasks, workers, params, cfg, restarts, *,
         # a straggler superseded by its speculative copy doesn't extend
         # the job (its late completion is discarded)
         is_dup = task.task_id in sched._completed
-        sched.on_task_complete(res)
+        sched.on_task_complete(res, ts=now)
         if not is_dup:
             makespan = max(makespan, now)
             if stopper is not None:
@@ -1231,8 +1286,13 @@ class ThreadedRunner:
                  locality_score: Optional[Callable[[Task], float]] = None,
                  prefetcher=None, stopper=None,
                  crash_hook: Optional[Callable[[int], None]] = None,
-                 max_respawns: int = 2):
+                 max_respawns: int = 2,
+                 telemetry=None):
         self.n_workers = n_workers
+        if telemetry is None:
+            from repro.platform.telemetry import null_bus
+            telemetry = null_bus()
+        self.telemetry = telemetry
         self.run_task = run_task
         self.fetch = fetch
         self.cfg = cfg
@@ -1268,7 +1328,8 @@ class ThreadedRunner:
     def run_job(self, tasks: Sequence[Task]) -> List[TaskResult]:
         sched = TwoPhaseScheduler(self.n_workers, tasks, self.cfg,
                                   locality_score=self.locality_score,
-                                  bucket_key=self.batch_key)
+                                  bucket_key=self.batch_key,
+                                  telemetry=self.telemetry)
         self.last_scheduler = sched
         if self.on_scheduler is not None:
             self.on_scheduler(sched)
@@ -1297,6 +1358,11 @@ class ThreadedRunner:
                                 sched.on_task_start(wid, x)
                         else:
                             sched.on_task_start(wid, t)
+                        sched.telemetry.emit(
+                            "task_claimed",
+                            task_ids=tuple(x.task_id for x in batch)
+                            if batch is not None else (t.task_id,),
+                            worker=wid)
                         if prefetcher is not None:
                             # snapshot the next wave's tasks under the
                             # lock; their fetches go in flight while THIS
@@ -1413,6 +1479,8 @@ class ThreadedRunner:
                 if respawns[w] < self.max_respawns:
                     respawns[w] += 1
                     self.worker_respawns += 1
+                    sched.telemetry.emit("worker_respawn", worker=w,
+                                         respawn_no=respawns[w])
                     nth = threading.Thread(target=worker_loop, args=(w,))
                     threads[w] = nth
                     nth.start()

@@ -59,3 +59,17 @@ from repro.platform.service import (  # noqa: F401
     PlatformService,
     QueryClass,
 )
+from repro.platform.telemetry import (  # noqa: F401
+    EVENT_KINDS,
+    Event,
+    MetricsRegistry,
+    TelemetryBus,
+    TelemetryConfig,
+    TelemetrySampler,
+    build_trace,
+    null_bus,
+    render_report,
+    resolve_telemetry_config,
+    write_report,
+    write_trace,
+)

@@ -65,6 +65,7 @@ class PlatformBackend(Protocol):
             on_scheduler: Optional[Callable[[Any], None]] = None,
             stopper=None,
             crash_hook: Optional[Callable[[int], None]] = None,
+            telemetry=None,
             ) -> BackendOutcome:
         """Execute ``tasks``; stream each task's partial through ``emit``.
         ``shape_key(task)`` identifies the task's compiled block shape
@@ -85,7 +86,10 @@ class PlatformBackend(Protocol):
         pending tasks and the job drains (DESIGN.md §10);
         ``crash_hook(worker_id)`` is a fault-injection tick called per
         claim — it may raise :class:`~repro.core.recovery.WorkerCrash`
-        to kill that worker mid-task (DESIGN.md §12)."""
+        to kill that worker mid-task (DESIGN.md §12);
+        ``telemetry`` is a
+        :class:`~repro.platform.telemetry.TelemetryBus` the backend
+        threads scheduler events through (disabled bus = no-op sink)."""
         ...
 
 
@@ -103,7 +107,8 @@ class ThreadedBackend:
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
             shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
             locality_score=None, prefetcher=None, on_scheduler=None,
-            stopper=None, crash_hook=None, max_respawns=2):
+            stopper=None, crash_hook=None, max_respawns=2,
+            telemetry=None):
         assert compute is not None, "threaded backend needs real compute"
 
         def run_task(task: sch.Task):
@@ -153,7 +158,8 @@ class ThreadedBackend:
                                     prefetcher=prefetcher,
                                     stopper=stopper,
                                     crash_hook=crash_hook,
-                                    max_respawns=max_respawns)
+                                    max_respawns=max_respawns,
+                                    telemetry=telemetry)
         runner.on_scheduler = on_scheduler
         t0 = time.perf_counter()
         time.sleep(plat.startup_time)
@@ -225,11 +231,14 @@ class ServicePool:
                  cfg: Optional[sch.MultiJobConfig] = None,
                  prefetcher=None,
                  crash_hook: Optional[Callable[[int], None]] = None,
-                 max_respawns: int = 2):
+                 max_respawns: int = 2,
+                 telemetry=None):
         self.n_workers = max(n_workers, 1)
         self.plat = plat
         self.sched = sch.MultiJobScheduler(self.n_workers,
-                                           cfg or sch.MultiJobConfig())
+                                           cfg or sch.MultiJobConfig(),
+                                           telemetry=telemetry)
+        self.telemetry = self.sched.telemetry
         # core.prefetch.TaskPrefetcher: next waves' data-node fetches go
         # in flight while the current wave executes
         self.prefetcher = prefetcher
@@ -313,6 +322,8 @@ class ServicePool:
                     if self._respawns.get(w, 0) < self.max_respawns:
                         self._respawns[w] = self._respawns.get(w, 0) + 1
                         self.worker_respawns += 1
+                        self.telemetry.emit("worker_respawn", worker=w,
+                                            respawn_no=self._respawns[w])
                         nth = threading.Thread(
                             target=self._worker_loop, args=(w,),
                             name=f"service-worker-{w}", daemon=True)
@@ -537,6 +548,8 @@ class ServicePool:
                     dropped = self.sched.cancel_job(jid)
                     if dropped:
                         drained.add(jid)
+                        self.telemetry.emit("job_draining", job_id=jid,
+                                            n_cancelled=len(dropped))
                         if pj.on_cancelled is not None:
                             pj.on_cancelled(len(dropped))
                     if jid not in self.sched.jobs and jid in self._jobs:
@@ -726,7 +739,8 @@ class SimulatedBackend:
     def run(self, tasks, *, compute, fetch, plat, cfg, emit,
             shape_key=None, compute_wave=None, max_wave=1, wave_cap=None,
             locality_score=None, prefetcher=None, on_scheduler=None,
-            stopper=None, crash_hook=None, max_respawns=2):
+            stopper=None, crash_hook=None, max_respawns=2,
+            telemetry=None):
         # calibration measures per-task costs; waves don't apply, and the
         # §3.5 fetch/execute overlap is already modeled in virtual time
         # (queue-warm cost = max(exec, fetch)), so the real prefetcher is
@@ -765,7 +779,8 @@ class SimulatedBackend:
         out = sch.simulate_job(tasks, self.workers, params, cfg,
                                max_restarts=self.max_restarts,
                                locality_score=locality_score,
-                               bucket_key=shape_key, stopper=stopper)
+                               bucket_key=shape_key, stopper=stopper,
+                               telemetry=telemetry)
         return BackendOutcome(
             makespan=out.makespan, results=out.results,
             queue_depths=list(out.queue_depths),

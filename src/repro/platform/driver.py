@@ -48,6 +48,7 @@ from repro.core import scheduler as sch
 from repro.core import slo as slo_mod
 from repro.core.prefetch import TaskPrefetcher
 from repro.platform import compute as pc
+from repro.platform import telemetry as tel
 from repro.platform.backend import (
     BackendOutcome,
     PlatformBackend,
@@ -121,7 +122,7 @@ class PlatformSpec:
     # while the current wave executes ("auto" engages with a datastore)
     prefetch: str = "auto"                 # "auto" | "on" | "off"
     # SLO-aware pool sizing: when set, worker count is chosen by
-    # slo.choose_cores over a pow2 ladder up to n_workers (needs a
+    # slo.choose_workers over a pow2 ladder up to n_workers (needs a
     # measured kneepoint for the throughput model; silently keeps
     # n_workers otherwise)
     slo_seconds: Optional[float] = None
@@ -153,6 +154,10 @@ class PlatformSpec:
     compute_values: bool = True            # sim: real partials vs cost-only
     sim_workers: Optional[Tuple[sch.SimWorker, ...]] = None
     scheduler: Optional[sch.SchedulerConfig] = None
+    # unified telemetry (DESIGN.md §13): None/False ⇒ disabled no-op
+    # sink (results bit-identical either way), True/"on" ⇒ record into
+    # bounded rings, or an explicit telemetry.TelemetryConfig
+    telemetry: Any = None
 
 
 @dataclasses.dataclass
@@ -187,7 +192,7 @@ class JobReport:
     wave_sizes: List[int] = dataclasses.field(default_factory=list)
     # balanced-scheduling observability (DESIGN.md §9)
     speculation_wins: int = 0
-    scale_decision: Optional[str] = None    # slo.choose_cores reasoning
+    scale_decision: Optional[str] = None    # slo.choose_workers reasoning
     n_workers_used: int = 0
     prefetch_stats: Optional[Dict[str, float]] = None
     # error-bounded approximate execution (DESIGN.md §10)
@@ -583,11 +588,12 @@ class JobCheckpointer:
 
     def __init__(self, directory: str, n_tasks: int, *, every: int = 8,
                  restored: Optional[Dict[int, Dict[str, Any]]] = None,
-                 injector=None, keep: int = 2):
+                 injector=None, keep: int = 2, telemetry=None):
         self.mgr = CheckpointManager(directory, keep=keep)
         self.n_tasks = n_tasks
         self.every = max(int(every), 1)
         self.injector = injector
+        self.telemetry = telemetry
         self.saves = 0
         self._lock = threading.Lock()
         self._partials: Dict[int, Dict[str, Any]] = dict(restored or {})
@@ -624,6 +630,9 @@ class JobCheckpointer:
                                                dtype=np.int64)
         self.mgr.save(step, state)
         self.saves += 1
+        if self.telemetry is not None:
+            self.telemetry.emit("checkpoint_saved", step=step,
+                                n_leaves=len(snap))
 
     def finish(self) -> None:
         """Join the in-flight save and surface any parked background
@@ -672,6 +681,11 @@ class Platform:
         self.datastore = datastore
         self.map_fn = map_fn
         self.fault_injector = fault_injector
+        # one bus per driver; the simulated backend emits virtual
+        # timestamps, so its bus must not fall back to wall time
+        self.telemetry = tel.TelemetryBus(
+            tel.resolve_telemetry_config(spec.telemetry),
+            virtual=(spec.backend == "simulated"))
 
     # -- config plumbing -----------------------------------------------------
     def _platform_config(self) -> PlatformConfig:
@@ -736,6 +750,13 @@ class Platform:
                         kneepoint_sizes=spec.kneepoint_sizes,
                         map_fn=self.map_fn)
         phases["plan"] = plan.plan_seconds
+        bus = self.telemetry
+        bus.emit("job_planned", n_tasks=len(plan.tasks),
+                 knee_bytes=plan.knee_bytes, engine=engine)
+        if self.datastore is not None:
+            self.datastore.telemetry = bus
+        if self.fault_injector is not None:
+            self.fault_injector.telemetry = bus
         t0 = time.perf_counter()
         if self.datastore is not None:
             self.datastore.put_all({i: samples[i] for i in plan.ids})
@@ -761,7 +782,7 @@ class Platform:
         run_tasks = ([t for t in tasks if t.task_id not in restored]
                      if restored else tasks)
 
-        # SLO-aware pool sizing (slo.choose_cores over the knee-derived
+        # SLO-aware pool sizing (slo.choose_workers over the knee-derived
         # throughput model); explicit sim worker lists are respected
         decision = (None if spec.sim_workers
                     else slo_worker_decision(spec, plat, plan))
@@ -770,8 +791,10 @@ class Platform:
 
         wave_on = self._wave_enabled(engine, workload)
         mesh = resolve_wave_mesh(spec, wave_on)
+        # all dispatch accounting flows through the bus's aggregation
+        # path into this one sink (DESIGN.md §13)
         dispatch = pc.DispatchStats()
-        dispatch_lock = threading.Lock()
+        bus.bind_dispatch(dispatch)
         block_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
         def compute_task(task: sch.Task):
@@ -783,10 +806,9 @@ class Platform:
             if self.map_fn is not None:
                 return self.map_fn(task, block, mo, task_seed)
             if engine in ("jnp", "pallas"):
-                with dispatch_lock:
-                    dispatch.device_dispatches += 1
-                    dispatch.bytes_uploaded += float(block.nbytes) + (
-                        float(mo.nbytes) if engine == "jnp" else 0.0)
+                bus.emit("task_dispatched", task_id=task.task_id,
+                         nbytes=float(block.nbytes) + (
+                             float(mo.nbytes) if engine == "jnp" else 0.0))
             return pc.run_map_task(block, mo, task_seed, workload, engine)
 
         fetch = None
@@ -827,18 +849,20 @@ class Platform:
                                      max_wave=spec.max_wave,
                                      warm_seed=spec.seed,
                                      mesh=mesh)
-            dispatch.bytes_uploaded += ctx.arena.nbytes
+            bus.emit("arena_upload", nbytes=float(ctx.arena.nbytes))
 
             def compute_wave(batch: List[sch.Task]):
                 seeds = np.asarray([spec.seed + t.task_id for t in batch],
                                    np.int32)
+                t_wave = bus.now()
                 values = ctx.run(batch, seeds)
-                with dispatch_lock:
-                    dispatch.device_dispatches += 1
-                    dispatch.wave_sizes.append(len(batch))
-                    # the arena is resident; a wave uploads only its slot
-                    # and seed vectors
-                    dispatch.bytes_uploaded += ctx.wave_bytes(len(batch))
+                # the arena is resident; a wave uploads only its slot
+                # and seed vectors
+                bus.emit("wave_dispatched", ts=t_wave,
+                         wave_size=len(batch),
+                         nbytes=ctx.wave_bytes(len(batch)),
+                         task_ids=tuple(t.task_id for t in batch),
+                         seconds=bus.now() - t_wave)
                 return values
         elif engine in ("jnp", "pallas"):
             seen = set()
@@ -904,12 +928,15 @@ class Platform:
         # injector's completion clock
         for tid in sorted(restored):
             emit(tid, restored[tid])
+        if restored:
+            bus.emit("checkpoint_restored", n=len(restored),
+                     task_ids=tuple(sorted(restored)))
         ckpt: Optional[JobCheckpointer] = None
         if spec.checkpoint_dir is not None and tree is not None:
             ckpt = JobCheckpointer(
                 spec.checkpoint_dir, len(tasks),
                 every=spec.checkpoint_every, restored=restored,
-                injector=self.fault_injector)
+                injector=self.fault_injector, telemetry=bus)
             prev_emit = emit
 
             def emit(tid, v, _prev=prev_emit, _c=ckpt):
@@ -935,7 +962,8 @@ class Platform:
                 stopper=stopper,
                 crash_hook=(injector.worker_tick
                             if injector is not None else None),
-                max_respawns=spec.max_respawns)
+                max_respawns=spec.max_respawns,
+                telemetry=bus)
             phases["execute"] = time.perf_counter() - t0
             if ckpt is not None:
                 # surface any parked async-save error: a job that "ran"
@@ -975,16 +1003,24 @@ class Platform:
         finally:
             if prefetcher is not None:
                 stats = prefetcher.stats()
-                dispatch.prefetch_hits += int(stats["prefetch_hits"])
-                dispatch.prefetch_misses += int(stats["prefetch_misses"])
+                bus.emit("prefetch_stats",
+                         hits=int(stats["prefetch_hits"]),
+                         misses=int(stats["prefetch_misses"]))
                 prefetcher.close()
             if self.datastore is not None:
                 self.datastore.on_state_change = None
+                self.datastore.telemetry = None
 
         if self.datastore is not None:
             for r in outcome.results:
                 self.datastore.report_exec_time(r.exec_time)
 
+        if stopper is not None:
+            ci = stopper.snapshot()
+            if ci is not None:
+                bus.emit("ci_snapshot", **ci.as_dict())
+        bus.emit("job_done", makespan=outcome.makespan,
+                 tasks_executed=len({r.task_id for r in outcome.results}))
         return self._report(plat, outcome, tasks, plan.total_bytes,
                             plan.knee_bytes, plan.knee_res, engine, phases,
                             result, reduce_info, dispatch=dispatch,

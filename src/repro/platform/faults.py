@@ -130,6 +130,9 @@ class FaultInjector:
     def __init__(self, plan: FaultPlan, store: Optional[Any] = None):
         self.plan = plan
         self._store = store
+        # optional repro.platform.telemetry.TelemetryBus the driver or
+        # service attaches; every fired event emits "fault_fired"
+        self.telemetry = None
         self._lock = threading.Lock()
         self._completions = 0
         self._claims: Dict[int, int] = {}
@@ -141,6 +144,13 @@ class FaultInjector:
 
     def attach_store(self, store: Any) -> None:
         self._store = store
+
+    def _emit_fired(self, e: FaultEvent) -> None:
+        bus = self.telemetry
+        if bus is not None:
+            bus.emit("fault_fired", fault_kind=e.kind, target=e.target,
+                     at_completions=e.at_completions,
+                     at_claims=e.at_claims, at_saves=e.at_saves)
 
     @property
     def fired(self) -> List[FaultEvent]:
@@ -158,6 +168,7 @@ class FaultInjector:
                 self._pending.remove(e)
                 self._fired.append(e)
         for e in due:
+            self._emit_fired(e)
             self._fire_node_event(e)
 
     def wrap_emit(self, emit: Optional[Callable[[int, Any], None]]
@@ -214,6 +225,7 @@ class FaultInjector:
                 self._pending.remove(fire)
                 self._fired.append(fire)
         if fire is not None:
+            self._emit_fired(fire)
             raise rec.WorkerCrash(
                 f"injected crash: worker {worker} at claim "
                 f"{self._claims[worker]}")
@@ -232,6 +244,7 @@ class FaultInjector:
                 self._pending.remove(fire)
                 self._fired.append(fire)
         if fire is not None:
+            self._emit_fired(fire)
             raise InjectedCrash(
                 f"injected crash: checkpoint save {self._saves}")
 

@@ -55,6 +55,7 @@ import numpy as np
 from repro.core import estimator as est_mod
 from repro.core import scheduler as sch
 from repro.platform import compute as pc
+from repro.platform import telemetry as tel
 from repro.platform.backend import PoolJob, ServicePool
 from repro.platform.driver import (
     JobCheckpointer,
@@ -438,7 +439,18 @@ class PlatformService:
         self.dispatch = pc.DispatchStats.bounded(4096)
         self.jobs_completed = 0
         self.jobs_rejected = 0
-        self.scale_decision: Optional[str] = None   # slo.choose_cores hint
+        self.scale_decision: Optional[str] = None   # slo.choose_workers hint
+        # unified telemetry (DESIGN.md §13): one bus per service session;
+        # the dispatch counters above are derived from its events through
+        # the bus's single aggregation path
+        self.telemetry = tel.TelemetryBus(
+            tel.resolve_telemetry_config(spec.telemetry))
+        self.telemetry.bind_dispatch(self.dispatch)
+        self.sampler = tel.TelemetrySampler(self.telemetry)
+        if datastore is not None:
+            datastore.telemetry = self.telemetry
+        if fault_injector is not None:
+            fault_injector.telemetry = self.telemetry
         self._pool: Optional[ServicePool] = None
         self._lock = threading.Lock()
         # serializes admission decisions with slot reservation, so two
@@ -451,6 +463,8 @@ class PlatformService:
         self._job_seq = itertools.count()
         self._ds_seq = itertools.count()
         self._closed = False
+        self._register_sampler_providers()
+        self.sampler.start()       # no-op unless telemetry is enabled
 
     # -- lifecycle -----------------------------------------------------------
     def __enter__(self) -> "PlatformService":
@@ -474,10 +488,12 @@ class PlatformService:
                 waiting = list(self._waiting)
                 self._waiting.clear()
                 pool = self._pool
+        self.sampler.stop()
         for ticket, _args in waiting:
             self._finish(ticket, REJECTED, reason="service closed")
         if self.datastore is not None:
             self.datastore.on_state_change = None
+            self.datastore.telemetry = None
         if pool is not None:
             pool.close()
         with self._lock:
@@ -588,8 +604,8 @@ class PlatformService:
         ticket.epsilon, ticket.confidence = eff_epsilon, eff_conf
         ticket.min_tasks = eff_min
         if built_now:
-            with self._stats_lock:
-                self.dispatch.bytes_uploaded += qc.arena_bytes
+            self.telemetry.emit("arena_upload", nbytes=qc.arena_bytes,
+                                job_id=ticket.job_id)
             ticket.bytes_uploaded += qc.arena_bytes
         self._tickets[ticket.job_id] = ticket
 
@@ -620,6 +636,9 @@ class PlatformService:
                         restored=restored)
         elif reject_now:
             self._finish(ticket, REJECTED, reason=verdict[1])
+        else:
+            self.telemetry.emit("job_queued", job_id=ticket.job_id,
+                                reason=verdict[1])
         return ticket
 
     def _admission_verdict(self, ticket: JobTicket,
@@ -678,6 +697,8 @@ class PlatformService:
                 self._finish(ticket, REJECTED, reason="service closed")
             return
         ticket.admitted_at = time.monotonic()
+        self.telemetry.emit("job_admitted", job_id=ticket.job_id,
+                            n_tasks=ticket.n_tasks)
         # every job carries an estimator (partial() streams value + CI
         # for free); only an epsilon target adds the stopping rule
         ticket.estimator = est_mod.SubsampleEstimator(ticket.statistic,
@@ -697,12 +718,16 @@ class PlatformService:
         for tid in sorted(restored):
             ticket.tree.offer(tid, restored[tid])
         ticket.tasks_restored = len(restored)
+        if restored:
+            self.telemetry.emit("checkpoint_restored", n=len(restored),
+                                job_id=ticket.job_id)
         emit = ticket.tree.offer
         if checkpoint_dir is not None:
             ticket.checkpointer = JobCheckpointer(
                 checkpoint_dir, len(qc.plan.tasks),
                 every=self.spec.checkpoint_every, restored=restored,
-                injector=self.fault_injector)
+                injector=self.fault_injector,
+                telemetry=self.telemetry)
             tree_offer = emit
 
             def emit(tid, v, _prev=tree_offer, _c=ticket.checkpointer):
@@ -769,7 +794,7 @@ class PlatformService:
 
     def _build_pool(self, qc: QueryClass) -> ServicePool:
         """The resident pool, built on first admit: sized by
-        slo.choose_cores when the spec carries an SLO (the first query
+        slo.choose_workers when the spec carries an SLO (the first query
         class's knee curve calibrates the throughput model), with the
         balanced-scheduling pieces wired in — straggler speculation in
         the multi-job scheduler and the dynamic-k prefetcher over the
@@ -793,7 +818,8 @@ class PlatformService:
             prefetcher=prefetcher,
             crash_hook=(injector.worker_tick
                         if injector is not None else None),
-            max_respawns=self.spec.max_respawns)
+            max_respawns=self.spec.max_respawns,
+            telemetry=self.telemetry)
         if self.datastore is not None and self.balanced:
             # a node turning degraded/down re-ranks every job's queue
             self.datastore.on_state_change = \
@@ -807,12 +833,15 @@ class PlatformService:
                 tasks = [t for _, t in items]
                 seeds = np.asarray([pj.seed + t.task_id
                                     for pj, t in items], np.int32)
+                t_wave = self.telemetry.now()
                 values = qc.wave_ctx.run(tasks, seeds)
                 nbytes = qc.wave_ctx.wave_bytes(len(items))
-                with self._stats_lock:
-                    self.dispatch.device_dispatches += 1
-                    self.dispatch.wave_sizes.append(len(items))
-                    self.dispatch.bytes_uploaded += nbytes
+                self.telemetry.emit(
+                    "wave_dispatched", ts=t_wave, wave_size=len(items),
+                    nbytes=nbytes,
+                    seconds=self.telemetry.now() - t_wave,
+                    job_ids=tuple(pj.job_id for pj, _ in items),
+                    task_ids=tuple(t.task_id for _, t in items))
                 for jid in dict.fromkeys(pj.job_id for pj, _ in items):
                     t = self._tickets.get(jid)
                     if t is not None:
@@ -828,9 +857,10 @@ class PlatformService:
                 if qc.engine in ("jnp", "pallas"):
                     nbytes = float(block.nbytes) + (
                         float(mo.nbytes) if qc.engine == "jnp" else 0.0)
-                    with self._stats_lock:
-                        self.dispatch.device_dispatches += 1
-                        self.dispatch.bytes_uploaded += nbytes
+                    self.telemetry.emit("task_dispatched",
+                                        job_id=pj.job_id,
+                                        task_id=task.task_id,
+                                        nbytes=nbytes)
                     t = self._tickets.get(pj.job_id)
                     if t is not None:
                         t.device_dispatches += 1
@@ -918,6 +948,12 @@ class PlatformService:
             ticket.tree = None
             ticket.estimator = None
             ticket.stopper = None
+        self.telemetry.emit(
+            {DONE: "job_done", FAILED: "job_failed",
+             REJECTED: "job_rejected", CANCELLED: "job_cancelled"}[status],
+            job_id=ticket.job_id,
+            tasks_executed=ticket.tasks_executed,
+            **({} if ticket.reason is None else {"reason": ticket.reason}))
         ticket._done.set()
         self._drain_waiting()
         return True
@@ -1054,3 +1090,71 @@ class PlatformService:
         if self.scale_decision is not None:
             out["scale_decision"] = self.scale_decision
         return out
+
+    def telemetry_snapshot(self) -> Dict[str, Any]:
+        """``status_monitor``-style view (DESIGN.md §13): the bus's
+        counters/gauges/histograms and recent time-series samples, plus
+        the service-level :meth:`stats`."""
+        snap = self.telemetry.snapshot()
+        snap["service"] = self.stats()
+        return snap
+
+    def write_trace(self, path: str) -> Dict[str, Any]:
+        """Export the session's per-task spans + wave flows as Chrome
+        trace-event JSON (open in Perfetto / ``chrome://tracing``)."""
+        return tel.write_trace(self.telemetry, path)
+
+    def write_report(self, path: str,
+                     title: str = "platform service") -> None:
+        """Write a dependency-free, self-contained HTML report for this
+        service session."""
+        tel.write_report(self.telemetry, path, title=title)
+
+    def _register_sampler_providers(self) -> None:
+        """Periodic time-series rows (DESIGN.md §13): queue depth and
+        worker liveness from the pool, per-node score/state from the
+        data plane, CI half-width per error-bounded job.  Providers are
+        best-effort — the sampler drops a provider's row for a tick if
+        it raises — and the sampler thread itself only runs when the
+        bus is enabled."""
+        state_code = {"healthy": 0.0, "degraded": 1.0, "down": 2.0}
+
+        def service_row() -> Dict[str, float]:
+            with self._lock:
+                row = {"jobs_active": float(len(self._active)),
+                       "jobs_waiting": float(len(self._waiting))}
+            pool = self._pool
+            if pool is not None:
+                row["pending_tasks"] = float(pool.pending_tasks())
+                row["workers_alive"] = float(sum(
+                    1 for th in list(pool._threads.values())
+                    if th.is_alive()))
+            return row
+
+        def nodes_row() -> Dict[str, float]:
+            if self.datastore is None:
+                return {}
+            row: Dict[str, float] = {}
+            for nid, score in self.datastore.node_scores().items():
+                row[f"node{nid}.score"] = (
+                    score if score != float("inf") else -1.0)
+            for nid, state in self.datastore.node_states().items():
+                row[f"node{nid}.state"] = state_code.get(state, -1.0)
+            return row
+
+        def ci_row() -> Dict[str, float]:
+            with self._lock:
+                tickets = list(self._active.values())
+            row: Dict[str, float] = {}
+            for t in tickets:
+                est = t.estimator
+                if est is None or t.epsilon is None:
+                    continue
+                snap = est.estimate()
+                if snap is not None:
+                    row[f"job{t.job_id}.ci_half_width"] = snap.half_width
+            return row
+
+        self.sampler.add_provider("service", service_row)
+        self.sampler.add_provider("data", nodes_row)
+        self.sampler.add_provider("ci", ci_row)
