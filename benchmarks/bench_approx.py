@@ -32,6 +32,7 @@ from repro.core.estimator import EstimateSnapshot
 from repro.data.synthetic import (EagletSpec, NetflixSpec, eaglet_dataset,
                                   netflix_dataset)
 from repro.platform import (
+    ApproxOptions,
     MomentsSpec,
     Platform,
     PlatformService,
@@ -70,10 +71,15 @@ def _frontier_workload(rows: List[Row], name: str, workload, samples,
                        months, knee: float, *,
                        smoke: bool) -> Optional[dict]:
     spec = PlatformSpec(platform="BTS", n_workers=2, backend="simulated",
-                        knee_bytes=knee, seed=0, min_tasks=8)
+                        knee_bytes=knee, seed=0,
+                        approx=ApproxOptions(min_tasks=8))
 
     def run(eps: float):
-        return Platform(dataclasses.replace(spec, epsilon=eps)).run(
+        # grouped replace; the flat mirror rides along so the spec shim
+        # sees no conflict
+        approx = dataclasses.replace(spec.approx, epsilon=eps)
+        return Platform(dataclasses.replace(
+            spec, approx=approx, epsilon=eps)).run(
             samples, months, workload)
 
     pilot = run(PILOT_EPS)                  # never stops: exact + h_N
@@ -153,8 +159,9 @@ def _burst(epsilon: Optional[float]):
         svc.submit(handle, WL, seed=99).result(timeout=300)   # class build
         base = svc.stats()["device_dispatches"]
         t0 = time.perf_counter()
-        eps_ticket = svc.submit(handle, WL, seed=0, epsilon=epsilon,
-                                min_tasks=8)
+        eps_ticket = svc.submit(handle, WL, seed=0,
+                                approx=ApproxOptions(epsilon=epsilon,
+                                                     min_tasks=8))
         peers = [svc.submit(handle, WL, seed=s) for s in (1, 2, 3)]
         results = {t.seed: t.result(timeout=300)
                    for t in [eps_ticket] + peers}

@@ -1,0 +1,259 @@
+"""Worker-side block cache benchmark (ISSUE 9): repeat/overlap fetch
+traffic, cache-aware scheduling composition, disabled-cache identity.
+
+Sections (all published via ``STRUCTURED`` for BENCH_platform.json and
+the run.py regression gates):
+
+* **repeat** — the same query runs 8× over one persistent datastore.
+  Cache-off refetches every block every run; cache-on fills on run 1 and
+  serves runs 2-8 from the worker-side :class:`BlockCache`.  The
+  acceptance gate: total data-node fetch traffic (``fetch_counts``) cut
+  ≥ ``MIN_CACHE_FETCH_RATIO``×, every run bit-identical across arms.
+* **overlap** — a :class:`PlatformService` runs 8 jobs over one
+  registered dataset (the multi-tenant overlap case).  Same gate: jobs
+  2-8 ride job 1's cache fill, traffic cut ≥ 5×, results bit-identical
+  per seed.
+* **disabled** — ``CacheOptions(capacity_bytes=0)`` (the default) must
+  behave exactly like the pre-cache platform: identical fetch counts
+  and bit-identical results vs a spec with no cache group at all.
+* **thrash** (ungated) — capacity of half the dataset: admission +
+  eviction churn under both policies; hit rates and eviction counts are
+  reported for trend.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.datastore import ReplicatedDataStore, ReplicationPolicy
+from repro.platform import (
+    CacheOptions,
+    Platform,
+    PlatformService,
+    PlatformSpec,
+    ScheduleOptions,
+)
+from repro.platform.compute import MomentsSpec
+
+STRUCTURED: Dict[str, dict] = {}
+
+WL = MomentsSpec(draws=4, draw_size=16)
+SAMPLE_LEN = 64
+N_SAMPLES = 96
+KNEE = 4 * SAMPLE_LEN * 4                  # 4 samples/task → 24 tasks
+BASE_LAT = 2e-3                            # per-fetch data-node latency
+REPEATS = 8                                # runs/jobs per arm (gate ≥5×
+#   needs headroom: all-but-one served from cache ⇒ ratio ≈ REPEATS)
+DATASET_BYTES = N_SAMPLES * SAMPLE_LEN * 4
+CACHE = CacheOptions(capacity_bytes=1 << 20)   # covers the dataset
+
+
+def _dataset(n: int = N_SAMPLES, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    samples = {i: rng.standard_normal(SAMPLE_LEN).astype(np.float32)
+               for i in range(n)}
+    months = {i: np.zeros(SAMPLE_LEN, np.int32) for i in range(n)}
+    return samples, months
+
+
+def _store(n_nodes: int = 3) -> ReplicatedDataStore:
+    return ReplicatedDataStore(
+        n_initial=n_nodes,
+        policy=ReplicationPolicy(fetch_slo=BASE_LAT, window=10_000,
+                                 max_replicas=n_nodes),
+        latency=lambda nbytes: BASE_LAT,
+        select="response_time")
+
+
+def _spec(**kw) -> PlatformSpec:
+    base = dict(platform="BTS", n_workers=2, backend="threaded",
+                engine="numpy", knee_bytes=KNEE, seed=0,
+                startup_time=0.0,
+                schedule=ScheduleOptions(balanced="on", prefetch="on"))
+    base.update(kw)
+    return PlatformSpec(**base)
+
+
+def _total_fetches(store: ReplicatedDataStore) -> int:
+    return sum(store.fetch_counts().values())
+
+
+def _results_equal(a: dict, b: dict) -> bool:
+    return (set(a) == set(b)
+            and all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+                    for k in a))
+
+
+# ---------------------------------------------------------------------------
+# repeat queries through one persistent store: cache off vs on
+# ---------------------------------------------------------------------------
+
+
+def _repeat_arm(cache: CacheOptions, repeats: int = REPEATS):
+    """Run the same job ``repeats`` times against one datastore; return
+    (results, total fetch traffic, the store)."""
+    samples, months = _dataset()
+    store = _store()
+    store.put_all(samples, replication=2)
+    results = []
+    for _ in range(repeats):
+        plat = Platform(_spec(cache=cache), datastore=store)
+        results.append(plat.run(samples, months, WL).result)
+    return results, _total_fetches(store), store
+
+
+def _repeat_section(rows: List[Row]) -> None:
+    off_res, off_fetches, _ = _repeat_arm(CacheOptions())
+    on_res, on_fetches, store = _repeat_arm(CACHE)
+    ratio = off_fetches / max(on_fetches, 1)
+    bit_identical = all(_results_equal(a, b)
+                        for a, b in zip(off_res, on_res))
+    cstats = store.cache.stats()
+    rows.append(("cache.repeat.off_fetches", float(off_fetches),
+                 f"{REPEATS}_runs"))
+    rows.append(("cache.repeat.on_fetches", float(on_fetches),
+                 f"hit_rate={cstats['hit_rate']:.2f}"))
+    rows.append(("cache.repeat.ratio", ratio,
+                 f"bit_identical={bit_identical}"))
+    STRUCTURED["repeat"] = {
+        "repeats": REPEATS,
+        "off_fetches": off_fetches,
+        "on_fetches": on_fetches,
+        "ratio": ratio,
+        "bit_identical": bool(bit_identical),
+        "cache": cstats,
+    }
+
+
+# ---------------------------------------------------------------------------
+# overlapping jobs through the multi-tenant service
+# ---------------------------------------------------------------------------
+
+
+def _overlap_arm(cache: CacheOptions, n_jobs: int = REPEATS):
+    samples, months = _dataset()
+    store = _store()
+    results = []
+    with PlatformService(_spec(cache=cache), datastore=store) as svc:
+        handle = svc.register_dataset(samples, months)
+        for seed in range(n_jobs):
+            results.append(svc.submit(handle, WL, seed=seed)
+                           .result(timeout=300))
+        stats = svc.stats()
+    return results, _total_fetches(store), stats
+
+
+def _overlap_section(rows: List[Row]) -> None:
+    off_res, off_fetches, _ = _overlap_arm(CacheOptions())
+    on_res, on_fetches, stats = _overlap_arm(CACHE)
+    ratio = off_fetches / max(on_fetches, 1)
+    bit_identical = all(_results_equal(a, b)
+                        for a, b in zip(off_res, on_res))
+    rows.append(("cache.overlap.off_fetches", float(off_fetches),
+                 f"{REPEATS}_jobs"))
+    rows.append(("cache.overlap.on_fetches", float(on_fetches),
+                 f"hit_rate={stats.get('cache_hit_rate', 0.0):.2f}"))
+    rows.append(("cache.overlap.ratio", ratio,
+                 f"bit_identical={bit_identical}"))
+    STRUCTURED["overlap"] = {
+        "jobs": REPEATS,
+        "off_fetches": off_fetches,
+        "on_fetches": on_fetches,
+        "ratio": ratio,
+        "bit_identical": bool(bit_identical),
+        "resident_skips": stats.get("resident_skips", 0.0),
+        "cache_hits": stats.get("cache_hits", 0.0),
+        "cache_misses": stats.get("cache_misses", 0.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# capacity_bytes=0 ≡ no cache at all (the pre-PR platform)
+# ---------------------------------------------------------------------------
+
+
+def _disabled_arm(spec_kw: dict, repeats: int = 2):
+    samples, months = _dataset()
+    store = _store()
+    store.put_all(samples, replication=2)
+    results = []
+    for _ in range(repeats):
+        plat = Platform(
+            _spec(schedule=ScheduleOptions(balanced="on", prefetch="off"),
+                  **spec_kw),
+            datastore=store)
+        results.append(plat.run(samples, months, WL).result)
+    return results, _total_fetches(store)
+
+
+def _disabled_section(rows: List[Row]) -> None:
+    # prefetch off ⇒ exactly one claim-time fetch per sample per run, so
+    # the traffic comparison is exact, not statistical
+    zero_res, zero_fetches = _disabled_arm(
+        dict(cache=CacheOptions(capacity_bytes=0)))
+    none_res, none_fetches = _disabled_arm(dict())
+    fetches_match = zero_fetches == none_fetches
+    bit_identical = all(_results_equal(a, b)
+                        for a, b in zip(zero_res, none_res))
+    rows.append(("cache.disabled.fetches", float(zero_fetches),
+                 f"match={fetches_match},bit_identical={bit_identical}"))
+    STRUCTURED["disabled"] = {
+        "zero_capacity_fetches": zero_fetches,
+        "no_cache_fetches": none_fetches,
+        "fetches_match": bool(fetches_match),
+        "bit_identical": bool(bit_identical),
+    }
+
+
+# ---------------------------------------------------------------------------
+# thrash (ungated): admission + eviction churn at half-dataset capacity
+# ---------------------------------------------------------------------------
+
+
+def _thrash_section(rows: List[Row]) -> None:
+    for policy in ("lru", "lfu"):
+        opts = CacheOptions(capacity_bytes=DATASET_BYTES // 2,
+                            policy=policy, admission="frequency")
+        _res, fetches, store = _repeat_arm(opts, repeats=3)
+        c = store.cache.stats()
+        rows.append((f"cache.thrash.{policy}.hit_rate", c["hit_rate"],
+                     f"evictions={c['evictions']:.0f},"
+                     f"rejections={c['rejections']:.0f}"))
+        STRUCTURED.setdefault("thrash", {})[policy] = {
+            "fetches": fetches, "hit_rate": c["hit_rate"],
+            "evictions": c["evictions"], "rejections": c["rejections"],
+            "bytes": c["bytes"], "capacity_bytes": c["capacity_bytes"],
+        }
+
+
+def run(smoke: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    _repeat_section(rows)
+    _overlap_section(rows)
+    _disabled_section(rows)
+    if not smoke:
+        _thrash_section(rows)
+    return rows
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true")
+    args = parser.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us:.3f},{derived}")
+    from benchmarks.run import _check_cache_regression
+    failures = _check_cache_regression(STRUCTURED)
+    for msg in failures:
+        print(f"# FAIL: {msg}", file=sys.stderr)
+    return 2 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

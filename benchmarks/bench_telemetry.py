@@ -12,14 +12,14 @@ Four sections, the ISSUE 8 acceptance gates:
   threaded and the simulated backend, and the disabled bus records
   exactly zero events.  GATED.
 * ``trace`` — a multi-job service burst exports a Chrome trace
-  (``BENCH_telemetry_trace.json``, loadable in Perfetto) and a
-  self-contained HTML report (``BENCH_telemetry_report.html``); the
+  (``bench_out/telemetry_trace.json``, loadable in Perfetto) and a
+  self-contained HTML report (``bench_out/telemetry_report.html``); the
   trace must hold ≥ 1 exec span per executed task with monotone
   fetch→exec phase timestamps.  GATED.
 * ``chaos`` — a seeded :class:`FaultPlan` run with a deliberately tiny
   ring capacity: the ring bound must hold while the aggregate counters
   keep full totals, result bit-identical to clean.  The recorded event
-  stream is dumped to ``BENCH_telemetry_events.jsonl`` (the nightly
+  stream is dumped to ``bench_out/telemetry_events.jsonl`` (the nightly
   ``--chaos`` artifact); ``--chaos`` widens the seed sweep.  GATED on
   the bound + bit-identity.
 
@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import statistics
 import sys
 from typing import Dict, List
@@ -52,9 +53,12 @@ WL = ss.NETFLIX_HIGH
 OVERHEAD_PAIRS = 5
 CHAOS_SEEDS = (3,)
 CHAOS_SEEDS_NIGHTLY = (3, 5, 7)
-TRACE_PATH = "BENCH_telemetry_trace.json"
-REPORT_PATH = "BENCH_telemetry_report.html"
-EVENTS_PATH = "BENCH_telemetry_events.jsonl"
+# side artifacts land in the (git-ignored) bench_out/ directory; only
+# BENCH_platform.json — the cross-PR metric record — stays at the root
+OUT_DIR = "bench_out"
+TRACE_PATH = os.path.join(OUT_DIR, "telemetry_trace.json")
+REPORT_PATH = os.path.join(OUT_DIR, "telemetry_report.html")
+EVENTS_PATH = os.path.join(OUT_DIR, "telemetry_events.jsonl")
 
 
 def _dataset():
@@ -132,6 +136,7 @@ def _identity_section(rows: List[Row], samples, months) -> None:
 
 
 def _trace_section(rows: List[Row], samples, months) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
     spec = _spec(telemetry=True)
     with PlatformService(spec) as svc:
         handle = svc.register_dataset(samples, months)
@@ -205,6 +210,7 @@ def _chaos_section(rows: List[Row], samples, months, chaos: bool) -> None:
         rows.append((f"telemetry.chaos.seed{seed}.events_in_ring",
                      float(recorded),
                      f"bounded={per_seed[str(seed)]['ring_bounded']}"))
+    os.makedirs(OUT_DIR, exist_ok=True)
     with open(EVENTS_PATH, "w") as fh:
         fh.write("\n".join(stream_lines) + "\n")
     STRUCTURED["chaos"] = {

@@ -15,6 +15,7 @@ tracked across PRs.  Figure map:
   (§10)      bench_approx           error-bounded early-stop frontier
   (§11)      bench_sharded          multi-device sharded wave scaling
   (§12)      bench_faults           seeded fault injection + recovery
+  (§14)      bench_cache            worker-side block cache traffic cut
 
 ``--smoke`` runs the fast subset (platform_overhead + kernels, scaled
 down) for CI; the harness FAILS (exit 2) when the wave engine's
@@ -86,8 +87,13 @@ FAULT_MAKESPAN_ABS_SLACK = 0.05
 # fraction of a second on CI), and on/off must be bit-identical
 MAX_TELEMETRY_OVERHEAD = 1.05
 TELEMETRY_OVERHEAD_ABS_SLACK = 0.05
+# worker-side block cache (ISSUE 9): repeat/overlap query traffic to the
+# data nodes must be cut by at least this factor with the cache on,
+# bit-identically (measured headroom ≈ the 8-run/8-job arm size), and a
+# zero-capacity cache must match the cacheless platform exactly
+MIN_CACHE_FETCH_RATIO = 5.0
 SMOKE_MODULES = ("platform_overhead", "kernels", "service", "balance",
-                 "approx", "sharded", "faults", "telemetry")
+                 "approx", "sharded", "faults", "telemetry", "cache")
 
 
 def _check_wave_regression(structured: dict) -> list:
@@ -350,6 +356,40 @@ def _check_telemetry_regression(structured: dict) -> list:
     return failures
 
 
+def _check_cache_regression(structured: dict) -> list:
+    """ISSUE 9 gates over bench_cache's structured results: repeat and
+    overlapping queries must cut data-node fetch traffic ≥
+    MIN_CACHE_FETCH_RATIO× with bit-identical results, and the
+    zero-capacity cache must be indistinguishable from no cache."""
+    failures = []
+    for section in ("repeat", "overlap"):
+        res = structured.get(section)
+        if not res:
+            continue
+        if res["ratio"] < MIN_CACHE_FETCH_RATIO:
+            failures.append(
+                f"cache {section}: fetch traffic only cut "
+                f"{res['ratio']:.2f}x ({res['off_fetches']} off vs "
+                f"{res['on_fetches']} on; need >= "
+                f"{MIN_CACHE_FETCH_RATIO}x)")
+        if not res["bit_identical"]:
+            failures.append(
+                f"cache {section}: cached results diverged from the "
+                f"uncached runs — the cache leaked into the statistic")
+    dis = structured.get("disabled")
+    if dis:
+        if not dis["fetches_match"]:
+            failures.append(
+                f"cache disabled: zero-capacity cache changed fetch "
+                f"traffic ({dis['zero_capacity_fetches']} vs "
+                f"{dis['no_cache_fetches']} without a cache)")
+        if not dis["bit_identical"]:
+            failures.append(
+                "cache disabled: zero-capacity results diverged from "
+                "the cacheless platform")
+    return failures
+
+
 def _check_balance_regression(structured: dict) -> list:
     """ISSUE 4 gates over bench_balance's structured results."""
     failures = []
@@ -442,6 +482,16 @@ def _comparable_metrics(report: dict) -> dict:
     if te.get("trace"):
         out["telemetry.exec_spans"] = (
             float(te["trace"]["exec_spans"]), "higher")
+    # block cache: cached-arm fetch counts carry prefetch claim-race
+    # jitter (a few duplicate fetches during the fill run), so they get
+    # the wider approx-style slack; the traffic-cut ratio is gated
+    # absolutely by MIN_CACHE_FETCH_RATIO and (like the balance ratio)
+    # is not compared here
+    ca = mods.get("cache", {}).get("structured", {})
+    for section in ("repeat", "overlap"):
+        if ca.get(section):
+            out[f"cache.{section}.on_fetches"] = (
+                float(ca[section]["on_fetches"]), "lower")
     # bench_balance's makespan ratio is wall-clock-derived, so it is
     # gated by its own MIN_BALANCE_RATIO check, not compared here
     return out
@@ -465,7 +515,7 @@ def _compare_to_baseline(report: dict, baseline_path: str) -> list:
         b, _ = base[key]
         delta = (c - b) / b if b else 0.0
         if direction == "lower":
-            if key.startswith("approx."):
+            if key.startswith(("approx.", "cache.")):
                 tol, slack = (COMPARE_APPROX_TOLERANCE,
                               COMPARE_APPROX_ABS_SLACK)
             elif "bytes" in key:
@@ -497,6 +547,7 @@ def _compare_to_baseline(report: dict, baseline_path: str) -> list:
 _STRUCTURED_CHECKS = {
     "service": _check_service_regression,
     "balance": _check_balance_regression,
+    "cache": _check_cache_regression,
     "platform_overhead": _check_wave_regression,
     "approx": _check_approx_regression,
     "sharded": _check_sharded_regression,
@@ -531,9 +582,9 @@ def main(argv=None) -> int:
     if args.json is None:
         args.json = "" if args.only else "BENCH_platform.json"
 
-    from benchmarks import (bench_approx, bench_balance, bench_elasticity,
-                            bench_faults, bench_hetero, bench_jobsize,
-                            bench_kernels, bench_kneepoint,
+    from benchmarks import (bench_approx, bench_balance, bench_cache,
+                            bench_elasticity, bench_faults, bench_hetero,
+                            bench_jobsize, bench_kernels, bench_kneepoint,
                             bench_platform_overhead, bench_reduce_sim,
                             bench_service, bench_sharded,
                             bench_task_sizing, bench_telemetry)
@@ -555,6 +606,7 @@ def main(argv=None) -> int:
         ("sharded", bench_sharded),
         ("faults", bench_faults),
         ("telemetry", bench_telemetry),
+        ("cache", bench_cache),
     ]
 
     report = {"schema": 1, "smoke": args.smoke, "modules": {}}

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core import subsample as ss
 from repro.core.estimator import EstimateSnapshot
 from repro.data.synthetic import NetflixSpec, netflix_dataset
-from repro.platform import PlatformService, PlatformSpec
+from repro.platform import ApproxOptions, PlatformService, PlatformSpec
 
 EPSILON = 0.5            # stars of rating: the caller's error tolerance
 CONFIDENCE = 0.95
@@ -40,8 +40,10 @@ def main() -> None:
 
         print(f"error-bounded query: monthly means to ±{EPSILON} stars "
               f"at {CONFIDENCE:.0%} (simultaneous band)")
-        ticket = svc.submit(handle, ss.NETFLIX_LOW, epsilon=EPSILON,
-                            confidence=CONFIDENCE, min_tasks=8)
+        ticket = svc.submit(handle, ss.NETFLIX_LOW,
+                            approx=ApproxOptions(epsilon=EPSILON,
+                                                 confidence=CONFIDENCE,
+                                                 min_tasks=8))
 
         last = -1
         while not ticket.wait(timeout=0.02):
@@ -61,7 +63,8 @@ def main() -> None:
               f"{ticket.tasks_cancelled} "
               f"({ticket.n_tasks} planned) in {ticket.latency:.2f}s")
 
-        exact_ticket = svc.submit(handle, ss.NETFLIX_LOW, epsilon=None)
+        exact_ticket = svc.submit(handle, ss.NETFLIX_LOW,
+                                  approx=ApproxOptions())   # exact run
         exact = exact_ticket.result(timeout=600)
         print(f"exact run: {exact_ticket.tasks_executed} tasks in "
               f"{exact_ticket.latency:.2f}s")

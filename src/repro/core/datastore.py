@@ -24,7 +24,16 @@ that loop:
   FIFO-ish policy (the benchmark's unbalanced baseline);
 * a raising :meth:`DataNode.fetch` triggers **bounded retries with
   replica failover** — the failed node's state is updated and the fetch
-  moves to the next-best holder instead of hammering one replica.
+  moves to the next-best holder instead of hammering one replica;
+* an optional worker-side **block cache**
+  (:class:`~repro.core.blockcache.BlockCache`, DESIGN.md §14) sits in
+  front of the replica claim path: ``fetch``/``fetch_many`` consult it
+  before claiming a replica, successful fetches (including prefetcher
+  fills) populate it, ``put_all`` re-placement bumps per-sample
+  versions so stale entries can never serve, and
+  :meth:`predicted_task_fetch` scores cache-resident samples as zero
+  fetch cost — cache locality becomes a scheduling signal alongside
+  response times.
 
 Hardware adaptation (DESIGN.md §2): data nodes here are in-process shard
 holders behind an abstract transport, so per-node latency and failures can
@@ -190,6 +199,12 @@ class ReplicatedDataStore:
         # service attaches (data-plane events: fetch_start/done/failed,
         # node_state_change with the EMA/score behind each transition)
         self.telemetry = None
+        # optional repro.core.blockcache.BlockCache the driver or
+        # service attaches (DESIGN.md §14): consulted before the replica
+        # claim path, filled on successful fetches, invalidated on
+        # put_all re-placement via the per-sample version counters
+        self.cache = None
+        self._versions: Dict[int, int] = {}
 
     # -- data placement ------------------------------------------------------
     def put_all(self, samples: Dict[int, np.ndarray],
@@ -205,7 +220,24 @@ class ReplicatedDataStore:
         never widens the placement — the platform driver re-puts the
         dataset on every run, and that must not silently turn a
         caller's replication-k sharding into full replication.  An
-        explicit ``replication`` re-places (old holders are dropped)."""
+        explicit ``replication`` re-places (old holders are dropped).
+
+        Block-cache coherence (DESIGN.md §14): re-placing a sample with
+        new bytes, or any explicit-``replication`` re-placement, bumps
+        its version and invalidates its cached entry.  A same-object
+        re-put (the driver re-putting the dataset it already placed)
+        keeps the version — the cached block aliases the same array, so
+        repeat runs against one store keep their cache hits."""
+        stale = (set(samples) if replication is not None
+                 else {sid for sid, arr in samples.items()
+                       if sid in self._samples
+                       and self._samples[sid] is not arr})
+        if stale:
+            with self._lock:
+                for sid in stale:
+                    self._versions[sid] = self._versions.get(sid, 0) + 1
+            if self.cache is not None:
+                self.cache.invalidate(stale)
         self._samples.update(samples)
         if replication is None and self._placement is None:
             for node in self.nodes:
@@ -285,11 +317,19 @@ class ReplicatedDataStore:
         ``fetch_many`` parallelizes the batch, so the task is bound by
         its slowest sample's *best available* replica.  Samples whose
         every holder is down score ∞ (the scheduler drains them last,
-        giving failover/recovery time to act)."""
+        giving failover/recovery time to act).  Cache-resident samples
+        cost nothing — ``fetch_many`` will serve them without touching
+        a data node — so a fully-cached task scores 0.0 and the
+        bucket-ranked claim paths drain it first (cache locality as a
+        scheduling signal, DESIGN.md §14)."""
+        cache = self.cache
         with self._lock:
             by_id = {n.node_id: n for n in self.nodes}
             worst = 0.0
             for sid in sample_ids:
+                if (cache is not None
+                        and cache.contains(sid, self._versions.get(sid, 0))):
+                    continue               # served worker-side: zero cost
                 holders = ([n.node_id for n in self.nodes]
                            if self._placement is None
                            else self._placement.get(sid, ()))
@@ -297,6 +337,22 @@ class ReplicatedDataStore:
                             if h in by_id), default=float("inf"))
                 worst = max(worst, best)
             return worst
+
+    def version_of(self, sample_id: int) -> int:
+        """The sample's placement version (bumped on re-placement) —
+        the coherence token cached blocks are validated against."""
+        return self._versions.get(sample_id, 0)
+
+    def cache_covers(self, sample_ids: Sequence[int]) -> bool:
+        """Whether EVERY sample of a task is cache-resident at its
+        current version — the prefetcher skips such tasks (their claim
+        is served worker-side; a background fetch would waste a pipe
+        slot on data the pool already holds)."""
+        cache = self.cache
+        if cache is None or not cache.options.enabled:
+            return False
+        return all(cache.contains(sid, self._versions.get(sid, 0))
+                   for sid in sample_ids)
 
     def probe(self) -> Dict[int, float]:
         """Seed every node's response-time EMA with one direct fetch
@@ -498,8 +554,48 @@ class ReplicatedDataStore:
         node.inflight += 1
         return node
 
+    # -- block cache plumbing (DESIGN.md §14) --------------------------------
+    def _cache_get(self, sample_id: int) -> Optional[np.ndarray]:
+        """Consult the attached cache; emits ``cache_hit``/``cache_miss``
+        on the bus.  ``None`` ⇒ the caller must fetch from a replica."""
+        cache = self.cache
+        if cache is None or not cache.options.enabled:
+            return None
+        data = cache.get(sample_id, self._versions.get(sample_id, 0))
+        bus = self.telemetry
+        if bus is not None:
+            bus.emit("cache_hit" if data is not None else "cache_miss",
+                     sample_id=sample_id)
+        return data
+
+    def _cache_fill(self, sample_id: int, data: np.ndarray) -> None:
+        """Offer a fetched block to the cache; emits one ``cache_evict``
+        per entry the admission displaced."""
+        cache = self.cache
+        if cache is None:
+            return
+        evicted = cache.put(sample_id, self._versions.get(sample_id, 0),
+                            data)
+        bus = self.telemetry
+        if bus is not None:
+            for esid in evicted:
+                bus.emit("cache_evict", sample_id=esid)
+
     def fetch(self, sample_id: int,
               budget: Optional["rec.RetryBudget"] = None) -> np.ndarray:
+        """Fetch one sample — from the worker-side block cache when it
+        holds the current version, else from the cheapest available
+        replica (the fetched block then populates the cache)."""
+        data = self._cache_get(sample_id)
+        if data is not None:
+            return data
+        data = self._fetch_replicated(sample_id, budget=budget)
+        self._cache_fill(sample_id, data)
+        return data
+
+    def _fetch_replicated(self, sample_id: int,
+                          budget: Optional["rec.RetryBudget"] = None
+                          ) -> np.ndarray:
         """Fetch one sample from the cheapest available replica, under
         the unified :class:`~repro.core.recovery.RetryPolicy`: a raising
         node records a failure (taking it DOWN after
@@ -567,10 +663,25 @@ class ReplicatedDataStore:
         node) and snapshots each node's inflight count for the latency
         model; the fetches themselves then run in parallel on a small
         shared pool.  A failed fetch fails over to the sample's next-best
-        holder (bounded by ``max_fetch_attempts``, spending ``budget``)."""
+        holder (bounded by ``max_fetch_attempts``, spending ``budget``).
+
+        Cache-resident samples (current version) are served worker-side
+        without claiming any replica — only the remainder touches the
+        data plane, and those fetched blocks populate the cache."""
         self._maybe_probe_down()
         if len(sample_ids) <= 1:
             return [self.fetch(s, budget=budget) for s in sample_ids]
+        cached: Dict[int, np.ndarray] = {}
+        if self.cache is not None and self.cache.options.enabled:
+            for sid in dict.fromkeys(sample_ids):
+                data = self._cache_get(sid)
+                if data is not None:
+                    cached[sid] = data
+            remaining = [sid for sid in sample_ids if sid not in cached]
+            if not remaining:
+                return [cached[sid] for sid in sample_ids]
+        else:
+            remaining = list(sample_ids)
 
         def one(claim):
             sid, node, snap = claim
@@ -604,7 +715,7 @@ class ReplicatedDataStore:
         with self._lock:
             pool = self._fetch_pool_locked()
             futures = []
-            for sid in sample_ids:
+            for sid in remaining:
                 node = self._claim_locked(sid)
                 if node is None:
                     err = DataNodeError(
@@ -613,7 +724,7 @@ class ReplicatedDataStore:
                     raise err
                 futures.append(pool.submit(one, (sid, node, node.inflight)))
 
-        out: Dict[int, np.ndarray] = {}
+        out: Dict[int, np.ndarray] = dict(cached)
         order: List[int] = list(sample_ids)
         failed: List[int] = []
         for future in futures:
@@ -623,8 +734,12 @@ class ReplicatedDataStore:
                 continue
             self._observe(took)
             out[sid] = data
+            self._cache_fill(sid, data)
         for sid in failed:                 # bounded failover, serial tail
-            out[sid] = self.fetch(sid, budget=budget)
+            # _fetch_replicated, not fetch: this sample already counted
+            # its cache miss above — a second consult would double-count
+            out[sid] = self._fetch_replicated(sid, budget=budget)
+            self._cache_fill(sid, out[sid])
         return [out[sid] for sid in order]
 
     def _fetch_pool_locked(self):
@@ -698,7 +813,7 @@ class ReplicatedDataStore:
             fetches = {n.node_id: n.fetches for n in self.nodes}
         served = sum(fetches.values())
         top = max(fetches.values()) if fetches else 0
-        return {
+        out = {
             "replicas": float(len(states)),
             "fetch_p50": float(np.percentile(obs, 50)),
             "fetch_p95": float(np.percentile(obs, 95)),
@@ -709,6 +824,10 @@ class ReplicatedDataStore:
             # (1/replicas ⇒ perfectly balanced)
             "fetch_skew": (top / served) if served else 0.0,
         }
+        if self.cache is not None:
+            for k, v in self.cache.stats().items():
+                out[f"cache_{k}"] = float(v)
+        return out
 
     def fetch_counts(self) -> Dict[int, int]:
         """Per-node successful-fetch counters (replica traffic skew)."""

@@ -132,6 +132,15 @@ class TaskPrefetcher:
         self.launched = 0                  # background fetches issued
         self.depth_trace: list = []
         self._closed = False
+        # cache-aware skip (DESIGN.md §14): a predicate over prefetch
+        # payloads (tasks) that is True when the task's blocks are
+        # already resident in the worker-side block cache.  With cache-
+        # aware ranking those tasks sort FIRST in the backlog, so the
+        # peeked look-ahead would be exactly the tasks that need no
+        # fetch — admit() filters them out instead of burning pipe
+        # slots, and counts the skips.
+        self.resident: Optional[Callable[[Any], bool]] = None
+        self._resident_skips = 0
 
     # -- dynamic k -----------------------------------------------------------
     def lookahead(self) -> int:
@@ -158,6 +167,33 @@ class TaskPrefetcher:
         value = thunk()
         self._observe_fetch(time.perf_counter() - t0)
         return value
+
+    # -- cache-aware admission -----------------------------------------------
+    def admit(self, payload: Any) -> bool:
+        """Whether a peeked task is worth a background fetch: ``False``
+        when the :attr:`resident` predicate says its blocks are already
+        cache-resident (the claim-time :meth:`ensure` will be served
+        worker-side for free).  Predicate errors admit — prefetching an
+        already-resident task is waste, never a correctness problem."""
+        pred = self.resident
+        if pred is None:
+            return True
+        try:
+            is_resident = bool(pred(payload))
+        except Exception:          # noqa: BLE001 — best-effort hint
+            return True
+        if is_resident:
+            with self._lock:
+                self._resident_skips += 1
+            return False
+        return True
+
+    def note_resident_skip(self) -> None:
+        """Count a resident skip decided by the caller (the multi-job
+        pool filters with per-job predicates instead of one global
+        :attr:`resident`)."""
+        with self._lock:
+            self._resident_skips += 1
 
     # -- the pipeline --------------------------------------------------------
     def prefetch(self, entries: Iterable[Tuple[Any, Callable[[], Any]]],
@@ -212,7 +248,8 @@ class TaskPrefetcher:
                 "prefetch_misses": float(self.misses),
                 "prefetch_launched": float(self.launched),
                 "prefetch_depth": float(self.depth_trace[-1]
-                                        if self.depth_trace else 0)}
+                                        if self.depth_trace else 0),
+                "resident_skips": float(self._resident_skips)}
 
     def close(self) -> None:
         with self._lock:

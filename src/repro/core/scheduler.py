@@ -65,7 +65,13 @@ def rank_by_bucket(tasks: Sequence[Task],
     """Stable-sort tasks by each bucket's best locality score: whole
     buckets move together (same-shape waves / cross-job fusion keys
     stay contiguous), intra-bucket order stays FIFO, and ties keep
-    arrival order.  Shared by both schedulers' claim ranking."""
+    arrival order.  Shared by both schedulers' claim ranking.
+
+    The score is the driver's ``locality_score`` — predicted best-
+    replica fetch seconds, with cache-resident tasks scoring ~0
+    (DESIGN.md §14), so buckets whose blocks the pool already holds
+    drain first and a cache admission/eviction re-ranks via
+    ``request_rerank`` exactly like a node state change."""
     tasks = list(tasks)
     if len(tasks) <= 1:
         return deque(tasks)
@@ -1386,9 +1392,13 @@ class ThreadedRunner:
                         self.crash_hook(wid)
                     t0 = time.perf_counter()
                     if prefetcher is not None:
+                        # admit() drops cache-resident tasks: with
+                        # cache-aware ranking they sort FIRST in the
+                        # backlog, so the peeked look-ahead would be
+                        # exactly the tasks that need no fetch (§14)
                         prefetcher.prefetch(
                             [(x.task_id, lambda _x=x: self.fetch(_x))
-                             for x in upcoming])
+                             for x in upcoming if prefetcher.admit(x)])
                         for x in claimed:
                             prefetcher.ensure(
                                 x.task_id, lambda _x=x: self.fetch(_x))

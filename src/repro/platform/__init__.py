@@ -5,8 +5,17 @@ two-phase dynamic scheduler → streaming reduce) into one pipeline behind
 :class:`Platform`, with threaded (real wall time) and simulated
 (virtual-time scale-out) execution backends behind one protocol.  See
 DESIGN.md §1-§2 and the thesis §3 (arXiv:1404.4653).
+
+This module is the stable import surface: ``__all__`` below is the
+curated public API — the driver (:class:`Platform`, :class:`PlatformSpec`
+and its grouped option values), the multi-tenant service
+(:class:`PlatformService`, :class:`JobTicket`, :class:`JobReport`), and
+telemetry configuration (:class:`TelemetryConfig`).  Everything else
+re-exported here is platform plumbing that may move between submodules;
+import it from its home module if you need it.
 """
 
+from repro.core.blockcache import BlockCache, CacheOptions  # noqa: F401
 from repro.platform.backend import (  # noqa: F401
     BackendOutcome,
     PlatformBackend,
@@ -30,12 +39,16 @@ from repro.platform.compute import (  # noqa: F401
 from repro.platform.driver import (  # noqa: F401
     BASH_STARTUP,
     PLATFORMS,
+    ApproxOptions,
+    FaultOptions,
     JobPlan,
     JobReport,
     Platform,
     PlatformConfig,
     PlatformSpec,
+    ScheduleOptions,
     WaveContext,
+    WaveOptions,
     build_wave_context,
     make_tasks,
     measure_kneepoint,
@@ -73,3 +86,26 @@ from repro.platform.telemetry import (  # noqa: F401
     write_report,
     write_trace,
 )
+
+# The curated facade (ISSUE: stable public API).  Star-imports and API
+# docs follow this list; additions are append-only.
+__all__ = [
+    # driver: one-shot jobs
+    "Platform",
+    "PlatformSpec",
+    "JobReport",
+    # grouped platform options
+    "WaveOptions",
+    "ScheduleOptions",
+    "ApproxOptions",
+    "FaultOptions",
+    "CacheOptions",
+    # multi-tenant service
+    "PlatformService",
+    "AdmissionPolicy",
+    "DatasetHandle",
+    "JobTicket",
+    "PartialEstimate",
+    # telemetry configuration
+    "TelemetryConfig",
+]

@@ -203,6 +203,12 @@ class PoolJob:
     on_start: Optional[Callable[[float], None]] = None
     # predicted best-replica fetch seconds (balanced scheduling §9)
     locality_score: Optional[Callable[[sch.Task], float]] = None
+    # True when a task's blocks are already resident in the worker-side
+    # block cache (DESIGN.md §14): the pool skips prefetching it — its
+    # claim-time fetch is served from the cache for free.  Per-job (not
+    # on the shared prefetcher) because each job maps sample indices
+    # through its own dataset handle.
+    resident: Optional[Callable[[sch.Task], bool]] = None
     # error-bounded early termination (DESIGN.md §10): a
     # core.estimator.StoppingController checked at wave settlement; on
     # convergence the job's queued tasks are cancelled (DRAINING) and
@@ -460,10 +466,21 @@ class ServicePool:
                 time.sleep(plat.launch_overhead)
             try:
                 if self.prefetcher is not None and upcoming:
-                    self.prefetcher.prefetch(
-                        [((pj.job_id, t.task_id),
-                          lambda _pj=pj, _t=t: _pj.fetch(_t))
-                         for pj, t in upcoming if pj.fetch is not None])
+                    # per-job resident predicates drop cache-resident
+                    # tasks (their claim-time fetch is served worker-
+                    # side — a background fetch would waste the slot)
+                    entries = []
+                    for pj, t in upcoming:
+                        if pj.fetch is None:
+                            continue
+                        if pj.resident is not None and pj.resident(t):
+                            self.prefetcher.note_resident_skip()
+                            continue
+                        entries.append(
+                            ((pj.job_id, t.task_id),
+                             lambda _pj=pj, _t=t: _pj.fetch(_t)))
+                    if entries:
+                        self.prefetcher.prefetch(entries)
                 for pj, task in pool_batch:
                     if pj.fetch is not None:
                         if self.prefetcher is not None:

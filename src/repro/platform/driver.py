@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -46,6 +47,7 @@ from repro.core import estimator as est_mod
 from repro.core import kneepoint as kp
 from repro.core import scheduler as sch
 from repro.core import slo as slo_mod
+from repro.core.blockcache import BlockCache, CacheOptions
 from repro.core.prefetch import TaskPrefetcher
 from repro.platform import compute as pc
 from repro.platform import telemetry as tel
@@ -88,9 +90,86 @@ PLATFORMS: Dict[str, PlatformConfig] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# grouped platform options (the stable public configuration surface)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveOptions:
+    """Wave execution: batch same-shape ready tasks into one device
+    dispatch (threaded backend, pallas/jnp engines)."""
+
+    wave: str = "auto"                     # "auto" | "on" | "off"
+    max_wave: int = 32                     # wave size cap (task count)
+    # sharded wave execution (DESIGN.md §11) over a 1-D mesh of this
+    # many devices; None keeps the plain single-device arena
+    mesh_devices: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleOptions:
+    """Dynamic scheduling policy: balanced (response-time + cache
+    locality) claim ranking, straggler speculation, data-plane
+    prefetch, and SLO-aware pool sizing."""
+
+    balanced: str = "auto"                 # "auto" | "on" | "off"
+    speculation: str = "off"               # "off" | "on" | "auto"
+    straggler_factor: float = 2.0
+    prefetch: str = "auto"                 # "auto" | "on" | "off"
+    slo_seconds: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxOptions:
+    """Error-bounded approximate queries (DESIGN.md §10): stop once the
+    CI half-width at ``confidence`` falls under ``epsilon``."""
+
+    epsilon: Optional[float] = None
+    confidence: float = 0.95
+    min_tasks: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultOptions:
+    """Failure model (DESIGN.md §12): lease-based task reclamation,
+    checkpoint/resume of reduce partials, bounded worker respawns."""
+
+    lease_seconds: Optional[float] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 8
+    max_respawns: int = 2
+
+
+# (group field name, option class, member names shared with the legacy
+# flat PlatformSpec fields) — the resolution shim in __post_init__
+_SPEC_GROUPS: Tuple[Tuple[str, type, Tuple[str, ...]], ...] = (
+    ("waves", WaveOptions, ("wave", "max_wave", "mesh_devices")),
+    ("schedule", ScheduleOptions,
+     ("balanced", "speculation", "straggler_factor", "prefetch",
+      "slo_seconds")),
+    ("approx", ApproxOptions, ("epsilon", "confidence", "min_tasks")),
+    ("faults", FaultOptions,
+     ("lease_seconds", "checkpoint_dir", "checkpoint_every",
+      "max_respawns")),
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class PlatformSpec:
-    """Everything that selects a job's execution, in one value."""
+    """Everything that selects a job's execution, in one value.
+
+    Configuration is grouped into typed option values —
+    ``PlatformSpec(schedule=ScheduleOptions(balanced="on"),
+    cache=CacheOptions(capacity_bytes=1 << 20))`` — while the legacy
+    flat kwargs (``PlatformSpec(balanced="on")``) keep working through
+    a resolution shim that emits a :class:`DeprecationWarning`.  After
+    construction both views are coherent: each flat field mirrors its
+    group (``spec.balanced == spec.schedule.balanced``), and
+    ``dataclasses.replace(spec, schedule=...)`` updates both.  When a
+    group AND a conflicting non-default flat kwarg are passed, the
+    group wins (with a warning) — flat kwargs are the migration path,
+    not an override."""
 
     platform: str = "BTS"                  # PLATFORMS key
     n_workers: int = 2
@@ -158,6 +237,50 @@ class PlatformSpec:
     # sink (results bit-identical either way), True/"on" ⇒ record into
     # bounded rings, or an explicit telemetry.TelemetryConfig
     telemetry: Any = None
+    # grouped option values (the stable configuration surface).  None ⇒
+    # synthesized from the legacy flat fields above by __post_init__;
+    # when provided, the group is authoritative and the flat mirrors
+    # are synced to it.
+    waves: Optional[WaveOptions] = None
+    schedule: Optional[ScheduleOptions] = None
+    approx: Optional[ApproxOptions] = None
+    faults: Optional[FaultOptions] = None
+    # worker-side block cache (DESIGN.md §14); the default
+    # CacheOptions() has capacity_bytes=0 ⇒ disabled, bit-identical to
+    # the uncached platform
+    cache: Optional[CacheOptions] = None
+
+    def __post_init__(self) -> None:
+        for gname, gcls, members in _SPEC_GROUPS:
+            defaults = {f.name: f.default for f in dataclasses.fields(gcls)}
+            group = getattr(self, gname)
+            if group is None:
+                # legacy flat view: synthesize the group from the flat
+                # fields; warn only when a flat kwarg was actually used
+                flat = {m: getattr(self, m) for m in members}
+                changed = [m for m in members if flat[m] != defaults[m]]
+                if changed:
+                    warnings.warn(
+                        f"flat PlatformSpec field(s) {changed} are "
+                        f"deprecated; pass {gname}="
+                        f"{gcls.__name__}(...) instead",
+                        DeprecationWarning, stacklevel=3)
+                object.__setattr__(self, gname, gcls(**flat))
+            else:
+                # grouped view: the group wins; a conflicting
+                # non-default flat kwarg is superseded (with a warning)
+                clash = [m for m in members
+                         if getattr(self, m) != defaults[m]
+                         and getattr(self, m) != getattr(group, m)]
+                if clash:
+                    warnings.warn(
+                        f"flat PlatformSpec field(s) {clash} are "
+                        f"superseded by the {gname}= option group",
+                        DeprecationWarning, stacklevel=3)
+                for m in members:
+                    object.__setattr__(self, m, getattr(group, m))
+        if self.cache is None:
+            object.__setattr__(self, "cache", CacheOptions())
 
 
 @dataclasses.dataclass
@@ -195,6 +318,8 @@ class JobReport:
     scale_decision: Optional[str] = None    # slo.choose_workers reasoning
     n_workers_used: int = 0
     prefetch_stats: Optional[Dict[str, float]] = None
+    # worker-side block cache observability (DESIGN.md §14)
+    cache_stats: Optional[Dict[str, float]] = None
     # error-bounded approximate execution (DESIGN.md §10)
     tasks_executed: int = 0
     tasks_cancelled: int = 0
@@ -755,6 +880,11 @@ class Platform:
                  knee_bytes=plan.knee_bytes, engine=engine)
         if self.datastore is not None:
             self.datastore.telemetry = bus
+            # worker-side block cache (DESIGN.md §14): attached once and
+            # kept on the store across runs so repeat queries over the
+            # same dataset hit warm blocks
+            if spec.cache.enabled and self.datastore.cache is None:
+                self.datastore.cache = BlockCache(spec.cache)
         if self.fault_injector is not None:
             self.fault_injector.telemetry = bus
         t0 = time.perf_counter()
@@ -829,9 +959,21 @@ class Platform:
                     # a node turning degraded/down re-ranks ready tasks
                     store.on_state_change = \
                         lambda node: live.request_rerank()
+                    # cache admissions/evictions shift locality scores
+                    # the same way (DESIGN.md §14)
+                    if store.cache is not None:
+                        store.cache.on_change = \
+                            lambda: live.request_rerank()
         prefetcher = (build_prefetcher(n_eff)
                       if prefetch_enabled(spec, fetch is not None)
                       else None)
+        if prefetcher is not None and self.datastore is not None \
+                and self.datastore.cache is not None:
+            # cache-resident tasks need no background fetch: their
+            # claim-time ensure() is served worker-side for free
+            prefetcher.resident = (
+                lambda task, _s=self.datastore, _ids=ids:
+                _s.cache_covers([_ids[sid] for sid in task.sample_ids]))
 
         # phase 3 — compile warmup: one kernel per distinct block shape
         # (precompiled task binaries are startup cost, Fig 5).  Wave mode
@@ -1010,6 +1152,11 @@ class Platform:
             if self.datastore is not None:
                 self.datastore.on_state_change = None
                 self.datastore.telemetry = None
+                if self.datastore.cache is not None:
+                    # the cache (and its contents) outlives the run; the
+                    # rerank hook must not — it closes over this run's
+                    # scheduler
+                    self.datastore.cache.on_change = None
 
         if self.datastore is not None:
             for r in outcome.results:
@@ -1141,6 +1288,9 @@ class Platform:
             n_workers_used=(n_workers_used if n_workers_used is not None
                             else self._n_exec_workers()),
             prefetch_stats=prefetch_stats,
+            cache_stats=(self.datastore.cache.stats()
+                         if self.datastore is not None
+                         and self.datastore.cache is not None else None),
             tasks_executed=executed + tasks_restored,
             tasks_cancelled=max(len(tasks) - executed - tasks_restored, 0),
             stop_reason=(stopper.stop_reason if stopper is not None

@@ -54,10 +54,12 @@ import numpy as np
 
 from repro.core import estimator as est_mod
 from repro.core import scheduler as sch
+from repro.core.blockcache import BlockCache
 from repro.platform import compute as pc
 from repro.platform import telemetry as tel
 from repro.platform.backend import PoolJob, ServicePool
 from repro.platform.driver import (
+    ApproxOptions,
     JobCheckpointer,
     JobPlan,
     Platform,
@@ -244,10 +246,9 @@ class PartialEstimate(dict):
     fields are ``None`` for statistics without an estimator plug-in),
     ``tasks_in``/``n_tasks`` progress, ``confidence``, and ``estimate``,
     the running finalized statistic dict (the old bare-value shape).
-
-    Deprecation shim: reading a legacy statistic key directly (e.g.
-    ``p["mean"]``) still works but warns — it now lives under
-    ``p["estimate"]["mean"]``."""
+    Statistic values live under ``p["estimate"]["mean"]`` — the legacy
+    top-level spelling (``p["mean"]``) was removed after a deprecation
+    cycle and now raises ``KeyError``."""
 
     @classmethod
     def build(cls, stat: Dict[str, Any], snap, *, n_tasks: int,
@@ -261,17 +262,6 @@ class PartialEstimate(dict):
                        tasks_in=snap.tasks_in,
                        confidence=snap.confidence)
         return out
-
-    def __missing__(self, key):
-        est = dict.get(self, "estimate") or {}
-        if key in est:
-            warnings.warn(
-                f"JobTicket.partial() now returns an estimate snapshot; "
-                f"read partial()['estimate'][{key!r}] instead of "
-                f"partial()[{key!r}]", DeprecationWarning, stacklevel=2)
-            return est[key]
-        raise KeyError(key)
-
 
 class JobTicket:
     """Handle on one submitted job: poll (:meth:`status`/:meth:`progress`),
@@ -449,6 +439,12 @@ class PlatformService:
         self.sampler = tel.TelemetrySampler(self.telemetry)
         if datastore is not None:
             datastore.telemetry = self.telemetry
+            # worker-side block cache (DESIGN.md §14): one pool-wide
+            # cache for the whole service session — concurrent jobs over
+            # shared datasets are exactly the repeat/overlap traffic the
+            # cache exists for
+            if spec.cache.enabled and datastore.cache is None:
+                datastore.cache = BlockCache(spec.cache)
         if fault_injector is not None:
             fault_injector.telemetry = self.telemetry
         self._pool: Optional[ServicePool] = None
@@ -494,6 +490,10 @@ class PlatformService:
         if self.datastore is not None:
             self.datastore.on_state_change = None
             self.datastore.telemetry = None
+            if self.datastore.cache is not None:
+                # the rerank hook closes over this service's pool; the
+                # cache itself (an injected store's warm blocks) stays
+                self.datastore.cache.on_change = None
         if pool is not None:
             pool.close()
         with self._lock:
@@ -531,6 +531,7 @@ class PlatformService:
                seed: Optional[int] = None, priority: int = 0,
                deadline: Optional[float] = None,
                weight: float = 1.0,
+               approx: Optional[ApproxOptions] = None,
                epsilon: Any = _UNSET,
                confidence: Optional[float] = None,
                min_tasks: Optional[int] = None,
@@ -543,14 +544,17 @@ class PlatformService:
         deficit-round-robin within a tier, ``weight`` scales a job's DRR
         share.
 
-        ``epsilon``/``confidence``/``min_tasks`` make the query
-        *error-bounded* (DESIGN.md §10): the job streams a running
-        estimate with a confidence interval and is DRAINed early —
-        queued tasks cancelled, the freed workers immediately serving
-        peer jobs — once the CI half-width falls under ``epsilon``.
-        They default to the service spec's values, so a spec with an
+        ``approx=ApproxOptions(epsilon=..., confidence=...,
+        min_tasks=...)`` makes the query *error-bounded* (DESIGN.md
+        §10): the job streams a running estimate with a confidence
+        interval and is DRAINed early — queued tasks cancelled, the
+        freed workers immediately serving peer jobs — once the CI
+        half-width falls under ``epsilon``.  Omitting ``approx``
+        inherits the service spec's ``approx`` group, so a spec with an
         epsilon gives every interactive tenant early-stop by default;
-        pass ``epsilon=None`` explicitly to force a full run.
+        pass ``approx=ApproxOptions()`` (epsilon ``None``) to force a
+        full run.  The flat ``epsilon``/``confidence``/``min_tasks``
+        kwargs are the deprecated legacy spelling.
 
         ``checkpoint_dir`` persists the job's completed reduce partials
         (DESIGN.md §12); ``resume_from`` restores a prior interrupted
@@ -560,10 +564,30 @@ class PlatformService:
         if self._closed:
             raise RuntimeError("service is closed")
         seed = self.spec.seed if seed is None else seed
-        eff_epsilon = self.spec.epsilon if epsilon is _UNSET else epsilon
-        eff_conf = (self.spec.confidence if confidence is None
-                    else confidence)
-        eff_min = self.spec.min_tasks if min_tasks is None else min_tasks
+        legacy = [name for name, passed in
+                  (("epsilon", epsilon is not _UNSET),
+                   ("confidence", confidence is not None),
+                   ("min_tasks", min_tasks is not None)) if passed]
+        if approx is not None:
+            if legacy:
+                warnings.warn(
+                    f"submit() kwarg(s) {legacy} are superseded by the "
+                    "approx= option group", DeprecationWarning,
+                    stacklevel=2)
+            eff_epsilon = approx.epsilon
+            eff_conf = approx.confidence
+            eff_min = approx.min_tasks
+        else:
+            if legacy:
+                warnings.warn(
+                    f"submit() kwarg(s) {legacy} are deprecated; pass "
+                    "approx=ApproxOptions(...) instead",
+                    DeprecationWarning, stacklevel=2)
+            eff_epsilon = (self.spec.epsilon if epsilon is _UNSET
+                           else epsilon)
+            eff_conf = (self.spec.confidence if confidence is None
+                        else confidence)
+            eff_min = self.spec.min_tasks if min_tasks is None else min_tasks
         # fail fast: a ValueError later (inside _admit, after the
         # admission slot was reserved) would leak the slot and hang the
         # ticket — and kill a pool worker on the queued-drain path
@@ -760,6 +784,7 @@ class PlatformService:
 
         fetch = None
         locality_score = None
+        resident = None
         if self.datastore is not None:
             store, ids = self.datastore, qc.plan.ids
 
@@ -771,6 +796,15 @@ class PlatformService:
                     return store.predicted_task_fetch(
                         [ids[sid] for sid in task.sample_ids])
 
+            if store.cache is not None:
+                # per-job residency predicate (each job maps sample
+                # indices through its own dataset handle): lets the pool
+                # skip prefetching tasks whose blocks are already in the
+                # worker-side cache (DESIGN.md §14)
+                def resident(task: sch.Task) -> bool:
+                    return store.cache_covers(
+                        [ids[sid] for sid in task.sample_ids])
+
         job = PoolJob(
             job_id=ticket.job_id, tasks=run_tasks, seed=ticket.seed,
             run_batch=self._class_run_batch(qc),
@@ -780,7 +814,7 @@ class PlatformService:
             fetch=fetch, fuse_key=qc.fuse_key, cap=qc.cap,
             priority=priority, deadline=abs_deadline, weight=weight,
             on_start=lambda at: setattr(ticket, "started_at", at),
-            locality_score=locality_score,
+            locality_score=locality_score, resident=resident,
             stopper=ticket.stopper, on_cancelled=on_cancelled)
         pool.submit(job)
         if ticket.cancel_requested:
@@ -824,6 +858,11 @@ class PlatformService:
             # a node turning degraded/down re-ranks every job's queue
             self.datastore.on_state_change = \
                 lambda node: pool.sched.request_rerank()
+            if self.datastore.cache is not None:
+                # cache admissions/evictions shift locality scores the
+                # same way (DESIGN.md §14)
+                self.datastore.cache.on_change = \
+                    lambda: pool.sched.request_rerank()
         return pool
 
     # -- execution closures (shared per query class) -------------------------
@@ -1019,10 +1058,16 @@ class PlatformService:
         _res, knee = handle.cached_knee(
             workload, engine=engine, sizing=self.plat.task_sizing,
             kneepoint_sizes=self.spec.kneepoint_sizes)
-        spec = dataclasses.replace(self.spec, seed=seed, knee_bytes=knee,
-                                   epsilon=epsilon, confidence=confidence,
-                                   min_tasks=min_tasks,
-                                   checkpoint_dir=checkpoint_dir)
+        # grouped replace (the flat mirrors are passed too, matching the
+        # groups, so the spec shim sees no conflict and stays silent)
+        spec = dataclasses.replace(
+            self.spec, seed=seed, knee_bytes=knee,
+            approx=ApproxOptions(epsilon=epsilon, confidence=confidence,
+                                 min_tasks=min_tasks),
+            epsilon=epsilon, confidence=confidence, min_tasks=min_tasks,
+            faults=dataclasses.replace(self.spec.faults,
+                                       checkpoint_dir=checkpoint_dir),
+            checkpoint_dir=checkpoint_dir)
         ticket = JobTicket(next(self._job_seq), handle, workload,
                            n_tasks=0, statistic=workload.statistic,
                            seed=seed)
@@ -1087,6 +1132,9 @@ class PlatformService:
             out["reranks"] = pool.sched.reranks
             if pool.prefetcher is not None:
                 out.update(pool.prefetcher.stats())
+        if self.datastore is not None and self.datastore.cache is not None:
+            for k, v in self.datastore.cache.stats().items():
+                out[f"cache_{k}"] = v
         if self.scale_decision is not None:
             out["scale_decision"] = self.scale_decision
         return out

@@ -69,6 +69,8 @@ EVENT_KINDS = frozenset((
     "prefetch_stats",
     # data plane, per replica
     "fetch_start", "fetch_done", "fetch_failed", "node_state_change",
+    # worker-side block cache (DESIGN.md §14)
+    "cache_hit", "cache_miss", "cache_evict",
     # recovery layers
     "worker_crash", "worker_respawn", "lease_reclaimed",
     "checkpoint_saved", "checkpoint_restored", "fault_fired",
@@ -309,6 +311,12 @@ class TelemetryBus:
                 m.observe("fetch_seconds", took)
         elif kind == "fetch_failed":
             m.inc("fetch_failures")
+        elif kind == "cache_hit":
+            m.inc("cache_hits")
+        elif kind == "cache_miss":
+            m.inc("cache_misses")
+        elif kind == "cache_evict":
+            m.inc("cache_evictions")
         elif kind == "node_state_change":
             m.inc("node_state_changes")
         elif kind == "worker_crash":

@@ -470,7 +470,7 @@ def test_service_simulated_early_stop():
         WL.draws * WL.draw_size * t.tasks_executed)
 
 
-def test_partial_returns_estimate_snapshot_with_shim():
+def test_partial_returns_estimate_snapshot():
     samples, months = _dataset(96)
     with PlatformService(_spec()) as svc:
         handle = svc.register_dataset(samples, months)
@@ -482,10 +482,10 @@ def test_partial_returns_estimate_snapshot_with_shim():
             "n_tasks", "confidence", "estimate"} <= set(p)
     assert set(p["estimate"]) == {"mean", "var", "count"}
     assert np.array_equal(p["estimate"]["mean"], res["mean"])
-    # legacy shape still readable, but warns
-    with pytest.warns(DeprecationWarning):
-        legacy = p["mean"]
-    assert np.array_equal(legacy, res["mean"])
+    # the legacy top-level statistic keys were retired after their
+    # deprecation cycle: only the snapshot shape remains
+    with pytest.raises(KeyError):
+        p["mean"]
     with pytest.raises(KeyError):
         p["no_such_key"]
 

@@ -1,0 +1,247 @@
+"""Unit + property tests for the worker-side block cache
+(``repro.core.blockcache``, DESIGN.md §14)."""
+
+import numpy as np
+import pytest
+
+from repro.core.blockcache import BlockCache, CacheOptions
+from tests._hypothesis_compat import given, settings, st
+
+
+def _arr(nbytes: int, fill: float = 0.0) -> np.ndarray:
+    assert nbytes % 4 == 0
+    return np.full(nbytes // 4, fill, np.float32)
+
+
+# -- options -----------------------------------------------------------------
+
+
+def test_options_validation():
+    with pytest.raises(ValueError):
+        CacheOptions(capacity_bytes=-1)
+    with pytest.raises(ValueError):
+        CacheOptions(capacity_bytes=64, policy="mru")
+    with pytest.raises(ValueError):
+        CacheOptions(capacity_bytes=64, admission="sometimes")
+    assert not CacheOptions().enabled
+    assert CacheOptions(capacity_bytes=1).enabled
+
+
+def test_disabled_cache_is_inert():
+    c = BlockCache(CacheOptions())          # capacity 0 ⇒ disabled
+    assert c.put(1, 0, _arr(64)) == []
+    assert c.get(1, 0) is None
+    assert len(c) == 0 and c.bytes_used == 0
+    s = c.stats()
+    assert s["hits"] == 0 and s["entries"] == 0
+
+
+# -- hit/miss/versioning -----------------------------------------------------
+
+
+def test_put_get_roundtrip_and_counters():
+    c = BlockCache(CacheOptions(capacity_bytes=1024))
+    a = _arr(64, 1.0)
+    assert c.get(7, 0) is None              # cold miss
+    c.put(7, 0, a)
+    assert c.get(7, 0) is a                 # the same object, no copy
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 1
+    assert s["entries"] == 1 and s["bytes"] == 64
+
+
+def test_version_mismatch_drops_stale_entry():
+    c = BlockCache(CacheOptions(capacity_bytes=1024))
+    c.put(7, 0, _arr(64, 1.0))
+    assert c.get(7, 1) is None              # stale: dropped, a miss
+    assert c.stats()["invalidations"] == 1
+    assert len(c) == 0
+    fresh = _arr(64, 2.0)
+    c.put(7, 1, fresh)
+    assert c.get(7, 1) is fresh
+
+
+def test_contains_and_peek_have_no_side_effects():
+    c = BlockCache(CacheOptions(capacity_bytes=1024))
+    c.put(3, 0, _arr(64))
+    before = c.stats()
+    assert c.contains(3, 0)
+    assert not c.contains(3, 1)
+    assert not c.contains(4, 0)
+    assert c.peek(3, 0) is not None
+    assert c.peek(3, 1) is None
+    after = c.stats()
+    assert before == after                   # no counters moved
+
+
+def test_invalidate_returns_only_resident_ids():
+    c = BlockCache(CacheOptions(capacity_bytes=1024))
+    c.put(1, 0, _arr(64))
+    c.put(2, 0, _arr(64))
+    assert c.invalidate([2, 5, 9]) == [2]
+    assert c.contains(1, 0) and not c.contains(2, 0)
+
+
+def test_oversized_block_rejected():
+    c = BlockCache(CacheOptions(capacity_bytes=100))
+    assert c.put(1, 0, _arr(128)) == []
+    assert len(c) == 0 and c.stats()["rejections"] == 1
+
+
+# -- eviction policies -------------------------------------------------------
+
+
+def test_lru_evicts_least_recently_used():
+    c = BlockCache(CacheOptions(capacity_bytes=128, admission="always"))
+    c.put(1, 0, _arr(64))
+    c.put(2, 0, _arr(64))
+    c.get(1, 0)                              # 1 is now most recent
+    evicted = c.put(3, 0, _arr(64))
+    assert evicted == [2]
+    assert c.contains(1, 0) and c.contains(3, 0)
+
+
+def test_lfu_evicts_least_frequent():
+    c = BlockCache(CacheOptions(capacity_bytes=128, policy="lfu",
+                                admission="always"))
+    c.put(1, 0, _arr(64))
+    c.put(2, 0, _arr(64))
+    for _ in range(3):
+        c.get(2, 0)                          # 2 is hot, 1 is cold
+    c.get(1, 0)                              # 1 most recent but colder
+    evicted = c.put(3, 0, _arr(64))
+    assert evicted == [1]
+    assert c.contains(2, 0) and c.contains(3, 0)
+
+
+def test_frequency_admission_blocks_cold_scan():
+    """A once-seen candidate must not displace a block accessed more
+    often (the TinyLFU property: scans cannot flush the working set)."""
+    c = BlockCache(CacheOptions(capacity_bytes=64))
+    c.put(1, 0, _arr(64))
+    c.get(1, 0)
+    c.get(1, 0)                              # freq(1) = 3 (put-touch + 2)
+    assert c.put(2, 0, _arr(64)) == []       # freq(2) = 1: refused
+    assert c.contains(1, 0) and not c.contains(2, 0)
+    assert c.stats()["rejections"] == 1
+    # make the candidate hotter than the victim: admitted
+    for _ in range(5):
+        c.get(2, 0)
+    assert c.put(2, 0, _arr(64)) == [1]
+    assert c.contains(2, 0) and not c.contains(1, 0)
+
+
+def test_always_admission_skips_the_filter():
+    c = BlockCache(CacheOptions(capacity_bytes=64, admission="always"))
+    c.put(1, 0, _arr(64))
+    for _ in range(5):
+        c.get(1, 0)
+    assert c.put(2, 0, _arr(64)) == [1]      # cold 2 displaces hot 1
+
+
+def test_refresh_in_place_keeps_capacity_accounting():
+    c = BlockCache(CacheOptions(capacity_bytes=256))
+    c.put(1, 0, _arr(64))
+    c.put(1, 1, _arr(128))                   # version bump, bigger block
+    assert c.bytes_used == 128 and len(c) == 1
+    assert c.get(1, 1) is not None
+
+
+# -- on_change residency-transition callback ---------------------------------
+
+
+def test_on_change_fires_on_transitions_not_hits():
+    fired = []
+    c = BlockCache(CacheOptions(capacity_bytes=128, admission="always"),
+                   on_change=lambda: fired.append(1))
+    c.put(1, 0, _arr(64))
+    assert len(fired) == 1                   # admission
+    c.get(1, 0)
+    assert len(fired) == 1                   # a hit is not a transition
+    c.put(2, 0, _arr(64))
+    c.put(3, 0, _arr(64))                    # admits 3, evicts 1
+    assert len(fired) == 3
+    c.invalidate([3])
+    assert len(fired) == 4
+    c.get(9, 0)                              # plain miss: no transition
+    assert len(fired) == 4
+
+
+def test_on_change_exceptions_are_swallowed():
+    def boom():
+        raise RuntimeError("rerank hook died")
+    c = BlockCache(CacheOptions(capacity_bytes=128), on_change=boom)
+    c.put(1, 0, _arr(64))                    # must not raise
+    assert c.contains(1, 0)
+
+
+# -- properties --------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["put", "get", "invalidate"]),
+                          st.integers(min_value=0, max_value=12),
+                          st.sampled_from([16, 64, 128, 256])),
+                min_size=0, max_size=80),
+       st.sampled_from([64, 128, 300, 1024]),
+       st.sampled_from(["lru", "lfu"]),
+       st.sampled_from(["frequency", "always"]))
+def test_property_capacity_and_accounting_invariants(ops, cap, policy,
+                                                     admission):
+    """After ANY op sequence: resident bytes ≤ capacity, the byte
+    counter equals the sum of resident entries, every admitted get
+    returns the exact object that was put, and hit+miss counts every
+    get."""
+    c = BlockCache(CacheOptions(capacity_bytes=cap, policy=policy,
+                                admission=admission))
+    shadow = {}
+    gets = 0
+    for op, sid, nbytes in ops:
+        if op == "put":
+            a = _arr(nbytes, float(sid))
+            for victim in c.put(sid, 0, a):
+                shadow.pop(victim, None)
+            cur = c.peek(sid, 0)    # a rejected put keeps the old entry
+            if cur is not None:
+                shadow[sid] = cur
+            else:
+                shadow.pop(sid, None)
+        elif op == "get":
+            gets += 1
+            out = c.get(sid, 0)
+            if out is not None:
+                assert out is shadow[sid]
+            if not c.contains(sid, 0):
+                shadow.pop(sid, None)
+        else:
+            c.invalidate([sid])
+            shadow.pop(sid, None)
+        s = c.stats()
+        assert s["bytes"] <= cap
+        assert s["bytes"] == sum(a.nbytes for a in shadow.values())
+        assert s["entries"] == len(shadow)
+    s = c.stats()
+    assert s["hits"] + s["misses"] == gets
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=20),
+                min_size=1, max_size=120))
+def test_property_eviction_never_loses_version_coherence(accesses):
+    """Under churn every survivor still serves exactly its version:
+    bump a sample's version and the old bytes can never come back."""
+    c = BlockCache(CacheOptions(capacity_bytes=256, admission="always"))
+    version = {}
+    for sid in accesses:
+        v = version.get(sid, 0)
+        got = c.get(sid, v)
+        if got is None:
+            c.put(sid, v, _arr(64, float(sid * 1000 + v)))
+        if sid % 5 == 0:
+            # re-placement: version bump invalidates any cached copy
+            version[sid] = v + 1
+            c.invalidate([sid])
+        cur = c.peek(sid, version.get(sid, 0))
+        if cur is not None:
+            assert float(cur[0]) == float(sid * 1000
+                                          + version.get(sid, 0))

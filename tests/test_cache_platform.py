@@ -1,0 +1,268 @@
+"""Block-cache platform integration (ISSUE 9, DESIGN.md §14): datastore
+coherence on re-placement, cache-aware locality scoring, cache-on ≡
+cache-off bit-identity on both backends, and the grouped
+``PlatformSpec`` options shim (flat kwargs still work but warn)."""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import scheduler as sch
+from repro.core import subsample as ss
+from repro.core.blockcache import BlockCache, CacheOptions
+from repro.core.datastore import ReplicatedDataStore
+from repro.data.synthetic import NetflixSpec, netflix_dataset
+from repro.platform import (
+    ApproxOptions,
+    FaultOptions,
+    MomentsSpec,
+    Platform,
+    PlatformService,
+    PlatformSpec,
+    ScheduleOptions,
+    WaveOptions,
+)
+
+WL = MomentsSpec(draws=4, draw_size=16)
+SAMPLE_LEN = 64
+KNEE = 4 * SAMPLE_LEN * 4
+
+
+def _dataset(n, seed=0):
+    rng = np.random.default_rng(seed)
+    samples = {i: rng.standard_normal(SAMPLE_LEN).astype(np.float32)
+               for i in range(n)}
+    months = {i: np.zeros(SAMPLE_LEN, np.int32) for i in range(n)}
+    return samples, months
+
+
+def _spec(**kw):
+    base = dict(platform="BTS", n_workers=2, backend="threaded",
+                knee_bytes=KNEE, seed=0)
+    base.update(kw)
+    return PlatformSpec(**base)
+
+
+# -- datastore coherence ------------------------------------------------------
+
+
+def test_same_object_reput_keeps_cache_valid():
+    samples, _ = _dataset(8)
+    store = ReplicatedDataStore(n_initial=2)
+    store.cache = BlockCache(CacheOptions(capacity_bytes=1 << 20))
+    store.put_all(samples)
+    store.fetch(3)               # miss → fill
+    assert store.cache.contains(3, store.version_of(3))
+    store.put_all(samples)                    # the driver's re-put path
+    assert store.version_of(3) == 0
+    assert store.cache.contains(3, store.version_of(3))
+    assert np.array_equal(store.fetch(3), samples[3])
+
+
+def test_replacement_invalidates_and_serves_new_bytes():
+    samples, _ = _dataset(8)
+    store = ReplicatedDataStore(n_initial=2)
+    store.cache = BlockCache(CacheOptions(capacity_bytes=1 << 20))
+    store.put_all(samples)
+    old = store.fetch(3)
+    assert store.cache.contains(3, 0)
+
+    new3 = (samples[3] + 100.0).astype(np.float32)
+    store.put_all({3: new3})                  # new bytes → version bump
+    assert store.version_of(3) == 1
+    assert not store.cache.contains(3, 0)
+    got = store.fetch(3)
+    assert np.array_equal(got, new3) and not np.array_equal(got, old)
+    assert store.cache.contains(3, 1)         # refilled at the new version
+
+
+def test_explicit_replication_reput_invalidates():
+    samples, _ = _dataset(8)
+    store = ReplicatedDataStore(n_initial=2)
+    store.cache = BlockCache(CacheOptions(capacity_bytes=1 << 20))
+    store.put_all(samples, replication=1)
+    store.fetch(5)
+    v0 = store.version_of(5)
+    assert store.cache.contains(5, v0)
+    store.put_all(samples, replication=2)     # re-placement, same arrays
+    assert store.version_of(5) == v0 + 1
+    assert store.cache.contains(5, v0) is False
+
+
+def test_cached_fetch_skips_data_nodes():
+    samples, _ = _dataset(8)
+    store = ReplicatedDataStore(n_initial=2)
+    store.cache = BlockCache(CacheOptions(capacity_bytes=1 << 20))
+    store.put_all(samples)
+    store.fetch_many(list(range(8)))
+    before = sum(store.fetch_counts().values())
+    out = store.fetch_many(list(range(8)))
+    assert sum(store.fetch_counts().values()) == before   # all cache hits
+    assert all(np.array_equal(out[i], samples[i]) for i in range(8))
+    assert store.cache.stats()["hits"] >= 8
+
+
+# -- cache-aware locality scoring ---------------------------------------------
+
+
+def test_predicted_task_fetch_zero_for_resident_task():
+    samples, _ = _dataset(8)
+    store = ReplicatedDataStore(n_initial=2)
+    store.cache = BlockCache(CacheOptions(capacity_bytes=1 << 20))
+    store.put_all(samples)
+    cold = store.predicted_task_fetch([0, 1])
+    assert cold > 0.0
+    store.fetch_many([0, 1])     # now resident
+    assert store.predicted_task_fetch([0, 1]) == 0.0
+    assert store.cache_covers([0, 1])
+    # partially-resident tasks still pay for the missing block
+    part = store.predicted_task_fetch([0, 2])
+    assert 0.0 < part <= cold
+    assert not store.cache_covers([0, 2])
+
+
+def test_rank_by_bucket_drains_resident_tasks_first():
+    samples, _ = _dataset(8)
+    store = ReplicatedDataStore(n_initial=2)
+    store.cache = BlockCache(CacheOptions(capacity_bytes=1 << 20))
+    store.put_all(samples)
+    store.fetch_many([4, 5])     # only task B's blocks resident
+    tasks = [sch.Task(task_id=0, sample_ids=(0, 1), size_bytes=512.0),
+             sch.Task(task_id=1, sample_ids=(4, 5), size_bytes=512.0),
+             sch.Task(task_id=2, sample_ids=(2, 3), size_bytes=512.0)]
+    ranked = sch.rank_by_bucket(
+        list(tasks), key_fn=lambda t: t.task_id,
+        score_fn=lambda t: store.predicted_task_fetch(t.sample_ids))
+    assert ranked[0].task_id == 1             # the cache-resident task
+
+
+# -- bit-identity -------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def netflix():
+    return netflix_dataset(NetflixSpec(n_movies=24, mean_ratings=512))
+
+
+@pytest.mark.parametrize("backend", ["threaded", "simulated"])
+def test_cache_on_equals_cache_off(netflix, backend):
+    samples, months = netflix
+    knee = 2 * float(np.mean([a.nbytes for a in samples.values()]))
+
+    def run(cache):
+        return Platform(_spec(backend=backend, knee_bytes=knee,
+                              cache=cache)).run(
+            samples, months, ss.NETFLIX_HIGH)
+
+    off = run(None)
+    on = run(CacheOptions(capacity_bytes=32 << 20))
+    assert np.array_equal(off.result["monthly_mean"],
+                          on.result["monthly_mean"])
+    assert off.n_tasks == on.n_tasks
+
+
+def test_capacity_zero_is_bit_identical_to_no_cache():
+    samples, months = _dataset(16)
+    base = Platform(_spec()).run(samples, months, WL)
+    zero = Platform(_spec(cache=CacheOptions(capacity_bytes=0))).run(
+        samples, months, WL)
+    for key in ("mean", "var", "count"):
+        assert np.array_equal(base.result[key], zero.result[key])
+    assert zero.cache_stats is None           # disabled ⇒ never attached
+
+
+def test_warm_cache_repeat_run_is_identical_and_cheaper():
+    samples, months = _dataset(24)
+    store = ReplicatedDataStore(n_initial=2)
+    spec = _spec(cache=CacheOptions(capacity_bytes=32 << 20))
+    first = Platform(spec, datastore=store).run(samples, months, WL)
+    cold = sum(store.fetch_counts().values())
+    second = Platform(spec, datastore=store).run(samples, months, WL)
+    warm = sum(store.fetch_counts().values()) - cold
+    for key in ("mean", "var", "count"):
+        assert np.array_equal(first.result[key], second.result[key])
+    assert warm < cold
+    assert second.cache_stats["hits"] > 0
+
+
+def test_service_jobs_share_the_pool_cache():
+    samples, months = _dataset(24)
+    store = ReplicatedDataStore(n_initial=2)
+    spec = _spec(cache=CacheOptions(capacity_bytes=32 << 20))
+    with PlatformService(spec, datastore=store) as svc:
+        handle = svc.register_dataset(samples, months, name="d")
+        r1 = svc.submit(handle, WL, seed=0).result(timeout=300)
+        cold = sum(store.fetch_counts().values())
+        r2 = svc.submit(handle, WL, seed=0).result(timeout=300)
+        warm = sum(store.fetch_counts().values()) - cold
+        stats = svc.stats()
+    for key in ("mean", "var", "count"):
+        assert np.array_equal(r1[key], r2[key])
+    assert warm < cold
+    assert stats["cache_hits"] > 0
+
+
+# -- grouped-options shim -----------------------------------------------------
+
+
+def test_flat_kwargs_warn_and_synthesize_groups():
+    with pytest.warns(DeprecationWarning, match="balanced.*deprecated"):
+        spec = _spec(balanced="on", prefetch="on")
+    assert spec.schedule == ScheduleOptions(balanced="on", prefetch="on")
+    assert spec.balanced == "on" and spec.prefetch == "on"
+    # untouched groups synthesize silently at their defaults
+    assert spec.waves == WaveOptions()
+    assert spec.approx == ApproxOptions()
+    assert spec.faults == FaultOptions()
+    assert spec.cache == CacheOptions()
+
+
+def test_grouped_spec_is_silent_and_syncs_flats():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        spec = _spec(
+            waves=WaveOptions(wave="fixed", max_wave=8),
+            schedule=ScheduleOptions(balanced="on", speculation="on"),
+            approx=ApproxOptions(epsilon=0.5),
+            faults=FaultOptions(lease_seconds=1.0))
+    assert spec.wave == "fixed" and spec.max_wave == 8
+    assert spec.balanced == "on" and spec.speculation == "on"
+    assert spec.epsilon == 0.5
+    assert spec.lease_seconds == 1.0
+
+
+def test_clash_group_wins_with_warning():
+    with pytest.warns(DeprecationWarning, match="superseded"):
+        spec = _spec(balanced="off",
+                     schedule=ScheduleOptions(balanced="on"))
+    assert spec.balanced == "on"
+    assert spec.schedule.balanced == "on"
+
+
+def test_grouped_replace_round_trips_silently():
+    spec = _spec(schedule=ScheduleOptions(balanced="on"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        # the internal idiom: carry the group AND matching flats
+        spec2 = dataclasses.replace(
+            spec, seed=7,
+            approx=ApproxOptions(epsilon=0.25),
+            epsilon=0.25)
+    assert spec2.balanced == "on" and spec2.epsilon == 0.25
+    assert spec2.seed == 7
+
+
+def test_submit_legacy_kwargs_warn_grouped_do_not():
+    samples, months = _dataset(8)
+    with PlatformService(_spec()) as svc:
+        handle = svc.register_dataset(samples, months, name="d")
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            t1 = svc.submit(handle, WL, seed=0, epsilon=None, min_tasks=4)
+        t1.result(timeout=300)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            t2 = svc.submit(handle, WL, seed=0,
+                            approx=ApproxOptions(min_tasks=4))
+        t2.result(timeout=300)
