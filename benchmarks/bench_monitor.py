@@ -1,0 +1,314 @@
+"""SLO monitor, critical path, and root-cause diagnosis (DESIGN.md §15)
+— the monitor section of BENCH_platform.json.
+
+Four sections, the ISSUE 10 acceptance gates:
+
+* ``overhead`` — the enabled monitor must be cheap: interleaved
+  (monitor-off, monitor-on) driver-run pairs with telemetry on in both
+  arms, GATED on the median makespan ratio ≤
+  ``run.MAX_MONITOR_OVERHEAD`` (+ a small absolute slack — the
+  denominators are fractions of a second on CI) with every pair's
+  result bit-identical.
+* ``disabled`` — the :class:`MonitorOptions` default leaves the
+  platform untouched: no monitor object, zero bus taps, zero
+  ``alert_*`` events, result bit-identical to a monitor-on run.  GATED.
+* ``diagnosis`` — seeded fault-plan accuracy: clean runs over the
+  4-node store must produce ZERO findings (``--chaos`` widens the seed
+  sweep; the nightly zero-false-positive assertion), and a deterministic
+  plan injecting a worker crash + node kill + latency spike must see
+  every fired fault named in :meth:`PlatformMonitor.diagnose` output,
+  bit-identically to clean.  The monitor HTML report and the alert
+  history land in ``bench_out/`` (the CI artifacts).  GATED.
+* ``critical_path`` — the per-job phase attribution must reconstruct
+  the measured makespan: phase seconds sum within
+  ``run.CRITICAL_PATH_TOLERANCE`` of the job makespan on BOTH the
+  threaded and the simulated backend (median over repeats).  GATED.
+
+The overhead ratio is the only wall-clock gate here and carries its own
+absolute slack, per harness convention.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import subsample as ss
+from repro.core.datastore import ReplicatedDataStore, ReplicationPolicy
+from repro.data.synthetic import NetflixSpec, netflix_dataset
+from repro.platform import FaultOptions, Platform, PlatformSpec
+from repro.platform.faults import FaultEvent, FaultInjector, FaultPlan
+from repro.platform.monitor import write_alerts_jsonl, write_monitor_report
+
+# machine-readable results for BENCH_platform.json (populated by run())
+STRUCTURED: Dict[str, dict] = {}
+
+KNEE = 4 * 1024 * 4
+WL = ss.NETFLIX_HIGH
+OVERHEAD_PAIRS = 5
+CRITICAL_PATH_REPEATS = 3
+# clean-run seeds for the zero-false-positive sweep; nightly --chaos
+# widens it (the seeds vary the subsampling draws, not the fault plan —
+# there is no fault plan on the clean arm by construction)
+CLEAN_SEEDS = (11, 13)
+CLEAN_SEEDS_NIGHTLY = (11, 13, 17, 23, 29)
+# deterministic fault plan for the diagnosis-accuracy gate.  The latency
+# factor is deliberately large: FaultPlan.from_seed draws factors from
+# U(2, 8), and a spike below the store's 3x degraded/outlier thresholds
+# is undetectable by design — the naming gate needs a spike a correct
+# monitor MUST see.  Measured fetch times carry ~2-3ms of timer slop on
+# top of BASE_LAT under thread contention, so the factor keeps the
+# spiked node well above 3x the peers' OBSERVED (not nominal) latency.
+FAULT_PLAN = FaultPlan(events=(
+    FaultEvent("worker_crash", target=1, at_claims=2),
+    FaultEvent("node_kill", target=2, at_completions=6),
+    FaultEvent("node_latency", target=0, at_completions=1, factor=12.0),
+))
+BASE_LAT = 2e-3
+N_NODES = 4
+# side artifacts land in the (git-ignored) bench_out/ directory; only
+# BENCH_platform.json — the cross-PR metric record — stays at the root
+OUT_DIR = "bench_out"
+REPORT_PATH = os.path.join(OUT_DIR, "monitor_report.html")
+ALERTS_PATH = os.path.join(OUT_DIR, "monitor_alerts.jsonl")
+
+
+def _dataset():
+    return netflix_dataset(NetflixSpec(n_movies=24, mean_ratings=1024))
+
+
+def _spec(**kw) -> PlatformSpec:
+    base = dict(platform="BTS", n_workers=3, backend="threaded",
+                knee_bytes=KNEE, seed=11)
+    base.update(kw)
+    return PlatformSpec(**base)
+
+
+def _store() -> ReplicatedDataStore:
+    # bench_balance's 4-node store idiom; least_inflight keeps the
+    # spiked node serving measurable fetches (no traffic shedding), so
+    # the latency outlier stays observable to the monitor
+    return ReplicatedDataStore(
+        n_initial=N_NODES,
+        policy=ReplicationPolicy(fetch_slo=BASE_LAT, window=10_000,
+                                 max_replicas=N_NODES),
+        latency=lambda nbytes: BASE_LAT,
+        select="least_inflight")
+
+
+def _results_equal(a: dict, b: dict) -> bool:
+    return (set(a) == set(b)
+            and all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+                    for k in a))
+
+
+# ---------------------------------------------------------------------------
+# overhead: interleaved monitor-off/on pairs, median makespan ratio
+# ---------------------------------------------------------------------------
+
+
+def _overhead_section(rows: List[Row], samples, months) -> None:
+    ratios, off_s, on_s = [], [], []
+    identical = True
+    for _ in range(OVERHEAD_PAIRS):
+        r_off = Platform(_spec(telemetry=True)).run(samples, months, WL)
+        r_on = Platform(_spec(telemetry=True, monitor=True)).run(
+            samples, months, WL)
+        identical = identical and _results_equal(r_off.result, r_on.result)
+        off_s.append(r_off.makespan)
+        on_s.append(r_on.makespan)
+        ratios.append(r_on.makespan / max(r_off.makespan, 1e-9))
+    out = {
+        "pairs": OVERHEAD_PAIRS,
+        "median_ratio": statistics.median(ratios),
+        "median_off_s": statistics.median(off_s),
+        "median_on_s": statistics.median(on_s),
+        "bit_identical": identical,
+    }
+    rows.append(("monitor.overhead.median_ratio", out["median_ratio"],
+                 f"bit_identical={identical}"))
+    rows.append(("monitor.overhead.median_on_s",
+                 out["median_on_s"] * 1e6, "wall"))
+    STRUCTURED["overhead"] = out
+
+
+# ---------------------------------------------------------------------------
+# disabled: MonitorOptions default ⇒ no taps, no alert events, identical
+# ---------------------------------------------------------------------------
+
+
+def _disabled_section(rows: List[Row], samples, months) -> None:
+    p_off = Platform(_spec(telemetry=True))
+    r_off = p_off.run(samples, months, WL)
+    snap_off = p_off.telemetry.snapshot()
+    alert_events = sum(
+        snap_off["events_by_kind"].get(k, 0)
+        for k in ("alert_raised", "alert_cleared"))
+    alert_counters = (
+        snap_off["metrics"]["counters"].get("alerts_raised", 0.0)
+        + snap_off["metrics"]["counters"].get("alerts_cleared", 0.0))
+    p_on = Platform(_spec(telemetry=True, monitor=True))
+    r_on = p_on.run(samples, months, WL)
+    out = {
+        "monitor_absent": p_off.monitor is None,
+        "taps": len(getattr(p_off.telemetry, "_taps", ())),
+        "alert_events": int(alert_events + alert_counters),
+        "bit_identical": _results_equal(r_off.result, r_on.result),
+    }
+    rows.append(("monitor.disabled.alert_events",
+                 float(out["alert_events"]),
+                 f"absent={out['monitor_absent']}_taps={out['taps']}_"
+                 f"bit_identical={out['bit_identical']}"))
+    STRUCTURED["disabled"] = out
+
+
+# ---------------------------------------------------------------------------
+# diagnosis: zero findings on clean runs, every injected fault named
+# ---------------------------------------------------------------------------
+
+
+def _fault_named(fired: FaultEvent, findings: List[dict]) -> bool:
+    """True when ``findings`` names the fired fault: a killed node must
+    surface as a DOWN degraded_node, a latency spike as a degraded_node
+    on that node, a worker crash as worker_churn on that worker."""
+    kind, target = fired.kind, fired.target
+    if kind == "worker_crash":
+        return any(f["kind"] == "worker_churn" and f.get("worker") == target
+                   for f in findings)
+    if kind == "node_kill":
+        return any(f["kind"] == "degraded_node" and f.get("node") == target
+                   and f.get("state") == "down" for f in findings)
+    if kind == "node_latency":
+        return any(f["kind"] == "degraded_node" and f.get("node") == target
+                   for f in findings)
+    return True
+
+
+def _diagnosis_section(rows: List[Row], samples, months,
+                       chaos: bool) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    spec_kw = dict(telemetry=True, monitor=True,
+                   faults=FaultOptions(lease_seconds=0.5))
+    # clean sweep: any finding on a fault-free run is a false positive
+    seeds = CLEAN_SEEDS_NIGHTLY if chaos else CLEAN_SEEDS
+    clean_counts: Dict[str, int] = {}
+    clean_result = None
+    for seed in seeds:
+        p = Platform(_spec(seed=seed, **spec_kw), datastore=_store())
+        rep = p.run(samples, months, WL)
+        findings = p.monitor_snapshot()["findings"]
+        clean_counts[str(seed)] = len(findings)
+        if seed == _spec().seed:
+            clean_result = rep.result
+        rows.append((f"monitor.diagnosis.clean.seed{seed}.findings",
+                     float(len(findings)), "false_positives"))
+    if clean_result is None:
+        p = Platform(_spec(**spec_kw), datastore=_store())
+        clean_result = p.run(samples, months, WL).result
+
+    # fault arm: the deterministic plan, same spec/seed as the clean run
+    injector = FaultInjector(FAULT_PLAN)
+    p = Platform(_spec(**spec_kw), datastore=_store(),
+                 fault_injector=injector)
+    rep = p.run(samples, months, WL)
+    snap = p.monitor_snapshot()
+    findings = snap["findings"]
+    named = {f"{e.kind}:{e.target}": _fault_named(e, findings)
+             for e in injector.fired}
+    write_monitor_report(p.monitor, REPORT_PATH,
+                         title="bench_monitor seeded faults")
+    alert_lines = write_alerts_jsonl(p.monitor, ALERTS_PATH)
+
+    out = {
+        "clean_seeds": clean_counts,
+        "all_clean_zero": all(c == 0 for c in clean_counts.values()),
+        "fault": {
+            "fired": len(injector.fired),
+            "planned": len(FAULT_PLAN.events),
+            "named": named,
+            "all_named": (len(injector.fired) == len(FAULT_PLAN.events)
+                          and all(named.values())),
+            "findings": [{"kind": f["kind"], "severity": f["severity"],
+                          "summary": f["summary"]} for f in findings],
+            "bit_identical": _results_equal(clean_result, rep.result),
+            "alerts_raised": len(snap["alerts"]["history"]),
+        },
+        "report_path": REPORT_PATH,
+        "alerts_path": ALERTS_PATH,
+        "alert_lines": alert_lines,
+    }
+    rows.append(("monitor.diagnosis.fault.findings", float(len(findings)),
+                 f"all_named={out['fault']['all_named']}_"
+                 f"bit_identical={out['fault']['bit_identical']}"))
+    rows.append(("monitor.diagnosis.fault.alerts", float(alert_lines),
+                 "history"))
+    STRUCTURED["diagnosis"] = out
+
+
+# ---------------------------------------------------------------------------
+# critical path: phase seconds reconstruct the makespan on both backends
+# ---------------------------------------------------------------------------
+
+
+def _critical_path_section(rows: List[Row], samples, months) -> None:
+    out: Dict[str, dict] = {}
+    for backend in ("threaded", "simulated"):
+        ratios = []
+        for _ in range(CRITICAL_PATH_REPEATS):
+            p = Platform(_spec(backend=backend, telemetry=True,
+                               monitor=True))
+            p.run(samples, months, WL)
+            cp = p.monitor_snapshot()["critical_path"]
+            (rec,) = cp.values()
+            ratios.append(rec["phase_sum"] / max(rec["makespan"], 1e-9))
+        out[backend] = {
+            "repeats": CRITICAL_PATH_REPEATS,
+            "ratios": ratios,
+            "median_ratio": statistics.median(ratios),
+            "tasks_settled": rec["tasks_settled"],
+        }
+        rows.append((f"monitor.critical_path.{backend}.ratio",
+                     out[backend]["median_ratio"],
+                     f"tasks={rec['tasks_settled']}"))
+    STRUCTURED["critical_path"] = out
+
+
+def run(smoke: bool = False, chaos: bool = False) -> List[Row]:
+    del smoke          # sizes fixed: the diagnosis/identity gates need them
+    samples, months = _dataset()
+    rows: List[Row] = []
+    _overhead_section(rows, samples, months)
+    _disabled_section(rows, samples, months)
+    _diagnosis_section(rows, samples, months, chaos)
+    _critical_path_section(rows, samples, months)
+    return rows
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true")
+    parser.add_argument("--chaos", action="store_true",
+                        help="widen the clean-run seed sweep for the "
+                        "zero-false-positive assertion (nightly CI)")
+    args = parser.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke, chaos=args.chaos):
+        print(f"{name},{us:.3f},{derived}")
+    # standalone runs apply the same structured gates as the run.py
+    # harness (bounded overhead, disabled-is-absent, diagnosis accuracy,
+    # critical-path reconstruction)
+    from benchmarks.run import _check_monitor_regression
+    failures = _check_monitor_regression(STRUCTURED)
+    for msg in failures:
+        print(f"# FAIL: {msg}", file=sys.stderr)
+    return 2 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -92,8 +92,18 @@ TELEMETRY_OVERHEAD_ABS_SLACK = 0.05
 # bit-identically (measured headroom ≈ the 8-run/8-job arm size), and a
 # zero-capacity cache must match the cacheless platform exactly
 MIN_CACHE_FETCH_RATIO = 5.0
+# SLO monitor (ISSUE 10): the enabled monitor may cost at most this
+# factor of the monitor-off run's makespan (median over interleaved
+# pairs, same slack convention as telemetry), the seeded-fault diagnosis
+# must name every injected fault with zero findings on clean runs, and
+# the critical-path phase seconds must reconstruct the job makespan
+# within this tolerance on both backends
+MAX_MONITOR_OVERHEAD = 1.05
+MONITOR_OVERHEAD_ABS_SLACK = 0.05
+CRITICAL_PATH_TOLERANCE = 0.05
 SMOKE_MODULES = ("platform_overhead", "kernels", "service", "balance",
-                 "approx", "sharded", "faults", "telemetry", "cache")
+                 "approx", "sharded", "faults", "telemetry", "cache",
+                 "monitor")
 
 
 def _check_wave_regression(structured: dict) -> list:
@@ -356,6 +366,75 @@ def _check_telemetry_regression(structured: dict) -> list:
     return failures
 
 
+def _check_monitor_regression(structured: dict) -> list:
+    """ISSUE 10 gates over bench_monitor's structured results: the
+    enabled monitor stays within the overhead budget bit-identically,
+    the disabled default leaves no taps/alerts and matches monitor-on
+    results exactly, every injected fault is named in diagnose() output
+    while clean runs stay finding-free, and the critical-path phase sum
+    reconstructs the makespan on both backends."""
+    failures = []
+    ov = structured.get("overhead")
+    if ov:
+        limit = (MAX_MONITOR_OVERHEAD
+                 + MONITOR_OVERHEAD_ABS_SLACK
+                 / max(ov["median_off_s"], 1e-9))
+        if ov["median_ratio"] > limit:
+            failures.append(
+                f"monitor overhead: enabled median makespan "
+                f"{ov['median_on_s']:.3f}s is {ov['median_ratio']:.3f}x "
+                f"monitor-off ({ov['median_off_s']:.3f}s) > "
+                f"{MAX_MONITOR_OVERHEAD}x budget (+ "
+                f"{MONITOR_OVERHEAD_ABS_SLACK}s slack)")
+        if not ov["bit_identical"]:
+            failures.append("monitor overhead: an off/on pair's results "
+                            "diverged — the monitor leaked into the "
+                            "statistic")
+    dis = structured.get("disabled")
+    if dis:
+        if not dis["monitor_absent"]:
+            failures.append("monitor disabled: default MonitorOptions "
+                            "still constructed a monitor")
+        if dis["taps"] != 0:
+            failures.append(
+                f"monitor disabled: {dis['taps']} tap(s) left on the "
+                f"telemetry bus (must be 0)")
+        if dis["alert_events"] != 0:
+            failures.append(
+                f"monitor disabled: {dis['alert_events']} alert "
+                f"event(s) emitted (must be 0)")
+        if not dis["bit_identical"]:
+            failures.append("monitor disabled: monitor-off result "
+                            "diverged from monitor-on")
+    diag = structured.get("diagnosis")
+    if diag:
+        if not diag["all_clean_zero"]:
+            bad = {s: c for s, c in diag["clean_seeds"].items() if c}
+            failures.append(
+                f"monitor diagnosis: false positives on clean seeds "
+                f"{bad} (every clean run must diagnose zero findings)")
+        fa = diag["fault"]
+        if fa["fired"] != fa["planned"]:
+            failures.append(
+                f"monitor diagnosis: only {fa['fired']} of "
+                f"{fa['planned']} planned faults fired")
+        if not fa["all_named"]:
+            missed = [k for k, ok in fa["named"].items() if not ok]
+            failures.append(
+                f"monitor diagnosis: injected faults not named in "
+                f"diagnose() output: {missed}")
+        if not fa["bit_identical"]:
+            failures.append("monitor diagnosis: seeded-fault result "
+                            "diverged from the clean run")
+    for backend, res in structured.get("critical_path", {}).items():
+        if abs(res["median_ratio"] - 1.0) > CRITICAL_PATH_TOLERANCE:
+            failures.append(
+                f"monitor critical_path/{backend}: phase sum is "
+                f"{res['median_ratio']:.3f}x the measured makespan "
+                f"(must be within {CRITICAL_PATH_TOLERANCE:.0%})")
+    return failures
+
+
 def _check_cache_regression(structured: dict) -> list:
     """ISSUE 9 gates over bench_cache's structured results: repeat and
     overlapping queries must cut data-node fetch traffic ≥
@@ -553,6 +632,7 @@ _STRUCTURED_CHECKS = {
     "sharded": _check_sharded_regression,
     "faults": _check_faults_regression,
     "telemetry": _check_telemetry_regression,
+    "monitor": _check_monitor_regression,
 }
 
 
@@ -585,9 +665,10 @@ def main(argv=None) -> int:
     from benchmarks import (bench_approx, bench_balance, bench_cache,
                             bench_elasticity, bench_faults, bench_hetero,
                             bench_jobsize, bench_kernels, bench_kneepoint,
-                            bench_platform_overhead, bench_reduce_sim,
-                            bench_service, bench_sharded,
-                            bench_task_sizing, bench_telemetry)
+                            bench_monitor, bench_platform_overhead,
+                            bench_reduce_sim, bench_service,
+                            bench_sharded, bench_task_sizing,
+                            bench_telemetry)
     modules = [
         # balance first: its FIFO-vs-balanced wall-clock ratio is the
         # noise-sensitive gate, and the JAX modules leave threadpools
@@ -607,6 +688,7 @@ def main(argv=None) -> int:
         ("faults", bench_faults),
         ("telemetry", bench_telemetry),
         ("cache", bench_cache),
+        ("monitor", bench_monitor),
     ]
 
     report = {"schema": 1, "smoke": args.smoke, "modules": {}}

@@ -924,7 +924,8 @@ class MultiJobScheduler:
                          exec_seconds: Optional[float],
                          task_id: Optional[int] = None,
                          speculative: bool = False,
-                         worker: Optional[int] = None) -> bool:
+                         worker: Optional[int] = None,
+                         fetch_seconds: Optional[float] = None) -> bool:
         """Record one finished task; True when its job just completed.
         ``exec_seconds`` feeds the per-task-seconds EMA the deadline
         model uses; pass ``None`` to settle in-flight accounting without
@@ -951,10 +952,14 @@ class MultiJobScheduler:
         job.inflight -= 1
         duplicate = (task_id is not None and task_id in job.completed_ids)
         if not duplicate:
+            # depth/fetch_seconds feed the monitor's queue-depth SLI and
+            # critical-path fetch attribution (DESIGN.md §15) — the
+            # single-job scheduler's settle carries the same fields
             self.telemetry.emit(
                 "task_settled", job_id=job_id, task_id=task_id,
                 worker=worker, exec_seconds=exec_seconds,
-                speculative=speculative)
+                fetch_seconds=fetch_seconds, speculative=speculative,
+                depth=sum(len(j.pending) for j in self.jobs.values()))
             job.completed += 1
             if task_id is not None:
                 job.completed_ids.add(task_id)

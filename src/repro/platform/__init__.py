@@ -57,6 +57,17 @@ from repro.platform.driver import (  # noqa: F401
     resolve_platform_config,
     wave_enabled,
 )
+from repro.platform.monitor import (  # noqa: F401
+    SLO,
+    MonitorOptions,
+    PlatformMonitor,
+    SLOPolicy,
+    TimeSeriesStore,
+    render_monitor_report,
+    resolve_monitor_options,
+    write_alerts_jsonl,
+    write_monitor_report,
+)
 from repro.platform.reduce import (  # noqa: F401
     StreamingReduceTree,
     finalize_stats,
@@ -108,4 +119,8 @@ __all__ = [
     "PartialEstimate",
     # telemetry configuration
     "TelemetryConfig",
+    # SLO monitor / critical-path / diagnosis (DESIGN.md §15)
+    "MonitorOptions",
+    "PlatformMonitor",
+    "SLO",
 ]

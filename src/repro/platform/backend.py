@@ -481,6 +481,7 @@ class ServicePool:
                              lambda _pj=pj, _t=t: _pj.fetch(_t)))
                     if entries:
                         self.prefetcher.prefetch(entries)
+                t_f = time.perf_counter()
                 for pj, task in pool_batch:
                     if pj.fetch is not None:
                         if self.prefetcher is not None:
@@ -490,6 +491,7 @@ class ServicePool:
                         else:
                             pj.fetch(task)
                 t1 = time.perf_counter()
+                fetch_each = (t1 - t_f) / max(len(pool_batch), 1)
                 values = pool_batch[0][0].run_batch(pool_batch)
                 took = time.perf_counter() - t1
             except BaseException as e:      # noqa: BLE001
@@ -546,7 +548,12 @@ class ServicePool:
                     if self.sched.on_task_complete(job.job_id, sample,
                                                    _task.task_id,
                                                    speculative=is_spec,
-                                                   worker=wid):
+                                                   worker=wid,
+                                                   fetch_seconds=(
+                                                       fetch_each
+                                                       if job.job_id
+                                                       in executed
+                                                       else None)):
                         pj = self._jobs.pop(job.job_id, None)
                         self._started_jobs.discard(job.job_id)
                         if pj is not None:

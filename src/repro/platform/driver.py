@@ -51,6 +51,12 @@ from repro.core.blockcache import BlockCache, CacheOptions
 from repro.core.prefetch import TaskPrefetcher
 from repro.platform import compute as pc
 from repro.platform import telemetry as tel
+from repro.platform.monitor import (
+    MonitorOptions,
+    PlatformMonitor,
+    resolve_monitor_options,
+    write_monitor_report as _write_monitor_report,
+)
 from repro.platform.backend import (
     BackendOutcome,
     PlatformBackend,
@@ -249,6 +255,10 @@ class PlatformSpec:
     # CacheOptions() has capacity_bytes=0 ⇒ disabled, bit-identical to
     # the uncached platform
     cache: Optional[CacheOptions] = None
+    # SLO monitor / critical-path / diagnosis layer (DESIGN.md §15);
+    # None/False ⇒ disabled (no tap, zero new events, bit-identical),
+    # True/"on" ⇒ enabled defaults, or an explicit MonitorOptions
+    monitor: Any = None
 
     def __post_init__(self) -> None:
         for gname, gcls, members in _SPEC_GROUPS:
@@ -281,6 +291,8 @@ class PlatformSpec:
                     object.__setattr__(self, m, getattr(group, m))
         if self.cache is None:
             object.__setattr__(self, "cache", CacheOptions())
+        object.__setattr__(self, "monitor",
+                           resolve_monitor_options(self.monitor))
 
 
 @dataclasses.dataclass
@@ -811,6 +823,13 @@ class Platform:
         self.telemetry = tel.TelemetryBus(
             tel.resolve_telemetry_config(spec.telemetry),
             virtual=(spec.backend == "simulated"))
+        # SLO monitor (DESIGN.md §15): a tap-driven bus consumer, built
+        # only when enabled — the default leaves the bus untapped (zero
+        # new events, zero threads, bit-identical results)
+        self.monitor: Optional[PlatformMonitor] = None
+        if spec.monitor.enabled:
+            self.monitor = PlatformMonitor(self.telemetry, spec.monitor,
+                                           wave_capacity=spec.max_wave)
 
     # -- config plumbing -----------------------------------------------------
     def _platform_config(self) -> PlatformConfig:
@@ -1090,6 +1109,11 @@ class Platform:
             if self.datastore is not None:
                 injector.attach_store(self.datastore)
             emit = injector.wrap_emit(emit)
+        # execute-window anchor for the critical-path analyzer: bus time
+        # just before the backend starts (0.0 on a virtual bus — the sim
+        # clock opens at startup_time, so the window equals the virtual
+        # makespan)
+        t_execute = bus.now()
         t0 = time.perf_counter()
         try:
             outcome = self._backend(n_eff).run(
@@ -1167,7 +1191,12 @@ class Platform:
             if ci is not None:
                 bus.emit("ci_snapshot", **ci.as_dict())
         bus.emit("job_done", makespan=outcome.makespan,
-                 tasks_executed=len({r.task_id for r in outcome.results}))
+                 tasks_executed=len({r.task_id for r in outcome.results}),
+                 t_execute=t_execute,
+                 startup_seconds=(plat.startup_time * spec.startup_scale
+                                  if spec.backend == "simulated"
+                                  else plat.startup_time),
+                 reduce_seconds=phases.get("reduce", 0.0))
         return self._report(plat, outcome, tasks, plan.total_bytes,
                             plan.knee_bytes, plan.knee_res, engine, phases,
                             result, reduce_info, dispatch=dispatch,
@@ -1229,6 +1258,26 @@ class Platform:
                             spec.knee_bytes, None, "cost-model", phases,
                             None, None, backend_name="simulated",
                             scale_decision=decision, n_workers_used=n_eff)
+
+    # -- monitor surface (DESIGN.md §15) -------------------------------------
+    def monitor_snapshot(self) -> Dict[str, Any]:
+        """SLIs, alerts, per-job critical paths, and ranked findings —
+        requires ``monitor=MonitorOptions(enabled=True)`` on the spec."""
+        if self.monitor is None:
+            raise RuntimeError(
+                "monitor disabled; construct the Platform with "
+                "PlatformSpec(monitor=MonitorOptions(enabled=True))")
+        return self.monitor.snapshot()
+
+    def write_monitor_report(self, path: str,
+                             title: str = "platform monitor") -> None:
+        """Self-contained HTML: alert timeline + per-job critical-path
+        waterfall (requires the monitor to be enabled)."""
+        if self.monitor is None:
+            raise RuntimeError(
+                "monitor disabled; construct the Platform with "
+                "PlatformSpec(monitor=MonitorOptions(enabled=True))")
+        _write_monitor_report(self.monitor, path, title)
 
     # -- report assembly -----------------------------------------------------
     def _report(self, plat: PlatformConfig, outcome: BackendOutcome,

@@ -56,6 +56,7 @@ from repro.core import estimator as est_mod
 from repro.core import scheduler as sch
 from repro.core.blockcache import BlockCache
 from repro.platform import compute as pc
+from repro.platform import monitor as mon
 from repro.platform import telemetry as tel
 from repro.platform.backend import PoolJob, ServicePool
 from repro.platform.driver import (
@@ -437,6 +438,12 @@ class PlatformService:
             tel.resolve_telemetry_config(spec.telemetry))
         self.telemetry.bind_dispatch(self.dispatch)
         self.sampler = tel.TelemetrySampler(self.telemetry)
+        # SLO monitor (DESIGN.md §15): tap-driven, built only when
+        # enabled — the default leaves the bus untapped
+        self.monitor: Optional[mon.PlatformMonitor] = None
+        if spec.monitor.enabled:
+            self.monitor = mon.PlatformMonitor(
+                self.telemetry, spec.monitor, wave_capacity=spec.max_wave)
         if datastore is not None:
             datastore.telemetry = self.telemetry
             # worker-side block cache (DESIGN.md §14): one pool-wide
@@ -487,6 +494,10 @@ class PlatformService:
         self.sampler.stop()
         for ticket, _args in waiting:
             self._finish(ticket, REJECTED, reason="service closed")
+        if self.monitor is not None:
+            # detach AFTER the sampler's final flush and the queued-
+            # ticket rejections so the monitor sees the session out
+            self.monitor.close()
         if self.datastore is not None:
             self.datastore.on_state_change = None
             self.datastore.telemetry = None
@@ -992,6 +1003,8 @@ class PlatformService:
              REJECTED: "job_rejected", CANCELLED: "job_cancelled"}[status],
             job_id=ticket.job_id,
             tasks_executed=ticket.tasks_executed,
+            **({} if ticket.latency is None
+               else {"makespan": ticket.latency}),
             **({} if ticket.reason is None else {"reason": ticket.reason}))
         ticket._done.set()
         self._drain_waiting()
@@ -1157,6 +1170,26 @@ class PlatformService:
         """Write a dependency-free, self-contained HTML report for this
         service session."""
         tel.write_report(self.telemetry, path, title=title)
+
+    def monitor_snapshot(self) -> Dict[str, Any]:
+        """The monitor's full view (DESIGN.md §15): SLIs, alert state,
+        per-job critical paths, and ranked root-cause findings —
+        requires ``monitor=MonitorOptions(enabled=True)`` on the spec."""
+        if self.monitor is None:
+            raise RuntimeError(
+                "monitor disabled; construct the service with "
+                "PlatformSpec(monitor=MonitorOptions(enabled=True))")
+        return self.monitor.snapshot()
+
+    def write_monitor_report(self, path: str,
+                             title: str = "platform monitor") -> None:
+        """Self-contained HTML: alert timeline + per-job critical-path
+        waterfall (requires the monitor to be enabled)."""
+        if self.monitor is None:
+            raise RuntimeError(
+                "monitor disabled; construct the service with "
+                "PlatformSpec(monitor=MonitorOptions(enabled=True))")
+        mon.write_monitor_report(self.monitor, path, title)
 
     def _register_sampler_providers(self) -> None:
         """Periodic time-series rows (DESIGN.md §13): queue depth and

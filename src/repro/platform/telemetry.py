@@ -80,6 +80,8 @@ EVENT_KINDS = frozenset((
     "job_cancelled",
     # error-bounded execution (§10)
     "ci_snapshot",
+    # SLO monitor (DESIGN.md §15): burn-rate alert transitions
+    "alert_raised", "alert_cleared",
     # sampler rows
     "sample",
 ))
@@ -178,6 +180,38 @@ class MetricsRegistry:
             acc[0] += value
             acc[1] += 1
 
+    def quantile(self, name: str, q: float) -> Optional[float]:
+        """Estimate the ``q``-quantile (0..1) of histogram ``name`` by
+        linear interpolation inside its fixed buckets (the
+        ``histogram_quantile`` estimator): walk the cumulative counts to
+        the bucket where rank ``q·n`` lands, then interpolate between
+        that bucket's bounds.  Values in the overflow bucket clamp to
+        the last finite upper bound.  ``None`` when the histogram is
+        missing or empty."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        with self._lock:
+            hist = self._hists.get(name)
+            if hist is None:
+                return None
+            uppers, counts, acc = hist
+            n = acc[1]
+            if n <= 0:
+                return None
+            rank = q * n
+            cum = 0.0
+            for i, c in enumerate(counts):
+                if c == 0:
+                    continue
+                if cum + c >= rank:
+                    if i >= len(uppers):
+                        return float(uppers[-1])
+                    lo = uppers[i - 1] if i > 0 else 0.0
+                    return float(lo + (uppers[i] - lo)
+                                 * ((rank - cum) / c))
+                cum += c
+            return float(uppers[-1])
+
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             return {
@@ -225,6 +259,11 @@ class TelemetryBus:
         # the owning scheduler's queue-depth trace list.
         self._dispatch: Optional[Any] = None
         self._depths: Optional[List[int]] = None
+        # live-stream subscribers (the SLO monitor): an immutable tuple
+        # swapped under the lock, iterated without it — empty on the
+        # default path so emit() stays a couple of dict updates
+        self._taps: Tuple[Callable[[str, float, Dict[str, Any]], None],
+                          ...] = ()
 
     # -- clock ---------------------------------------------------------------
     def now(self) -> float:
@@ -248,6 +287,24 @@ class TelemetryBus:
         with self._lock:
             self._depths = depths
 
+    # -- live-stream taps ----------------------------------------------------
+    def add_tap(self, fn: Callable[[str, float, Dict[str, Any]], None]
+                ) -> None:
+        """Subscribe ``fn(kind, ts, fields)`` to every emitted event
+        (recorded or not — the tap sees the stream even when the ring is
+        disabled).  Taps run OUTSIDE the bus lock, so a tap may itself
+        emit (the monitor's alert path) without deadlocking — but must
+        then tolerate re-entrancy into its own callback."""
+        with self._lock:
+            self._taps = self._taps + (fn,)
+
+    def remove_tap(self, fn: Callable[[str, float, Dict[str, Any]], None]
+                   ) -> None:
+        with self._lock:
+            # equality, not identity: a bound method (the monitor's
+            # ``self._on_event``) is a fresh object per attribute access
+            self._taps = tuple(t for t in self._taps if t != fn)
+
     # -- emit ----------------------------------------------------------------
     def emit(self, kind: str, ts: Optional[float] = None,
              **fields: Any) -> None:
@@ -262,6 +319,11 @@ class TelemetryBus:
                 self._events.append(
                     Event(self._seq, self.now() if ts is None else ts,
                           kind, fields))
+            taps = self._taps
+            tap_ts = (ts if ts is not None
+                      else (self.now() if taps else 0.0))
+        for tap in taps:
+            tap(kind, tap_ts, fields)
 
     # -- the ONE aggregation path -------------------------------------------
     def _aggregate(self, kind: str, f: Dict[str, Any]) -> None:
@@ -337,6 +399,10 @@ class TelemetryBus:
             hw = f.get("half_width")
             if hw is not None:
                 m.set_gauge("ci_half_width", hw)
+        elif kind == "alert_raised":
+            m.inc("alerts_raised")
+        elif kind == "alert_cleared":
+            m.inc("alerts_cleared")
 
     # -- record a sampler row ------------------------------------------------
     def record_sample(self, row: Dict[str, Any],
@@ -443,6 +509,10 @@ class TelemetrySampler:
         thread, self._thread = self._thread, None
         if thread is not None:
             thread.join(timeout=2.0)
+            if self.bus.enabled:
+                # final flush: a job shorter than one sample_every tick
+                # still contributes at least one time-series row
+                self.sample_once()
 
 
 # ---------------------------------------------------------------------------
@@ -621,16 +691,20 @@ def render_report(bus: TelemetryBus, title: str = "platform telemetry"
         _table(sorted(metrics["gauges"].items()), ("gauge", "value")),
     ]
     if metrics["histograms"]:
-        parts.append("<h2>Histograms</h2>")
+        # quantiles interpolated from the fixed buckets, not raw bucket
+        # dumps: the p50/p95/p99 view SLO policies are written against
+        parts.append("<h2>Histogram quantiles</h2>")
+        hist_rows = []
         for name, h in sorted(metrics["histograms"].items()):
             mean = h["sum"] / h["count"] if h["count"] else 0.0
-            rows = [(f"≤{u:g}", c)
-                    for u, c in zip(h["buckets"], h["counts"])]
-            rows.append((f">{h['buckets'][-1]:g}", h["counts"][-1]))
-            parts.append(
-                f"<h3>{_html.escape(name)} "
-                f"<small>n={h['count']} mean={mean:.4g}</small></h3>")
-            parts.append(_table(rows, ("bucket", "count")))
+            qs = (bus.metrics.quantile(name, q)
+                  for q in (0.5, 0.9, 0.95, 0.99))
+            hist_rows.append(
+                (name, h["count"], f"{mean:.4g}",
+                 *(f"{v:.4g}" if v is not None else "—" for v in qs)))
+        parts.append(_table(
+            hist_rows,
+            ("histogram", "n", "mean", "p50", "p90", "p95", "p99")))
     if snap["events_by_kind"]:
         parts.append("<h2>Events by kind</h2>")
         parts.append(_table(sorted(snap["events_by_kind"].items()),

@@ -1,0 +1,453 @@
+"""SLO monitor, critical-path analyzer, and root-cause diagnosis
+(ISSUE 10 / DESIGN.md §15): opt-in tap with zero threads and
+bit-identical results when disabled, multi-window burn-rate alerting in
+bus time, phase attribution that reconstructs the makespan, and
+symptom-based findings that name injected faults without reading the
+injection oracle."""
+
+import numpy as np
+import pytest
+
+from repro.platform import (
+    MonitorOptions,
+    Platform,
+    PlatformMonitor,
+    PlatformService,
+    PlatformSpec,
+    SLO,
+    MomentsSpec,
+    TelemetryBus,
+    TelemetryConfig,
+)
+from repro.platform.monitor import (
+    DEFAULT_SLOS,
+    SLOPolicy,
+    TimeSeriesStore,
+    render_monitor_report,
+    resolve_monitor_options,
+    write_alerts_jsonl,
+    write_monitor_report,
+)
+
+WL = MomentsSpec(draws=4, draw_size=16)
+KNEE = 4 * 96 * 4
+
+
+def _dataset(n=16, length=96, seed=0):
+    rng = np.random.default_rng(seed)
+    samples = {i: rng.standard_normal(length).astype(np.float32)
+               for i in range(n)}
+    months = {i: np.zeros(length, np.int32) for i in range(n)}
+    return samples, months
+
+
+def _spec(**kw):
+    base = dict(platform="BTS", n_workers=2, backend="threaded",
+                knee_bytes=KNEE, seed=0, max_wave=16)
+    base.update(kw)
+    return PlatformSpec(**base)
+
+
+def _results_equal(a, b):
+    return (set(a) == set(b)
+            and all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+                    for k in a))
+
+
+def _virtual_monitor(**opt_kw):
+    bus = TelemetryBus(TelemetryConfig(enabled=True), virtual=True)
+    mon = PlatformMonitor(bus, MonitorOptions(enabled=True, **opt_kw),
+                          wave_capacity=16)
+    return bus, mon
+
+
+# -- options ------------------------------------------------------------------
+
+
+def test_resolve_monitor_options_forms():
+    assert resolve_monitor_options(None).enabled is False
+    assert resolve_monitor_options(False).enabled is False
+    assert resolve_monitor_options(True).enabled is True
+    assert resolve_monitor_options("on").enabled is True
+    opts = MonitorOptions(enabled=True, fast_window=1.0)
+    assert resolve_monitor_options(opts) is opts
+    with pytest.raises(ValueError):
+        resolve_monitor_options("loud")
+    with pytest.raises(ValueError):
+        MonitorOptions(fast_window=0.0)
+    with pytest.raises(ValueError):
+        MonitorOptions(history=2)
+
+
+def test_slo_validation_and_key():
+    slo = SLO("queue_depth", 8.0, "above")
+    assert slo.key == "queue_depth>8"
+    assert slo.violates(9.0) and not slo.violates(8.0)
+    below = SLO("hit_ratio", 0.5, "below")
+    assert below.key == "hit_ratio<0.5"
+    assert below.violates(0.4) and not below.violates(0.6)
+    with pytest.raises(ValueError):
+        SLO("x", 1.0, "sideways")
+    with pytest.raises(ValueError):
+        SLO("x", 1.0, burn_threshold=0.0)
+
+
+# -- time-series store --------------------------------------------------------
+
+
+def test_store_window_latest_and_bound():
+    store = TimeSeriesStore(maxlen=4)
+    for ts in range(6):
+        store.add("s", float(ts), float(ts * 10))
+    assert store.names() == ["s"]
+    assert store.latest("s") == (5.0, 50.0)
+    # bounded: the first two points fell off
+    assert store.window("s", 0.0) == [(2.0, 20.0), (3.0, 30.0),
+                                      (4.0, 40.0), (5.0, 50.0)]
+    assert store.window("s", 3.0, 4.0) == [(3.0, 30.0), (4.0, 40.0)]
+    assert store.window("missing", 0.0) == []
+    assert store.latest("missing") is None
+
+
+def test_store_burn_fraction():
+    store = TimeSeriesStore()
+    slo = SLO("depth", 5.0, "above")
+    assert store.burn_fraction(slo, 0.0, 10.0) is None   # no data
+    for ts, v in ((1.0, 9.0), (2.0, 1.0), (3.0, 9.0), (4.0, 9.0)):
+        store.add("depth", ts, v)
+    assert store.burn_fraction(slo, 0.0, 10.0) == pytest.approx(0.75)
+    assert store.burn_fraction(slo, 2.0, 2.5) == pytest.approx(0.0)
+
+
+# -- multi-window burn-rate policy -------------------------------------------
+
+
+def test_policy_raise_needs_both_windows():
+    store = TimeSeriesStore()
+    slo = SLO("depth", 5.0, "above")
+    policy = SLOPolicy((slo,), store, fast_window=5.0, slow_window=60.0)
+    # a long healthy history, then a short burst: the fast window burns
+    # but the slow window does not — no page for a blip
+    for ts in range(0, 56):
+        store.add("depth", float(ts), 1.0)
+    for ts in (56.0, 57.0, 58.0, 59.0, 60.0):
+        store.add("depth", ts, 9.0)
+    policy.evaluate(60.0)
+    assert policy.active() == []
+    # sustained burn: violations now dominate both windows
+    for ts in range(61, 130):
+        store.add("depth", float(ts), 9.0)
+    policy.evaluate(129.0)
+    active = policy.active()
+    assert [a["alert"] for a in active] == ["depth>5"]
+    assert active[0]["raised_ts"] == 129.0
+    assert active[0]["cleared_ts"] is None
+
+
+def test_policy_clear_and_history():
+    store = TimeSeriesStore()
+    slo = SLO("depth", 5.0, "above")
+    policy = SLOPolicy((slo,), store, fast_window=5.0, slow_window=60.0)
+    for ts in (1.0, 2.0, 3.0):
+        store.add("depth", ts, 9.0)
+    policy.evaluate(3.0)
+    assert policy.active()
+    # empty fast window: hold state rather than flap
+    policy.evaluate(50.0)
+    assert policy.active()
+    # recovery fills the fast window with good samples
+    for ts in (51.0, 52.0, 53.0):
+        store.add("depth", ts, 1.0)
+    policy.evaluate(53.0)
+    assert policy.active() == []
+    (rec,) = policy.history()
+    assert rec["raised_ts"] == 3.0
+    assert rec["cleared_ts"] == 53.0
+
+
+def test_policy_emits_alert_events_through_bus():
+    bus, mon = _virtual_monitor()
+    bus.emit("node_state_change", ts=1.0, node=0, state="down",
+             resp_ema=0.1, consecutive_failures=3)
+    raised = bus.events("alert_raised")
+    assert len(raised) == 1
+    assert raised[0].fields["sli"] == "nodes_down"
+    assert raised[0].ts == 1.0                  # virtual time
+    # recovery: two healthy samples push the fast burn under threshold
+    bus.emit("node_state_change", ts=2.0, node=0, state="healthy",
+             resp_ema=0.001, consecutive_failures=0)
+    bus.emit("node_state_change", ts=7.0, node=0, state="healthy",
+             resp_ema=0.001, consecutive_failures=0)
+    assert len(bus.events("alert_cleared")) == 1
+    assert mon.policy.active() == []
+    snap = bus.metrics.snapshot()["counters"]
+    assert snap["alerts_raised"] == 1.0
+    assert snap["alerts_cleared"] == 1.0
+    mon.close()
+
+
+def test_latency_slo_option_adds_slo():
+    bus, mon = _virtual_monitor(latency_slo_seconds=0.25)
+    keys = {s.key for s in mon.policy.slos}
+    assert {s.key for s in DEFAULT_SLOS} <= keys
+    assert "job_latency_p95>0.25" in keys
+    mon.close()
+
+
+# -- SLI derivation -----------------------------------------------------------
+
+
+def test_slis_from_event_stream():
+    bus, mon = _virtual_monitor()
+    bus.emit("task_settled", ts=1.0, task_id=0, worker=0, depth=3,
+             fetch_seconds=0.01, exec_seconds=0.02)
+    bus.emit("wave_dispatched", ts=1.5, wave_size=8, nbytes=1.0,
+             task_ids=(0,), seconds=0.01)
+    bus.emit("cache_hit", ts=1.6, sample_id=0)
+    bus.emit("cache_miss", ts=1.7, sample_id=1)
+    bus.emit("ci_snapshot", ts=1.8, value=0.5, ci_low=0.4, ci_high=0.6,
+             half_width=0.1, tasks_in=4, confidence=0.95)
+    bus.emit("job_done", ts=2.0, makespan=0.5, tasks_executed=1)
+    slis = mon.slis()
+    assert slis["queue_depth"] == 3.0
+    assert slis["wave_occupancy"] == pytest.approx(0.5)    # 8 of 16
+    assert slis["cache_hit_ratio"] == pytest.approx(0.5)
+    assert slis["ci_half_width"] == pytest.approx(0.1)
+    assert slis["job_latency_p50"] is not None
+    assert slis["job_latency_p95"] >= slis["job_latency_p50"]
+    mon.close()
+
+
+# -- critical path ------------------------------------------------------------
+
+
+def test_critical_path_partitions_execute_window():
+    bus, mon = _virtual_monitor()
+    bus.emit("task_claimed", ts=0.7, task_ids=(0,), worker=0)
+    bus.emit("task_settled", ts=2.0, task_id=0, worker=0, depth=1,
+             fetch_seconds=0.3, exec_seconds=0.5)
+    bus.emit("task_claimed", ts=2.1, task_ids=(1,), worker=1)
+    bus.emit("task_settled", ts=4.0, task_id=1, worker=1, depth=0,
+             fetch_seconds=0.4, exec_seconds=1.0)
+    bus.emit("job_done", ts=4.1, makespan=4.1, tasks_executed=2,
+             t_execute=0.0, startup_seconds=0.5, reduce_seconds=0.1)
+    (rec,) = mon.critical_path().values()
+    ph = rec["phases"]
+    # hand-derived: t1's chain charges exec 1.0 / fetch 0.4 / queue 0.5,
+    # the t1→t0 gap charges 0.1, t0's chain charges 0.5/0.3/0.5, and the
+    # 0.7 s head splits into 0.5 startup + 0.2 queue
+    assert ph["exec"] == pytest.approx(1.5)
+    assert ph["fetch"] == pytest.approx(0.7)
+    assert ph["queue"] == pytest.approx(1.3)
+    assert ph["startup"] == pytest.approx(0.5)
+    assert ph["reduce"] == pytest.approx(0.1)
+    assert rec["phase_sum"] == pytest.approx(rec["makespan"])
+    assert [link["task_id"] for link in rec["path"]] == [0, 1]
+    assert rec["tasks_settled"] == 2
+    # stragglers ranked by fetch+exec
+    assert rec["stragglers"][0]["task_id"] == 1
+    mon.close()
+
+
+def test_critical_path_clamps_settle_before_claim():
+    bus, mon = _virtual_monitor()
+    # claim stamped AFTER the settle (clock skew between emit sites):
+    # phases must clamp, never go negative
+    bus.emit("task_claimed", ts=5.0, task_ids=(0,), worker=0)
+    bus.emit("task_settled", ts=4.0, task_id=0, worker=0, depth=0,
+             fetch_seconds=2.0, exec_seconds=3.0)
+    bus.emit("job_done", ts=4.1, makespan=4.1, tasks_executed=1,
+             t_execute=0.0, startup_seconds=0.0, reduce_seconds=0.0)
+    (rec,) = mon.critical_path().values()
+    assert all(v >= 0.0 for v in rec["phases"].values())
+    assert rec["phase_sum"] == pytest.approx(4.0)   # the [0, settle] window
+    mon.close()
+
+
+def test_critical_path_simulated_backend_reconstructs_makespan():
+    samples, months = _dataset()
+    p = Platform(_spec(backend="simulated", telemetry=True, monitor=True))
+    p.run(samples, months, WL)
+    (rec,) = p.monitor_snapshot()["critical_path"].values()
+    assert rec["makespan"] > 0
+    assert rec["phase_sum"] == pytest.approx(rec["makespan"], rel=0.05)
+    mon_phases = rec["phases"]
+    assert set(mon_phases) == {"startup", "queue", "fetch", "exec",
+                               "reduce"}
+
+
+# -- diagnosis rules ----------------------------------------------------------
+
+
+def test_diagnose_clean_monitor_is_empty():
+    bus, mon = _virtual_monitor()
+    bus.emit("task_claimed", ts=0.1, task_ids=(0,), worker=0)
+    bus.emit("task_settled", ts=0.2, task_id=0, worker=0, depth=0,
+             fetch_seconds=0.01, exec_seconds=0.01)
+    bus.emit("job_done", ts=0.3, makespan=0.3, tasks_executed=1)
+    assert mon.diagnose() == []
+    mon.close()
+
+
+def test_diagnose_node_states_and_ranking():
+    bus, mon = _virtual_monitor()
+    bus.emit("node_state_change", ts=1.0, node=2, state="down",
+             resp_ema=0.1, consecutive_failures=3)
+    bus.emit("node_state_change", ts=1.1, node=0, state="degraded",
+             resp_ema=0.05, consecutive_failures=0)
+    bus.emit("worker_crash", ts=1.2, worker=1)
+    bus.emit("lease_reclaimed", ts=1.3, n=6, task_ids=(1, 2, 3, 4, 5, 6))
+    findings = mon.diagnose()
+    kinds = [f["kind"] for f in findings]
+    # critical first, then high, then warning
+    assert kinds == ["degraded_node", "degraded_node", "worker_churn",
+                     "lease_reclaim_storm"]
+    assert findings[0]["severity"] == "critical"
+    assert findings[0]["node"] == 2 and findings[0]["state"] == "down"
+    assert findings[1]["node"] == 0 and findings[1]["state"] == "degraded"
+    assert findings[2]["worker"] == 1
+    assert findings[3]["evidence"]["leases_reclaimed"] == 6
+    mon.close()
+
+
+def test_diagnose_slow_node_fallback():
+    bus, mon = _virtual_monitor()
+    # node 0 serves 10x slower than peers but the store never flagged it
+    for i in range(3):
+        bus.emit("fetch_done", ts=0.1 * i, sample_id=i, node=0, took=0.01)
+        bus.emit("fetch_done", ts=0.1 * i, sample_id=i, node=1, took=0.001)
+        bus.emit("fetch_done", ts=0.1 * i, sample_id=i, node=2, took=0.001)
+    (finding,) = mon.diagnose()
+    assert finding["kind"] == "degraded_node"
+    assert finding["node"] == 0 and finding["state"] == "slow"
+    assert finding["evidence"]["samples"] == 3
+    mon.close()
+
+
+def test_diagnose_slow_node_needs_min_samples_and_excess():
+    bus, mon = _virtual_monitor()
+    # one sample only (below min_samples), and a microsecond-scale gap
+    # (below min_excess) on the other node — neither may fire
+    bus.emit("fetch_done", ts=0.1, sample_id=0, node=0, took=0.01)
+    bus.emit("fetch_done", ts=0.2, sample_id=1, node=1, took=1e-6)
+    bus.emit("fetch_done", ts=0.3, sample_id=2, node=1, took=1e-6)
+    bus.emit("fetch_done", ts=0.4, sample_id=3, node=2, took=4e-6)
+    bus.emit("fetch_done", ts=0.5, sample_id=4, node=2, took=4e-6)
+    findings = [f for f in mon.diagnose() if f.get("state") == "slow"]
+    assert findings == []     # node 0 undersampled, node 2's excess ~3 µs
+    mon.close()
+
+
+def test_diagnose_cache_thrash_and_shedding():
+    bus, mon = _virtual_monitor()
+    for i in range(32):
+        bus.emit("cache_miss", ts=0.01 * i, sample_id=i)
+    for i in range(16):
+        bus.emit("cache_evict", ts=0.5 + 0.01 * i, sample_id=i)
+    bus.emit("job_rejected", ts=1.0, job_id=7, tasks_executed=0,
+             reason="queue full")
+    kinds = {f["kind"] for f in mon.diagnose()}
+    assert {"cache_thrash", "admission_shedding"} <= kinds
+    mon.close()
+
+
+# -- platform integration -----------------------------------------------------
+
+
+def test_disabled_default_no_tap_no_events_bit_identical():
+    samples, months = _dataset()
+    p_off = Platform(_spec(telemetry=True))
+    r_off = p_off.run(samples, months, WL)
+    assert p_off.monitor is None
+    assert getattr(p_off.telemetry, "_taps") == ()
+    kinds = p_off.telemetry.snapshot()["events_by_kind"]
+    assert "alert_raised" not in kinds and "alert_cleared" not in kinds
+    p_on = Platform(_spec(telemetry=True, monitor=True))
+    r_on = p_on.run(samples, months, WL)
+    assert p_on.monitor is not None
+    assert _results_equal(r_off.result, r_on.result)
+    with pytest.raises(RuntimeError):
+        p_off.monitor_snapshot()
+    with pytest.raises(RuntimeError):
+        p_off.write_monitor_report("unused.html")
+
+
+def test_platform_snapshot_and_report(tmp_path):
+    samples, months = _dataset()
+    p = Platform(_spec(telemetry=True, monitor=True))
+    p.run(samples, months, WL)
+    snap = p.monitor_snapshot()
+    assert snap["findings"] == []            # clean run
+    assert snap["critical_path"]
+    assert snap["counters"]["events_seen"] > 0
+    path = str(tmp_path / "monitor.html")
+    p.write_monitor_report(path, title="unit monitor")
+    html = open(path).read()
+    assert html.lstrip().lower().startswith("<!doctype html")
+    assert "unit monitor" in html
+    assert "critical path" in html.lower()
+    assert "src=" not in html and "href=" not in html   # self-contained
+
+
+def test_service_monitor_snapshot_and_artifacts(tmp_path):
+    samples, months = _dataset()
+    spec = _spec(telemetry=True, monitor=True, n_workers=2)
+    with PlatformService(spec) as svc:
+        h = svc.register_dataset(samples, months)
+        tickets = [svc.submit(h, WL, seed=s) for s in (1, 2)]
+        for t in tickets:
+            t.result(timeout=300)
+        snap = svc.monitor_snapshot()
+        report_path = str(tmp_path / "svc_monitor.html")
+        svc.write_monitor_report(report_path)
+        alerts_path = str(tmp_path / "alerts.jsonl")
+        n_alerts = write_alerts_jsonl(svc.monitor, alerts_path)
+    assert snap["findings"] == []
+    # one critical path per submitted job
+    job_ids = {t.job_id for t in tickets}
+    assert job_ids <= set(snap["critical_path"])
+    for jid in job_ids:
+        rec = snap["critical_path"][jid]
+        assert rec["phase_sum"] > 0
+        assert rec["tasks_settled"] > 0
+    html = open(report_path).read()
+    assert "none — clean run" in html
+    assert n_alerts == len(snap["alerts"]["history"])
+
+
+def test_service_monitor_disabled_raises():
+    samples, months = _dataset()
+    with PlatformService(_spec(telemetry=True)) as svc:
+        assert svc.monitor is None
+        with pytest.raises(RuntimeError):
+            svc.monitor_snapshot()
+        with pytest.raises(RuntimeError):
+            svc.write_monitor_report("unused.html")
+
+
+def test_render_report_with_alerts_and_faults():
+    bus, mon = _virtual_monitor()
+    bus.emit("node_state_change", ts=1.0, node=1, state="down",
+             resp_ema=0.2, consecutive_failures=3)
+    bus.emit("task_claimed", ts=1.1, task_ids=(0,), worker=0)
+    bus.emit("task_settled", ts=1.5, task_id=0, worker=0, depth=0,
+             fetch_seconds=0.1, exec_seconds=0.2)
+    bus.emit("job_done", ts=1.6, makespan=1.6, tasks_executed=1,
+             t_execute=0.0, startup_seconds=0.0, reduce_seconds=0.0)
+    html = render_monitor_report(mon, title="alerting run")
+    assert "alerting run" in html
+    assert "nodes_down" in html
+    assert "DOWN" in html                     # the finding summary
+    mon.close()
+
+
+def test_monitor_close_detaches_tap():
+    bus, mon = _virtual_monitor()
+    bus.emit("worker_crash", ts=0.5, worker=0)
+    assert mon.diagnose()
+    mon.close()
+    mon.close()                               # idempotent
+    assert getattr(bus, "_taps") == ()
+    before = mon.snapshot()["counters"]["events_seen"]
+    bus.emit("worker_crash", ts=0.6, worker=1)
+    assert mon.snapshot()["counters"]["events_seen"] == before

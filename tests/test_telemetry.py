@@ -12,6 +12,7 @@ import pytest
 from repro.core import scheduler as sch
 from repro.platform import (
     EVENT_KINDS,
+    Event,
     MetricsRegistry,
     MomentsSpec,
     Platform,
@@ -90,6 +91,45 @@ def test_null_bus_is_noop_sink():
 
 
 # -- metrics registry ---------------------------------------------------------
+
+
+def test_quantile_exact_on_bucket_aligned_uniform():
+    # values 1..100 over decade buckets: every bucket holds exactly 10,
+    # so the interpolated estimate lands on the exact percentile
+    m = MetricsRegistry()
+    buckets = tuple(float(b) for b in range(10, 101, 10))
+    for v in range(1, 101):
+        m.observe("u", float(v), buckets=buckets)
+    for q, exact in ((0.1, 10.0), (0.5, 50.0), (0.9, 90.0),
+                     (0.95, 95.0), (0.99, 99.0), (1.0, 100.0)):
+        assert m.quantile("u", q) == pytest.approx(exact)
+
+
+def test_quantile_interpolates_within_bucket_width():
+    # a known bimodal distribution: the estimate may only be off by the
+    # interpolation error inside one bucket, never more
+    m = MetricsRegistry()
+    values = [0.5] * 50 + [5.0] * 50
+    for v in values:
+        m.observe("b", v, buckets=(1.0, 10.0))
+    assert m.quantile("b", 0.25) == pytest.approx(0.5)
+    exact_p75 = float(np.percentile(values, 75))
+    est = m.quantile("b", 0.75)
+    assert abs(est - exact_p75) <= 9.0            # ≤ one bucket width
+    assert 1.0 <= est <= 10.0                     # inside the right bucket
+
+
+def test_quantile_overflow_clamps_missing_none_bad_q_raises():
+    m = MetricsRegistry()
+    m.observe("h", 999.0, buckets=(1.0, 10.0))
+    # overflow bucket clamps to the last finite bound — the estimator
+    # never invents a value beyond the scale
+    assert m.quantile("h", 0.99) == 10.0
+    assert m.quantile("nope", 0.5) is None
+    with pytest.raises(ValueError):
+        m.quantile("h", 1.5)
+    with pytest.raises(ValueError):
+        m.quantile("h", -0.1)
 
 
 def test_metrics_registry_counters_gauges_histograms():
@@ -348,3 +388,123 @@ def test_render_report_smoke():
     assert "unit smoke" in html
     assert "task_settled" in html
     json.dumps(html)                    # plain text, no stray bytes
+
+
+def test_render_report_histogram_quantile_table():
+    # the histograms section is a quantile summary (p50/p90/p95/p99),
+    # not raw bucket dumps
+    bus = TelemetryBus(TelemetryConfig(enabled=True))
+    for v in (0.001, 0.002, 0.01, 0.05, 0.2):
+        bus.metrics.observe("exec_seconds", v)
+    html = render_report(bus, title="quantiles")
+    assert "Histogram quantiles" in html
+    for col in ("p50", "p90", "p95", "p99"):
+        assert col in html
+
+
+# -- build_trace edge cases ---------------------------------------------------
+
+
+def _xspans(trace, cat=None):
+    return [e for e in trace if e["ph"] == "X"
+            and (cat is None or e.get("cat") == cat)]
+
+
+def test_build_trace_zero_duration_spans():
+    events = [
+        Event(1, 1.0, "task_claimed", {"task_ids": (0,), "worker": 0}),
+        Event(2, 1.0, "task_settled",
+              {"task_id": 0, "worker": 0, "depth": 0,
+               "fetch_seconds": 0.0, "exec_seconds": 0.0}),
+    ]
+    trace = build_trace(events)["traceEvents"]
+    spans = _xspans(trace)
+    assert spans                               # queue + task + exec
+    for e in spans:
+        assert e["dur"] == 0.0
+        assert e["ts"] == pytest.approx(1.0 * 1e6)
+    # a zero fetch_seconds settle emits no fetch span at all
+    assert _xspans(trace, "fetch") == []
+
+
+def test_build_trace_clamps_settle_before_claim():
+    # clock skew between emit sites: the settle is stamped BEFORE its
+    # claim, and the measured phases are longer than the window — every
+    # span must clamp monotone against the claim, never go negative
+    claim_us = 5.0 * 1e6
+    events = [
+        Event(1, 5.0, "task_claimed", {"task_ids": (0,), "worker": 0}),
+        Event(2, 4.0, "task_settled",
+              {"task_id": 0, "worker": 0, "depth": 0,
+               "fetch_seconds": 2.0, "exec_seconds": 3.0}),
+    ]
+    trace = build_trace(events)["traceEvents"]
+    for e in _xspans(trace):
+        assert e["dur"] >= 0.0
+    (queue,) = _xspans(trace, "queue")
+    assert queue["ts"] == pytest.approx(claim_us)
+    assert queue["dur"] == 0.0
+    (fetch,) = _xspans(trace, "fetch")
+    (exc,) = _xspans(trace, "exec")
+    assert fetch["ts"] >= claim_us             # clamped to the claim
+    assert exc["ts"] >= fetch["ts"]            # phases stay ordered
+    assert exc["dur"] == 0.0
+
+
+def test_build_trace_fused_wave_fans_out_per_job():
+    # one fused wave over three jobs: job_ids aligned with task_ids, so
+    # each member settles under its own job name and binds the SAME flow
+    events = [
+        Event(1, 1.0, "wave_dispatched",
+              {"task_ids": (0, 1, 2), "job_ids": (7, 8, 9),
+               "wave_size": 3, "nbytes": 3.0, "seconds": 0.25}),
+        Event(2, 2.0, "task_settled",
+              {"job_id": 7, "task_id": 0, "worker": 0, "depth": 2,
+               "fetch_seconds": 0.0, "exec_seconds": 0.5}),
+        Event(3, 2.5, "task_settled",
+              {"job_id": 8, "task_id": 1, "worker": 1, "depth": 1,
+               "fetch_seconds": 0.0, "exec_seconds": 0.5}),
+        Event(4, 3.0, "task_settled",
+              {"job_id": 9, "task_id": 2, "worker": 0, "depth": 0,
+               "fetch_seconds": 0.0, "exec_seconds": 0.5}),
+    ]
+    trace = build_trace(events)["traceEvents"]
+    (start,) = [e for e in trace if e["ph"] == "s"]
+    finishes = [e for e in trace if e["ph"] == "f"]
+    assert len(finishes) == 3
+    assert all(e["id"] == start["id"] for e in finishes)
+    names = {e["name"] for e in _xspans(trace, "exec")}
+    assert names == {"j7/t0:exec", "j8/t1:exec", "j9/t2:exec"}
+
+
+# -- sampler final flush ------------------------------------------------------
+
+
+def test_sampler_stop_flushes_final_row_for_subtick_job():
+    # a job shorter than one sample_every tick must still contribute at
+    # least one time-series row: stop() flushes a final sample_once()
+    bus = TelemetryBus(TelemetryConfig(enabled=True, sample_every=30.0))
+    s = TelemetrySampler(bus)
+    s.add_provider("svc", lambda: {"depth": 2.0})
+    s.start()
+    s.stop()                     # immediately: no tick ever fired
+    rows = bus.samples()
+    assert len(rows) == 1
+    assert rows[0]["svc.depth"] == 2.0
+    s.stop()                     # idempotent: no second row
+    assert len(bus.samples()) == 1
+
+
+# -- DESIGN.md §13.6 taxonomy table stays in sync -----------------------------
+
+
+def test_event_kinds_table_matches_design_doc():
+    import re
+    path = os.path.join(os.path.dirname(__file__), "..", "DESIGN.md")
+    with open(path) as fh:
+        doc = fh.read()
+    section = doc.split("### §13.6 EVENT_KINDS reference", 1)[1]
+    section = section.split("\n## ", 1)[0]
+    documented = set(re.findall(r"^\| `([a-z_]+)` \|", section,
+                                flags=re.MULTILINE))
+    assert documented == set(EVENT_KINDS)
